@@ -1,0 +1,39 @@
+"""Fig. 4b: scaling the number of workers K -- simulated time to a fixed gap
+for ACPD (B=K/2) vs CoCoA+, K in {2, 4, 8}."""
+
+from __future__ import annotations
+
+from benchmarks.common import cluster, dump, emit, timed, rcv1_like
+from repro.core import baselines
+from repro.core.acpd import run_method
+
+TARGET = 1e-3
+
+
+def main() -> None:
+    # Higher d than the other benches: Fig. 4b's regime is communication-bound
+    # (the paper's point is that CoCoA+ stops scaling once O(d) messages
+    # dominate); at small d the simulated network is too cheap to matter.
+    d = 8192
+    results = {}
+    for K in (2, 4, 8):
+        prob = rcv1_like(K=K, d=d, n_per_worker=128, seed=7 + K)
+        cl = cluster(K, sigma=1.0)
+        acpd = baselines.acpd(K, d, B=max(1, K // 2), T=10, rho_d=128,
+                              gamma=0.5, H=256)
+        coco = baselines.cocoa_plus(K, H=256)
+        res_a, us_a = timed(run_method, prob, acpd, cl, num_outer=8,
+                            eval_every=2, seed=0)
+        res_c, us_c = timed(run_method, prob, coco, cl, num_outer=60,
+                            eval_every=2, seed=0)
+        t_a, t_c = res_a.time_to_gap(TARGET), res_c.time_to_gap(TARGET)
+        emit(f"fig4b/K{K}/acpd_time", us_a, None if t_a is None else round(t_a, 4))
+        emit(f"fig4b/K{K}/cocoa+_time", us_c, None if t_c is None else round(t_c, 4))
+        if t_a and t_c:
+            emit(f"fig4b/K{K}/speedup", 0.0, round(t_c / t_a, 2))
+        results[K] = {"acpd": t_a, "cocoa+": t_c}
+    dump("fig4b_scaling", results)
+
+
+if __name__ == "__main__":
+    main()

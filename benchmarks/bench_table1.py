@@ -1,0 +1,49 @@
+"""Table I: per-round communication cost -- O(d) dense vs O(rho d) ACPD.
+
+Measures actual on-wire bytes per communication round for each method on the
+RCV1-like problem (and at RCV1's real dimensionality for the static part),
+plus the wall time of the message filter itself.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import cluster, dump, emit, rcv1_like, timed
+from repro.core import baselines
+from repro.core.acpd import run_method
+from repro.core.filter import dense_bytes, message_bytes, num_kept
+from repro.kernels import ops
+
+
+def main() -> None:
+    K, d = 4, 2048
+    prob = rcv1_like(K=K, d=d)
+    rows = {}
+    for preset, outer in ((baselines.cocoa_plus(K, H=256), 20),
+                          (baselines.acpd(K, d, rho_d=64, H=256), 2),
+                          (baselines.acpd_dense(K, H=256), 2)):
+        res, us = timed(run_method, prob, preset, cluster(K),
+                        num_outer=outer, eval_every=5, seed=0)
+        rounds = res.records[-1].iteration
+        per_round = (res.records[-1].bytes_up + res.records[-1].bytes_down) / rounds
+        rows[preset.name] = per_round
+        emit(f"table1/bytes_per_round/{preset.name}", us / rounds, int(per_round))
+
+    # Static accounting at the paper's real dataset sizes (Table II).
+    for name, dd in (("RCV1", 47_236), ("URL", 3_231_961), ("KDD", 29_890_095)):
+        ratio = dense_bytes(dd) / message_bytes(num_kept(dd, 1000 / dd))
+        emit(f"table1/static_ratio/{name}", 0.0, round(ratio, 1))
+
+    # The filter hot-spot itself (Pallas kernel, interpret mode on CPU).
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(d).astype(np.float32))
+    _, us = timed(lambda: jax.block_until_ready(ops.topk_filter(x, 64)),
+                  repeats=3)
+    emit("table1/topk_filter_us", us, 64)
+    dump("table1", rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Shared benchmark plumbing: the RCV1-like problem, timing, CSV emission.
+
+Every benchmark prints ``name,us_per_call,derived`` rows (one per measured
+configuration) so ``python -m benchmarks.run`` output is machine-readable;
+``derived`` carries the benchmark's headline metric (speedup, bytes ratio,
+rounds-to-gap, ...). Figures' raw curves are also dumped as JSON under
+experiments/bench/ for EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+from typing import Callable
+
+from repro.core.simulate import ClusterModel
+from repro.data.synthetic import LinearDatasetSpec, make_linear_problem
+
+OUT_DIR = pathlib.Path(__file__).resolve().parent.parent / "experiments" / "bench"
+
+
+def emit(name: str, us_per_call: float, derived) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def dump(name: str, payload) -> None:
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    (OUT_DIR / f"{name}.json").write_text(json.dumps(payload, indent=1))
+
+
+def rcv1_like(K: int = 4, seed: int = 7, d: int = 2048, n_per_worker: int = 192):
+    """Scaled-down stand-in for the paper's RCV1 split (no network access)."""
+    spec = LinearDatasetSpec(num_workers=K, n_per_worker=n_per_worker, d=d,
+                             nnz_per_row=24, seed=seed)
+    return make_linear_problem(spec, lam=1e-3, loss="ridge")
+
+
+def cluster(K: int, sigma: float = 1.0, jitter: float = 0.0) -> ClusterModel:
+    return ClusterModel(num_workers=K, straggler_sigma=sigma, jitter=jitter)
+
+
+def timed(fn: Callable, *args, repeats: int = 1, **kw):
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeats
+    return out, dt * 1e6  # us

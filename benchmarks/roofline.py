@@ -1,0 +1,89 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS §Dry-run/§Roofline).
+
+Reads experiments/dryrun/*.json, prints the per-(arch x shape x mesh) terms,
+and writes experiments/roofline_table.md for inclusion in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+from benchmarks.common import emit
+
+DRYRUN = pathlib.Path(__file__).resolve().parent.parent / "experiments" / "dryrun"
+OUT_MD = DRYRUN.parent / "roofline_table.md"
+
+_SHAPE_ORDER = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+
+
+def load_records(tag: str = "", exchange: str = "plain") -> list[dict]:
+    recs = []
+    suffix = f"-{tag}" if tag else ""
+    for fn in sorted(DRYRUN.glob(f"*__{exchange}{suffix}.json")):
+        recs.append(json.loads(fn.read_text()))
+    recs.sort(key=lambda r: (r["arch"], _SHAPE_ORDER.get(r["shape"], 9),
+                             r["mesh"]))
+    return recs
+
+
+def fmt_row(r: dict) -> str:
+    if r["status"] != "ok":
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | skip | "
+                f"{r.get('reason', r.get('error', ''))[:54]} | | | | | |")
+    rf = r["roofline"]
+    mem = rf["memory_stats"]
+    fp = mem.get("footprint_adjusted_bytes", mem.get("footprint_bytes", 0)) / 2**30
+    ur = rf["useful_ratio"]
+    dom = rf["dominant"]
+    return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok "
+            f"| {fp:.2f} GiB | {rf['compute_s']*1e3:.2f} | "
+            f"{rf['memory_s']*1e3:.2f} | {rf['collective_s']*1e3:.2f} | "
+            f"**{dom}** | {ur:.3f} |" if ur is not None else
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | {fp:.2f} GiB | "
+            f"{rf['compute_s']*1e3:.2f} | {rf['memory_s']*1e3:.2f} | "
+            f"{rf['collective_s']*1e3:.2f} | **{dom}** | - |")
+
+
+def main() -> None:
+    recs = load_records()
+    if not recs:
+        emit("roofline/no_artifacts", 0.0, "run repro.launch.dryrun first")
+        return
+    lines = [
+        "| arch | shape | mesh | status | mem/dev | compute ms | memory ms | "
+        "collective ms | dominant | useful ratio |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    n_ok = n_skip = 0
+    worst = None
+    most_coll = None
+    for r in recs:
+        lines.append(fmt_row(r))
+        if r["status"] == "ok":
+            n_ok += 1
+            rf = r["roofline"]
+            terms = {"compute": rf["compute_s"], "memory": rf["memory_s"],
+                     "collective": rf["collective_s"]}
+            total = sum(terms.values())
+            frac = rf["compute_s"] / total if total else 0
+            key = (r["arch"], r["shape"], r["mesh"])
+            if worst is None or frac < worst[1]:
+                worst = (key, frac)
+            cf = rf["collective_s"] / total if total else 0
+            if most_coll is None or cf > most_coll[1]:
+                most_coll = (key, cf)
+        else:
+            n_skip += 1
+    OUT_MD.write_text("\n".join(lines) + "\n")
+    emit("roofline/pairs_ok", 0.0, n_ok)
+    emit("roofline/pairs_skipped", 0.0, n_skip)
+    emit("roofline/worst_compute_fraction", 0.0,
+         f"{worst[0]}:{worst[1]:.4f}" if worst else None)
+    emit("roofline/most_collective_bound", 0.0,
+         f"{most_coll[0]}:{most_coll[1]:.4f}" if most_coll else None)
+    emit("roofline/table_md", 0.0, str(OUT_MD))
+
+
+if __name__ == "__main__":
+    main()

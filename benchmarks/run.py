@@ -1,0 +1,26 @@
+"""Benchmark driver: one module per paper table/figure + the roofline reader.
+
+Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/common.py).
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (bench_fig3_convergence, bench_fig4a_rho,
+                            bench_fig4b_scaling, bench_fig5_realenv,
+                            bench_table1, roofline)
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for mod in (bench_table1, bench_fig3_convergence, bench_fig4a_rho,
+                bench_fig4b_scaling, bench_fig5_realenv, roofline):
+        mod.main()
+    print(f"# all benchmarks done in {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,53 @@
+"""Serving demo: batched prefill + decode across three architecture families,
+showing the cache variety (full KV, ring-buffer window, O(1) SSM state).
+
+Run:  PYTHONPATH=src python examples/serve_decode.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.synthetic import make_token_dataset
+from repro.models import decode_step, model_spec, prefill
+from repro.models.param import tree_materialize
+
+
+def demo(arch: str, batch=2, prompt_len=48, gen=8):
+    cfg = get_config(arch).reduced()
+    params = tree_materialize(model_spec(cfg), jax.random.key(0))
+    stream = make_token_dataset(batch * prompt_len, cfg.vocab_size, 1)
+    prompts = jnp.asarray(stream.reshape(batch, prompt_len))
+    t0 = time.time()
+    logits, caches, plen = prefill(params, {"tokens": prompts}, cfg,
+                                   max_seq=prompt_len + gen)
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    toks = [tok]
+    step = jax.jit(lambda p, t, c, n: decode_step(p, t, c, n, cfg))
+    for i in range(gen - 1):
+        logits, caches = step(params, tok, caches, jnp.int32(plen + 1 + i))
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        toks.append(tok)
+    dt = time.time() - t0
+    cache_mb = sum(np.asarray(x).nbytes for x in jax.tree.leaves(caches)) / 1e6
+    kinds = {l.kind for l in cfg.layout}
+    wins = {l.window for l in cfg.layout if l.kind == "attn"}
+    print(f"{arch:22s} families={sorted(kinds)} windows={sorted(map(str, wins)) if wins else '-'} "
+          f"cache={cache_mb:6.2f}MB  {gen} tokens in {dt:5.2f}s")
+    return np.stack([np.asarray(t) for t in toks], 1)
+
+
+def main() -> None:
+    for arch in ("qwen3-14b", "gemma3-27b", "mamba2-780m",
+                 "jamba-1.5-large-398b"):
+        demo(arch)
+    print("\nNote: gemma3's local layers keep ring buffers of `window` slots; "
+          "mamba2/jamba carry O(1) SSD state -- at 524k context this is the "
+          "difference between GB and MB of cache (see EXPERIMENTS §Dry-run).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Pytree checkpointing: npz payload + json manifest, atomic, step-indexed.
+
+No orbax in this container, so this is a small self-contained implementation:
+every leaf is saved by its tree path; restore rebuilds against a reference
+pytree (shape/dtype-checked) so sharding/placement is re-applied by the
+caller. Atomicity via write-to-tmp + rename.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import re
+import tempfile
+from typing import Any
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+_SAFE = re.compile(r"[^A-Za-z0-9_.-]+")
+
+
+def _key(path) -> str:
+    return _SAFE.sub("_", jax.tree_util.keystr(path))
+
+
+def save_checkpoint(directory: str | pathlib.Path, step: int, tree: PyTree,
+                    extra: dict | None = None) -> pathlib.Path:
+    directory = pathlib.Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    payload = {_key(p): np.asarray(v) for p, v in flat}
+    manifest = {
+        "step": int(step),
+        "keys": sorted(payload),
+        "extra": extra or {},
+    }
+    final = directory / f"ckpt_{step:08d}.npz"
+    with tempfile.NamedTemporaryFile(dir=directory, suffix=".tmp", delete=False) as f:
+        np.savez(f, **payload)
+        tmp = pathlib.Path(f.name)
+    tmp.rename(final)
+    (directory / f"ckpt_{step:08d}.json").write_text(json.dumps(manifest))
+    return final
+
+
+def latest_step(directory: str | pathlib.Path) -> int | None:
+    directory = pathlib.Path(directory)
+    steps = [int(p.stem.split("_")[1]) for p in directory.glob("ckpt_*.npz")]
+    return max(steps) if steps else None
+
+
+def load_checkpoint(directory: str | pathlib.Path, reference: PyTree,
+                    step: int | None = None) -> tuple[PyTree, dict]:
+    """Restore into the structure of ``reference``; returns (tree, extra)."""
+    directory = pathlib.Path(directory)
+    step = latest_step(directory) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints under {directory}")
+    data = np.load(directory / f"ckpt_{step:08d}.npz")
+    manifest = json.loads((directory / f"ckpt_{step:08d}.json").read_text())
+    flat, treedef = jax.tree_util.tree_flatten_with_path(reference)
+    leaves = []
+    for p, ref in flat:
+        k = _key(p)
+        if k not in data:
+            raise KeyError(f"checkpoint missing leaf {k}")
+        arr = data[k]
+        if tuple(arr.shape) != tuple(np.shape(ref)):
+            raise ValueError(f"shape mismatch for {k}: {arr.shape} vs {np.shape(ref)}")
+        leaves.append(arr.astype(np.asarray(ref).dtype) if hasattr(ref, "dtype") else arr)
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    return tree, manifest.get("extra", {})

@@ -1,0 +1,110 @@
+"""Architecture registry + assigned input shapes.
+
+``get_config(arch_id)`` returns the exact assigned configuration;
+``input_specs(cfg, shape, step)`` returns ShapeDtypeStruct stand-ins for every
+input of the corresponding step function -- weak-type-correct, shardable, and
+never allocated (the 398B configs exist only abstractly on this box).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import init_caches
+from repro.models.config import ModelConfig
+
+_MODULES = {
+    "pixtral-12b": "pixtral_12b",
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+    "jamba-1.5-large-398b": "jamba_1_5_large_398b",
+    "mamba2-780m": "mamba2_780m",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b_a22b",
+    "hubert-xlarge": "hubert_xlarge",
+    "qwen3-14b": "qwen3_14b",
+    "phi3-medium-14b": "phi3_medium_14b",
+    "gemma3-27b": "gemma3_27b",
+    "codeqwen1.5-7b": "codeqwen1_5_7b",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+    return mod.get_config()
+
+
+def shape_supported(cfg: ModelConfig, shape: InputShape) -> tuple[bool, str]:
+    """(supported, reason-if-not). Mirrors DESIGN §5's skip table."""
+    if shape.kind == "decode" and not cfg.supports_decode():
+        return False, "encoder-only: no autoregressive decode"
+    if shape.name == "long_500k" and not cfg.supports_long_decode():
+        return False, "pure full-attention stack: no sub-quadratic variant"
+    return True, ""
+
+
+def _token_batch(cfg: ModelConfig, batch: int, seq: int, with_labels: bool) -> dict:
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    if cfg.frontend == "text":
+        out = {"tokens": sds((batch, seq), i32)}
+        if with_labels:
+            out["labels"] = sds((batch, seq), i32)
+    elif cfg.frontend == "vision_stub":
+        p = min(cfg.num_patch_tokens, seq // 2)
+        out = {
+            "tokens": sds((batch, seq - p), i32),
+            "patch_embeds": sds((batch, p, cfg.d_model), cfg.cdtype),
+        }
+        if with_labels:
+            out["labels"] = sds((batch, seq - p), i32)
+    elif cfg.frontend == "audio_stub":
+        out = {"frame_embeds": sds((batch, seq, cfg.d_model), cfg.cdtype)}
+        if with_labels:
+            out["labels"] = sds((batch, seq), i32)
+    else:
+        raise ValueError(cfg.frontend)
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    """Abstract inputs for the step function selected by ``shape.kind``."""
+    ok, why = shape_supported(cfg, shape)
+    if not ok:
+        raise ValueError(f"{cfg.arch_id} x {shape.name} unsupported: {why}")
+    if shape.kind == "train":
+        return {"batch": _token_batch(cfg, shape.global_batch, shape.seq_len, True)}
+    if shape.kind == "prefill":
+        return {"batch": _token_batch(cfg, shape.global_batch, shape.seq_len, False)}
+    if shape.kind == "decode":
+        B, S = shape.global_batch, shape.seq_len
+        caches = jax.eval_shape(
+            lambda: init_caches(cfg, B, S, cfg.cdtype))
+        return {
+            "token": jax.ShapeDtypeStruct((B,), jnp.int32),
+            "caches": caches,
+            "cache_len": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+    raise ValueError(shape.kind)

@@ -1,0 +1,18 @@
+"""ACPD core: the paper's contribution as a composable JAX library.
+
+Scheduler (straggler-agnostic server), workers (bandwidth-efficient SDCA),
+message filter, baselines, the straggler-clock simulator, and the beyond-paper
+deep-net gradient exchange live here; substrates are sibling subpackages.
+"""
+
+from repro.core.objectives import (  # noqa: F401
+    Problem,
+    duality_gap,
+    dual_objective,
+    gap_certificate,
+    primal_from_dual,
+    primal_objective,
+)
+from repro.core.acpd import MethodConfig, RunResult, run_method  # noqa: F401
+from repro.core import baselines  # noqa: F401
+from repro.core import filter  # noqa: F401

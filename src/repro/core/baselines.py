@@ -1,0 +1,61 @@
+"""Named method presets: the paper's baselines and ablations (Table I, Fig. 3).
+
+* CoCoA+  (Ma et al. 2015): synchronous, "adding" aggregation -> gamma=1, sigma'=K.
+* CoCoA   (Jaggi et al. 2014): synchronous, "averaging" -> gamma=1/K, sigma'=1.
+* DisDCA  (Yang 2013, practical variant): equivalent to CoCoA+ under the
+  conditions shown in Ma et al. 2015 Sec. 4; kept as its own named config.
+* ACPD              : group-wise (B of K) + top-rho*d filter (the paper).
+* ACPD-B=K ablation : group-wise machinery but full barrier (isolates sparsity).
+* ACPD-rho=1 ablation: group-wise, dense messages (isolates straggler-agnosticism).
+"""
+
+from __future__ import annotations
+
+from repro.core.acpd import MethodConfig
+
+
+def cocoa_plus(K: int, H: int = 1000) -> MethodConfig:
+    return MethodConfig(name="CoCoA+", protocol="sync", B=K, rho=1.0, gamma=1.0,
+                        sigma_prime=float(K), H=H)
+
+
+def cocoa(K: int, H: int = 1000) -> MethodConfig:
+    return MethodConfig(name="CoCoA", protocol="sync", B=K, rho=1.0, gamma=1.0 / K,
+                        sigma_prime=1.0, H=H)
+
+
+def disdca(K: int, H: int = 1000) -> MethodConfig:
+    return MethodConfig(name="DisDCA", protocol="sync", B=K, rho=1.0, gamma=1.0,
+                        sigma_prime=float(K), H=H)
+
+
+def acpd(K: int, d: int, *, B: int | None = None, T: int = 20, rho_d: int = 1000,
+         gamma: float = 0.5, H: int = 1000) -> MethodConfig:
+    B = B if B is not None else max(1, K // 2)
+    return MethodConfig(name="ACPD", protocol="group", B=B, T=T,
+                        rho=min(1.0, rho_d / d), gamma=gamma, H=H)
+
+
+def acpd_full_barrier(K: int, d: int, *, T: int = 20, rho_d: int = 1000,
+                      gamma: float = 0.5, H: int = 1000) -> MethodConfig:
+    """Ablation B=K: keeps sparsity, removes straggler-agnosticism."""
+    return MethodConfig(name="ACPD-B=K", protocol="group", B=K, T=T,
+                        rho=min(1.0, rho_d / d), gamma=gamma, H=H)
+
+
+def acpd_dense(K: int, *, B: int | None = None, T: int = 20, gamma: float = 0.5,
+               H: int = 1000) -> MethodConfig:
+    """Ablation rho=1: keeps group-wise protocol, removes sparsity."""
+    B = B if B is not None else max(1, K // 2)
+    return MethodConfig(name="ACPD-rho=1", protocol="group", B=B, T=T,
+                        rho=1.0, gamma=gamma, H=H)
+
+
+ALL_PRESETS = {
+    "cocoa": cocoa,
+    "cocoa_plus": cocoa_plus,
+    "disdca": disdca,
+    "acpd": acpd,
+    "acpd_full_barrier": acpd_full_barrier,
+    "acpd_dense": acpd_dense,
+}

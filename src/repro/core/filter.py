@@ -1,0 +1,85 @@
+"""The paper's message filter F (Algorithm 2, lines 7-9) + residual feedback.
+
+Given the accumulated primal delta ``dw`` of a worker, keep only the top
+``ceil(rho * d)`` entries by magnitude:
+
+    c_k   = (rho d)-th largest value of |dw|
+    M_k   = |dw| >= c_k                       (line 8 -- note: ties may pass)
+    F(dw) = dw o M_k                          (sent, O(rho d) nonzeros)
+    dw   <- dw o ~M_k                         (practical residual variant, Sec. III-B2)
+
+``topk_mask`` follows the paper's threshold definition exactly (so ties can
+admit slightly more than k entries); ``topk_mask_exact`` breaks ties by index
+and returns exactly k -- the Pallas kernel implements the exact variant and the
+tests cross-check both against each other on tie-free inputs.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class FilterResult(NamedTuple):
+    sent: jax.Array  # F(dw): dw with all but the top-k entries zeroed
+    residual: jax.Array  # dw o ~M: what the worker keeps (error feedback)
+    mask: jax.Array  # M_k, boolean
+    threshold: jax.Array  # c_k
+
+
+def num_kept(d: int, rho: float) -> int:
+    """ceil(rho*d), clamped to [1, d]."""
+    return max(1, min(d, int(-(-rho * d // 1))))
+
+
+@partial(jax.jit, static_argnames=("k",))
+def topk_mask(dw: jax.Array, k: int) -> FilterResult:
+    """Paper-faithful threshold filter: M = |dw| >= c_k (ties pass)."""
+    mag = jnp.abs(dw)
+    c_k = jax.lax.top_k(mag, k)[0][-1]
+    mask = mag >= c_k
+    sent = jnp.where(mask, dw, 0.0)
+    return FilterResult(sent, dw - sent, mask, c_k)
+
+
+@partial(jax.jit, static_argnames=("k",))
+def topk_mask_exact(dw: jax.Array, k: int) -> FilterResult:
+    """Exactly-k filter (ties broken toward lower index), kernel-compatible."""
+    mag = jnp.abs(dw)
+    _, idx = jax.lax.top_k(mag, k)
+    mask = jnp.zeros(dw.shape, bool).at[idx].set(True)
+    sent = jnp.where(mask, dw, 0.0)
+    c_k = jax.lax.top_k(mag, k)[0][-1]
+    return FilterResult(sent, dw - sent, mask, c_k)
+
+
+@partial(jax.jit, static_argnames=("k",))
+def compress(dw: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
+    """On-wire form: (values, int32 indices), each of length k.
+
+    This is what actually crosses the network: 2k words instead of d.
+    """
+    _, idx = jax.lax.top_k(jnp.abs(dw), k)
+    return dw[idx], idx.astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("d",))
+def decompress(values: jax.Array, idx: jax.Array, d: int) -> jax.Array:
+    return jnp.zeros((d,), values.dtype).at[idx].add(values)
+
+
+def message_bytes(k: int, value_bytes: int = 4, index_bytes: int = 4) -> int:
+    """Bytes on the wire for one compressed message (Table I accounting)."""
+    return k * (value_bytes + index_bytes)
+
+
+def dense_bytes(d: int, value_bytes: int = 4) -> int:
+    return d * value_bytes
+
+
+@jax.jit
+def nnz(x: jax.Array) -> jax.Array:
+    return jnp.sum(x != 0)

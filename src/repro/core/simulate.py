@@ -1,0 +1,78 @@
+"""Event clock for the simulated distributed environment (Sec. V-B of the paper).
+
+The paper simulates stragglers by making worker 1 take ``sigma`` times the
+normal per-round compute time, and separately runs in a "real" cluster where
+speeds jitter randomly. We model both:
+
+* compute time of worker k per local round:  H * unit_time * sigma_k * J
+  where J ~ LogNormal(0, jitter) (jitter=0 -> deterministic, the Sec. V-B setup).
+* point-to-point message time:               latency + bytes / bandwidth
+* ring all-reduce of a d-vector over K:      2 (K-1)/K * d*4 / bandwidth + 2 ceil(log2 K) * latency
+  (used when timing the CoCoA+/CoCoA baselines, which the paper ran with MPI
+  ``allreduce``).
+
+All times are in arbitrary "unit" seconds; only ratios matter for the paper's
+claims (speedup of ACPD over CoCoA+ at a given duality gap).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterModel:
+    """Timing model for K workers + a server."""
+
+    num_workers: int
+    unit_time: float = 1e-5  # seconds per local SDCA iteration on a normal worker
+    straggler_sigma: float = 1.0  # worker 0 is sigma x slower (paper's sigma)
+    straggler_workers: tuple[int, ...] = (0,)
+    jitter: float = 0.0  # lognormal sd of multiplicative compute noise
+    latency: float = 1e-3  # per-message latency (seconds)
+    bandwidth: float = 1.25e8  # bytes/sec (~1 Gb Ethernet, t2.medium-ish)
+
+    def sigmas(self) -> np.ndarray:
+        s = np.ones(self.num_workers)
+        for k in self.straggler_workers:
+            if 0 <= k < self.num_workers:
+                s[k] = self.straggler_sigma
+        return s
+
+    def compute_time(self, k: int, H: int, rng: np.random.Generator) -> float:
+        base = H * self.unit_time * self.sigmas()[k]
+        if self.jitter > 0.0:
+            base *= float(rng.lognormal(0.0, self.jitter))
+        return base
+
+    def p2p_time(self, num_bytes: int) -> float:
+        return self.latency + num_bytes / self.bandwidth
+
+    def allreduce_time(self, d: int, value_bytes: int = 4) -> float:
+        K = self.num_workers
+        if K <= 1:
+            return 0.0
+        ring = 2.0 * (K - 1) / K * d * value_bytes / self.bandwidth
+        return ring + 2.0 * math.ceil(math.log2(K)) * self.latency
+
+
+@dataclasses.dataclass
+class EventClock:
+    """Tracks simulated wall-clock per worker and at the server."""
+
+    num_workers: int
+    now: float = 0.0
+
+    def __post_init__(self) -> None:
+        self.worker_free_at = np.zeros(self.num_workers)
+
+    def start_compute(self, k: int, start: float, duration: float) -> float:
+        finish = max(start, self.worker_free_at[k]) + duration
+        self.worker_free_at[k] = finish
+        return finish
+
+    def advance(self, t: float) -> None:
+        self.now = max(self.now, t)

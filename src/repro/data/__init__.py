@@ -1,0 +1,1 @@
+from repro.data.synthetic import make_linear_problem, make_token_dataset  # noqa: F401

@@ -1,0 +1,87 @@
+"""Sharded batch pipeline: deterministic, resumable, device-put to the mesh.
+
+The token pipeline packs a flat stream into (batch, seq) examples with
+next-token labels, places each global batch according to the step's batch
+sharding, and exposes its cursor for checkpoint/resume. For the linear-model
+(paper) side, batching is handled inside core/acpd.py (the partitions are the
+workers); this pipeline feeds the deep-net substrate.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.data.synthetic import make_token_dataset
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class TokenPipeline:
+    cfg: ModelConfig
+    batch_size: int
+    seq_len: int
+    mesh: Mesh | None = None
+    seed: int = 0
+    num_tokens: int | None = None  # synthetic stream size (default: 64 batches)
+    step: int = 0  # cursor, checkpointable
+
+    def __post_init__(self):
+        need = self.num_tokens or 64 * self.batch_size * (self.seq_len + 1)
+        self._stream = make_token_dataset(need, self.cfg.vocab_size, self.seed)
+        self._per_batch = self.batch_size * (self.seq_len + 1)
+        self._num_batches = len(self._stream) // self._per_batch
+        if self.mesh is not None:
+            daxes = tuple(a for a in ("pod", "data") if a in self.mesh.shape)
+            self._sharding = NamedSharding(self.mesh, P(daxes or None, None))
+        else:
+            self._sharding = None
+
+    def __iter__(self) -> Iterator[dict]:
+        while True:
+            yield self.next_batch()
+
+    def next_batch(self) -> dict:
+        i = self.step % self._num_batches
+        chunk = self._stream[i * self._per_batch : (i + 1) * self._per_batch]
+        arr = chunk.reshape(self.batch_size, self.seq_len + 1)
+        batch = self._make_batch(arr)
+        self.step += 1
+        if self._sharding is not None:
+            batch = {k: jax.device_put(v, self._sharding) if v.ndim == 2
+                     else v for k, v in batch.items()}
+        return batch
+
+    def _make_batch(self, arr: np.ndarray) -> dict:
+        tokens = jnp.asarray(arr[:, :-1])
+        labels = jnp.asarray(arr[:, 1:])
+        cfg = self.cfg
+        if cfg.frontend == "text":
+            return {"tokens": tokens, "labels": labels}
+        if cfg.frontend == "vision_stub":
+            p = min(cfg.num_patch_tokens, self.seq_len // 2)
+            rng = np.random.default_rng(self.seed + self.step)
+            patches = jnp.asarray(
+                rng.standard_normal((self.batch_size, p, cfg.d_model))
+                .astype(np.float32) * 0.02)
+            return {"tokens": tokens[:, : self.seq_len - p],
+                    "labels": labels[:, : self.seq_len - p],
+                    "patch_embeds": patches.astype(cfg.cdtype)}
+        if cfg.frontend == "audio_stub":
+            rng = np.random.default_rng(self.seed + self.step)
+            frames = jnp.asarray(
+                rng.standard_normal((self.batch_size, self.seq_len, cfg.d_model))
+                .astype(np.float32) * 0.02)
+            return {"frame_embeds": frames.astype(cfg.cdtype), "labels": labels}
+        raise ValueError(cfg.frontend)
+
+    def state_dict(self) -> dict:
+        return {"step": self.step, "seed": self.seed}
+
+    def load_state_dict(self, state: dict) -> None:
+        self.step = int(state["step"])

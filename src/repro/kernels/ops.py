@@ -1,0 +1,55 @@
+"""Public jit'd wrappers around the Pallas kernels with automatic fallback.
+
+On this container (CPU) the kernels execute in interpret mode; on a real TPU
+set ``REPRO_PALLAS_INTERPRET=0`` (or rely on backend autodetection) to compile
+them. The wrappers also enforce each kernel's capacity contract and fall back
+to the pure-jnp oracle when it is not met, so callers never need to care.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.sdca_inner import sdca_inner_pallas
+from repro.kernels.topk_filter import topk_filter_pallas
+
+# VMEM capacity contract for the SDCA kernel: partition + vectors in f32.
+_SDCA_VMEM_BUDGET = 4_000_000  # elements (~16 MB f32)
+
+
+def _interpret_default() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+def topk_filter(dw: jax.Array, k: int, *, use_kernel: bool = True,
+                interpret: bool | None = None):
+    """Message filter F: returns (sent, residual, mask). See Algorithm 2."""
+    if not use_kernel:
+        return ref.topk_filter_ref(dw, k)
+    interpret = _interpret_default() if interpret is None else interpret
+    return topk_filter_pallas(dw, k, interpret=interpret)
+
+
+def sdca_epoch(w_eff, alpha, X, y, norms_sq, lam, n_global, sigma_prime, idx,
+               *, loss: str = "ridge", use_kernel: bool = True,
+               interpret: bool | None = None):
+    """All-workers SDCA epoch: (dalpha (K,n_k), v (K,d)).
+
+    Kernel path requires ridge loss and the VMEM capacity contract; anything
+    else silently uses the jnp oracle (identical semantics).
+    """
+    K, n_k, d = X.shape
+    fits = (n_k * d + 2 * d + 3 * n_k) <= _SDCA_VMEM_BUDGET
+    if not use_kernel or loss != "ridge" or not fits:
+        return ref.sdca_inner_ref(w_eff, alpha, X, y, norms_sq, lam, n_global,
+                                  sigma_prime, idx)
+    interpret = _interpret_default() if interpret is None else interpret
+    return sdca_inner_pallas(w_eff, alpha, X, y, norms_sq, lam, n_global,
+                             sigma_prime, idx, interpret=interpret)

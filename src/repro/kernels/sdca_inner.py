@@ -1,0 +1,126 @@
+"""Pallas TPU kernel for the worker's SDCA inner loop (Algorithm 2, line 4).
+
+Runs H sequential ridge-SDCA coordinate steps on one worker partition with the
+whole working set resident in VMEM:
+
+    state: dalpha (n_k,), v (d,)            [kept in the loop carry]
+    step : i = idx[h]
+           z     = (w_eff + sigma' v) . x_i
+           delta = (y_i - a_i - z) / (1 + sigma' ||x_i||^2 / (lambda n))
+           dalpha[i] += delta ;  v += delta/(lambda n) * x_i
+
+The loop is *inherently sequential* (each step reads the v written by the
+previous one), so there is no MXU mapping -- this is a VPU/latency kernel. The
+TPU adaptation vs. a CPU/GPU implementation is residency: the (n_k, d) data
+tile, w_eff and the evolving v never leave VMEM during the H steps, so HBM
+traffic is one read of the partition + O(n_k + d) instead of H * O(d).
+
+Grid = workers (one program per partition, matching the paper's K workers);
+the coordinate visit order is supplied via scalar prefetch so the index stream
+is available in SMEM before the program body runs.
+
+Capacity contract: n_k * d * 4B + 2*d*4B must fit VMEM (~16 MB/core), i.e.
+n_k * d <~ 4M. ``ops.sdca_epoch`` falls back to the jnp path beyond that.
+Ridge only (the paper's experiments); other losses use the jnp path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _sdca_kernel(idx_row,  # (H,) int32 visit order for this worker (SMEM-read)
+                 w_ref,  # (1, d) VMEM
+                 alpha_ref,  # (1, n_k) VMEM
+                 x_ref,  # (1, n_k, d) VMEM
+                 y_ref,  # (1, n_k) VMEM
+                 norms_ref,  # (1, n_k) VMEM
+                 scal_ref,  # SMEM: [lam_n, sigma_prime]
+                 dalpha_ref,  # out (1, n_k)
+                 v_ref,  # out (1, d)
+                 ):
+    h_steps = idx_row.shape[0]
+    lam_n = scal_ref[0]
+    sigma_p = scal_ref[1]
+
+    w_eff = w_ref[0, :]
+    alpha = alpha_ref[0, :]
+    y = y_ref[0, :]
+    norms = norms_ref[0, :]
+
+    def body(h, carry):
+        dalpha, v = carry
+        i = idx_row[h]
+        x_i = pl.load(x_ref, (0, pl.ds(i, 1), slice(None)))[0]  # (d,)
+        a_i = alpha[i] + dalpha[i]
+        z_i = jnp.dot(w_eff, x_i) + sigma_p * jnp.dot(v, x_i)
+        q_i = sigma_p * norms[i] / lam_n
+        delta = (y[i] - a_i - z_i) / (1.0 + q_i)
+        dalpha = dalpha.at[i].add(delta)
+        v = v + (delta / lam_n) * x_i
+        return dalpha, v
+
+    dalpha0 = jnp.zeros(alpha.shape, alpha.dtype)
+    v0 = jnp.zeros(w_eff.shape, w_eff.dtype)
+    dalpha, v = jax.lax.fori_loop(0, h_steps, body, (dalpha0, v0))
+    dalpha_ref[0, :] = dalpha
+    v_ref[0, :] = v
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sdca_inner_pallas(
+    w_eff: jax.Array,  # (K, d)
+    alpha: jax.Array,  # (K, n_k)
+    X: jax.Array,  # (K, n_k, d)
+    y: jax.Array,  # (K, n_k)
+    norms_sq: jax.Array,  # (K, n_k)
+    lam: float,
+    n_global: int,
+    sigma_prime: float,
+    idx: jax.Array,  # (K, H) int32 visit order per worker
+    *,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """All-K-workers SDCA epoch; returns (dalpha (K,n_k), v (K,d))."""
+    K, n_k, d = X.shape
+    H = idx.shape[1]
+    scal = jnp.array([lam * n_global, sigma_prime], jnp.float32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(K,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda k, idx: (k, 0)),
+            pl.BlockSpec((1, n_k), lambda k, idx: (k, 0)),
+            pl.BlockSpec((1, n_k, d), lambda k, idx: (k, 0, 0)),
+            pl.BlockSpec((1, n_k), lambda k, idx: (k, 0)),
+            pl.BlockSpec((1, n_k), lambda k, idx: (k, 0)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, n_k), lambda k, idx: (k, 0)),
+            pl.BlockSpec((1, d), lambda k, idx: (k, 0)),
+        ],
+    )
+
+    def kernel(idx_ref, w_ref, alpha_ref, x3_ref, y_ref, norms_ref, scal_ref,
+               dalpha_ref, v_ref):
+        k = pl.program_id(0)
+        _sdca_kernel(idx_ref[k], w_ref, alpha_ref, x3_ref, y_ref, norms_ref,
+                     scal_ref, dalpha_ref, v_ref)
+
+    dalpha, v = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((K, n_k), X.dtype),
+            jax.ShapeDtypeStruct((K, d), X.dtype),
+        ],
+        interpret=interpret,
+    )(idx, w_eff, alpha, X, y, norms_sq, scal)
+    return dalpha, v

@@ -1,0 +1,198 @@
+"""Pallas TPU kernel for the ACPD message filter (Algorithm 2, lines 7-9).
+
+Selects the top ``k = ceil(rho d)`` entries of ``|dw|`` and splits ``dw`` into
+(sent, residual). A full sort is O(d log d) and hostile to the TPU's tiled
+memory system; instead we use the classic *histogram select*:
+
+  1. ``histogram_kernel``: one sequential-grid pass over (8,128) VMEM tiles,
+     accumulating ``counts[j] = #{ |x| >= edges[j] }`` for a geometric ladder of
+     NUM_BUCKETS edges. The grid on TPU is sequential, so the counts block can
+     be revisited and accumulated without atomics.
+  2. a tiny on-device reduction picks the bucket band [t_lo, t_hi) that brackets
+     the k-th magnitude; one refinement round re-histograms inside the band,
+     giving an effective resolution of NUM_BUCKETS^2 (~4096 edges).
+  3. ``emit_kernel``: second pass; keeps everything ``>= t_hi`` outright and
+     admits band elements in index order until the remaining quota is used,
+     carrying the running band-count in an SMEM scratch cell across the
+     sequential grid.
+
+Contract (see ops.topk_filter): exactly ``min(k, #{|x| >= t_floor})`` entries
+are kept, every kept magnitude is >= t_lo, every dropped magnitude is < t_hi,
+and ``sent + residual == dw`` *exactly* (bitwise) -- the conservation property
+that error feedback relies on. On tie-free inputs whose k-th magnitude falls
+strictly inside one refined bucket, the result equals exact top-k.
+
+The GPU analogue in gradient-compression systems samples + sorts on CUDA
+cores; the TPU adaptation replaces that with two streaming VPU passes whose
+working set is one (8,128) tile in VMEM -- HBM traffic is exactly 2 reads +
+1 write of dw, the roofline floor for this op.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NUM_BUCKETS = 64
+LANE = 128
+SUBLANE = 8
+TILE = SUBLANE * LANE  # elements per grid step
+# Dynamic range covered by the ladder, relative to max|x|. Entries smaller than
+# max|x| * FLOOR are never selected (they are numerically irrelevant to the
+# update and stay in the residual, which error feedback preserves).
+FLOOR = 2.0**-22
+
+
+def _bucket_edges(hi: jax.Array, lo: jax.Array) -> jax.Array:
+    """Geometric ladder of NUM_BUCKETS edges descending from hi to lo."""
+    hi = jnp.maximum(hi, 1e-37)
+    lo = jnp.maximum(lo, hi * 1e-37)
+    t = jnp.arange(NUM_BUCKETS, dtype=jnp.float32) / (NUM_BUCKETS - 1)
+    return jnp.exp(jnp.log(hi) * (1.0 - t) + jnp.log(lo) * t)
+
+
+def _histogram_kernel(x_ref, edges_ref, counts_ref):
+    """counts[j] += #{ |tile| >= edges[j] } ; counts block is revisited."""
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+
+    mag = jnp.abs(x_ref[...].astype(jnp.float32))  # (SUBLANE, LANE)
+    edges = edges_ref[...]  # (1, NUM_BUCKETS)
+    # (NUM_BUCKETS, SUBLANE*LANE) comparison, reduced over elements.
+    ge = mag.reshape(1, -1) >= edges.reshape(NUM_BUCKETS, 1)
+    counts_ref[...] += jnp.sum(ge, axis=1, dtype=jnp.int32).reshape(1, NUM_BUCKETS)
+
+
+def _emit_kernel(x_ref, thresh_ref, sent_ref, resid_ref, mask_ref, band_used_ref):
+    """Split tile into (sent, residual) given [t_lo, t_hi) + band quota.
+
+    thresh_ref (SMEM): [t_lo, t_hi, quota]. band_used_ref (SMEM scratch):
+    running count of admitted band elements across the sequential grid.
+    """
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        band_used_ref[0] = 0
+
+    x = x_ref[...]
+    mag = jnp.abs(x.astype(jnp.float32))
+    t_lo = thresh_ref[0]
+    t_hi = thresh_ref[1]
+    quota = thresh_ref[2].astype(jnp.int32)
+
+    strong = mag >= t_hi
+    band = (mag >= t_lo) & (mag < t_hi)
+
+    # Admit band elements in index order while quota lasts. The tile is a
+    # contiguous row-major chunk, so flattening preserves index order.
+    band_flat = band.reshape(-1)
+    prefix_excl = jnp.cumsum(band_flat.astype(jnp.int32)) - band_flat.astype(jnp.int32)
+    already = band_used_ref[0]
+    admit = band_flat & (already + prefix_excl < quota)
+    band_used_ref[0] = already + jnp.sum(band_flat.astype(jnp.int32))
+
+    keep = strong | admit.reshape(strong.shape)
+    sent_ref[...] = jnp.where(keep, x, jnp.zeros_like(x))
+    resid_ref[...] = jnp.where(keep, jnp.zeros_like(x), x)
+    mask_ref[...] = keep
+
+
+def _pad_to_tiles(x: jax.Array) -> tuple[jax.Array, int]:
+    d = x.shape[0]
+    n_tiles = -(-d // TILE)
+    pad = n_tiles * TILE - d
+    xp = jnp.pad(x, (0, pad))
+    return xp.reshape(n_tiles * SUBLANE, LANE), n_tiles
+
+
+def _histogram(x2d: jax.Array, edges: jax.Array, n_tiles: int, interpret: bool) -> jax.Array:
+    counts = pl.pallas_call(
+        _histogram_kernel,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((SUBLANE, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((1, NUM_BUCKETS), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, NUM_BUCKETS), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, NUM_BUCKETS), jnp.int32),
+        interpret=interpret,
+    )(x2d, edges.reshape(1, NUM_BUCKETS))
+    return counts[0]
+
+
+def _select_band(counts: jax.Array, edges: jax.Array, k: int) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Pick [t_lo, t_hi) bracketing the k-th magnitude from ladder counts.
+
+    counts is monotone nondecreasing along descending edges. t_lo = first edge
+    with count >= k (or the last edge if none), t_hi = previous edge
+    (or +inf if even the largest edge already admits >= k).
+    """
+    reached = counts >= k
+    j = jnp.argmax(reached)  # first True; 0 if none True (handled below)
+    any_reached = jnp.any(reached)
+    j = jnp.where(any_reached, j, NUM_BUCKETS - 1)
+    t_lo = edges[j]
+    t_hi = jnp.where(j > 0, edges[jnp.maximum(j - 1, 0)], jnp.inf)
+    count_hi = jnp.where(j > 0, counts[jnp.maximum(j - 1, 0)], 0)
+    return t_lo, t_hi, count_hi
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret", "refine"))
+def topk_filter_pallas(dw: jax.Array, k: int, *, interpret: bool = True,
+                       refine: bool = True):
+    """Kernel-backed message filter. Returns (sent, residual, mask).
+
+    ``interpret=True`` executes the kernel body in Python on CPU (this
+    container); on a real TPU pass interpret=False.
+    """
+    d = dw.shape[0]
+    x2d, n_tiles = _pad_to_tiles(dw)
+
+    mag_max = jnp.max(jnp.abs(dw)).astype(jnp.float32)
+    edges = _bucket_edges(mag_max, mag_max * FLOOR)
+    counts = _histogram(x2d, edges, n_tiles, interpret)
+    t_lo, t_hi, count_hi = _select_band(counts, edges, k)
+
+    if refine:
+        # Second round inside [t_lo, t_hi): need (k - count_hi) more entries.
+        edges2 = _bucket_edges(jnp.minimum(t_hi, mag_max), t_lo)
+        counts2 = _histogram(x2d, edges2, n_tiles, interpret)
+        # counts2 counts >= each refined edge; the elements >= t_hi are
+        # included in every refined count, so subtract count_hi implicitly by
+        # searching for (k) again on the refined ladder.
+        t_lo, t_hi, count_hi = _select_band(counts2, edges2, k)
+
+    quota = jnp.maximum(k - count_hi, 0).astype(jnp.float32)
+    thresh = jnp.stack([t_lo, jnp.where(jnp.isinf(t_hi), jnp.float32(3.4e38), t_hi), quota])
+
+    sent2d, resid2d, mask2d = pl.pallas_call(
+        _emit_kernel,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((SUBLANE, LANE), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=[
+            pl.BlockSpec((SUBLANE, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((SUBLANE, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((SUBLANE, LANE), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(x2d.shape, dw.dtype),
+            jax.ShapeDtypeStruct(x2d.shape, dw.dtype),
+            jax.ShapeDtypeStruct(x2d.shape, jnp.bool_),
+        ],
+        scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],
+        interpret=interpret,
+    )(x2d, thresh)
+
+    flat = lambda a: a.reshape(-1)[:d]
+    return flat(sent2d), flat(resid2d), flat(mask2d)

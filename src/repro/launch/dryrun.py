@@ -1,0 +1,178 @@
+"""Multi-pod dry-run: prove every (architecture x input-shape x mesh) lowers,
+compiles, and fits -- and extract the roofline terms from the compiled
+artifact. The os.environ lines below MUST stay the first statements executed
+(jax locks the device count at first init), hence no __future__ import here.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all --mesh both
+  ... --exchange acpd            # ACPD GroupedDeltaExchange instead of plain DP
+  ... --out experiments/dryrun   # one JSON artifact per combo
+
+Artifacts feed EXPERIMENTS.md §Dry-run/§Roofline via benchmarks/roofline.py.
+"""
+
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config, input_specs, shape_supported
+from repro.core import exchange as exch_lib
+from repro.launch import hlo_analysis
+from repro.launch.flops import model_flops
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import (TrainSetup, build_prefill_step, build_serve_step,
+                                build_train_step)
+from repro.optim.optimizers import OptimizerConfig
+
+
+def run_one(arch: str, shape_name: str, mesh_kind: str, exchange: str,
+            out_dir: pathlib.Path | None, block_q: int | None = None,
+            tag: str = "", profile: str = "tp",
+            exploit_window: bool = True, acpd_groups: int | None = None,
+            acpd_vmap: bool = False) -> dict:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    ok, why = shape_supported(cfg, shape)
+    rec: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                 "exchange": exchange, "tag": tag, "profile": profile}
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        return rec
+
+    import numpy as np
+
+    multi = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    num_devices = int(np.prod(list(mesh.shape.values())))
+
+    t0 = time.time()
+    if shape.kind == "train":
+        if acpd_groups is not None:
+            n_groups = acpd_groups
+        elif profile in ("dp", "ep"):
+            n_groups = num_devices  # every chip is an ACPD worker group
+        else:
+            n_groups = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+        exch = None if exchange == "plain" else exch_lib.ExchangeConfig(
+            num_groups=n_groups, group_size=max(1, n_groups // 2),
+            sync_period=20, rho=1.0 / 256.0, gamma=0.9)
+        setup = TrainSetup(cfg=cfg, optimizer=OptimizerConfig(),
+                           exchange=exch, profile=profile,
+                           exploit_window=exploit_window,
+                           sequential_exchange=not acpd_vmap)
+        jitted, _, abstract = build_train_step(setup, mesh, shape)
+    elif shape.kind == "prefill":
+        jitted, _, abstract = build_prefill_step(cfg, mesh, shape)
+    else:
+        jitted, _, abstract = build_serve_step(cfg, mesh, shape)
+
+    with mesh:
+        lowered = jitted.lower(*abstract)
+        t_lower = time.time() - t0
+        t1 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t1
+
+    mf = model_flops(cfg, shape)
+    scan_lengths = {periods for _, periods in cfg.stages() if periods > 1}
+    roof = hlo_analysis.analyze(compiled, model_flops_global=mf,
+                                num_devices=num_devices,
+                                scan_lengths=scan_lengths)
+    # Memory term from the analytic HBM model (see launch/analytic.py).
+    from repro.launch.analytic import hbm_bytes
+    roof.hbm_bytes_per_device = hbm_bytes(
+        cfg, shape, dict(mesh.shape), exchange=exchange == "acpd")
+    roof.memory_s = roof.hbm_bytes_per_device / hlo_analysis.HBM_BW
+    terms = {"compute": roof.compute_s, "memory": roof.memory_s,
+             "collective": roof.collective_s}
+    roof.dominant = max(terms, key=terms.get)
+    rec.update(
+        status="ok",
+        lower_s=round(t_lower, 2),
+        compile_s=round(t_compile, 2),
+        num_devices=num_devices,
+        roofline=roof.as_dict(),
+        model_flops_global=mf,
+    )
+    if out_dir is not None:
+        out_dir.mkdir(parents=True, exist_ok=True)
+        suffix = f"-{tag}" if tag else ""
+        fn = out_dir / f"{arch}__{shape_name}__{mesh_kind}__{exchange}{suffix}.json"
+        fn.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def _summ(rec: dict) -> str:
+    if rec["status"] != "ok":
+        return (f"{rec['arch']:24s} {rec['shape']:12s} {rec['mesh']:6s} "
+                f"SKIP ({rec.get('reason', rec.get('error', '?'))[:60]})")
+    r = rec["roofline"]
+    mem = r["memory_stats"]
+    per_dev_gb = mem.get("footprint_adjusted_bytes",
+                         mem.get("footprint_bytes", 0)) / 2**30
+    return (f"{rec['arch']:24s} {rec['shape']:12s} {rec['mesh']:6s} "
+            f"{rec['exchange']:5s} mem/dev={per_dev_gb:6.2f}GiB "
+            f"C={r['compute_s']*1e3:9.3f}ms M={r['memory_s']*1e3:9.3f}ms "
+            f"X={r['collective_s']*1e3:9.3f}ms dom={r['dominant']:10s} "
+            f"useful={r['useful_ratio'] if r['useful_ratio'] is None else round(r['useful_ratio'], 3)} "
+            f"compile={rec['compile_s']:.1f}s")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--exchange", default="plain", choices=["plain", "acpd"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--profile", default="tp", choices=["tp", "dp", "ep"])
+    ap.add_argument("--no-exploit-window", action="store_true")
+    ap.add_argument("--acpd-groups", type=int, default=None)
+    ap.add_argument("--acpd-vmap", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = list(ARCH_IDS) if args.arch == "all" else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    out_dir = pathlib.Path(args.out)
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                suffix = f"-{args.tag}" if args.tag else ""
+                fn = out_dir / f"{arch}__{shape}__{mesh_kind}__{args.exchange}{suffix}.json"
+                if args.skip_existing and fn.exists():
+                    print(f"{arch:24s} {shape:12s} {mesh_kind:6s} cached")
+                    continue
+                try:
+                    rec = run_one(arch, shape, mesh_kind, args.exchange, out_dir,
+                                  tag=args.tag, profile=args.profile,
+                                  exploit_window=not args.no_exploit_window,
+                                  acpd_groups=args.acpd_groups,
+                                  acpd_vmap=args.acpd_vmap)
+                except Exception as e:  # a failure here is a bug in our system
+                    failures += 1
+                    rec = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                           "exchange": args.exchange, "status": "error",
+                           "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()}
+                    out_dir.mkdir(parents=True, exist_ok=True)
+                    fn.write_text(json.dumps(rec, indent=1))
+                print(_summ(rec), flush=True)
+    if failures:
+        raise SystemExit(f"{failures} dry-run failures")
+
+
+if __name__ == "__main__":
+    main()

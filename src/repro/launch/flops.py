@@ -1,0 +1,50 @@
+"""MODEL_FLOPS: the 6*N*D (train) / 2*N*D (inference) convention.
+
+N = *active* parameters per token: all params except the input embedding
+table, with MoE expert weights scaled by experts_per_token/num_experts
+(6*N_active*D for MoE, per the roofline spec). Attention's O(S) per-token
+score/AV FLOPs are intentionally *not* included -- the useful-compute ratio
+MODEL_FLOPS/HLO_FLOPs therefore reads below 1 for long-context shapes, and
+the gap quantifies attention + remat + padding overhead (discussed per-entry
+in EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+
+from repro.configs import InputShape
+from repro.models import model_spec
+from repro.models.config import ModelConfig
+from repro.models.param import ParamSpec
+
+
+def active_params(cfg: ModelConfig) -> float:
+    spec = model_spec(cfg)
+    flat, _ = jax.tree.flatten_with_path(
+        spec, is_leaf=lambda x: isinstance(x, ParamSpec))
+    total = 0.0
+    moe_scale = (cfg.experts_per_token / cfg.num_experts) if cfg.num_experts else 1.0
+    for path, s in flat:
+        keys = [getattr(p, "key", str(p)) for p in path]
+        n = float(np.prod(s.shape))
+        if keys[:2] == ["embed", "table"]:
+            continue  # input lookup is a gather, not FLOPs
+        if "moe" in keys and keys[-1] in ("gate", "up", "down"):
+            n *= moe_scale
+        total += n
+    return total
+
+
+def model_flops(cfg: ModelConfig, shape: InputShape) -> float:
+    n_active = active_params(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    if shape.kind == "decode":
+        return 2.0 * n_active * shape.global_batch  # one token per sequence
+    raise ValueError(shape.kind)

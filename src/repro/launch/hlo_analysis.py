@@ -1,0 +1,233 @@
+"""Roofline terms from a compiled XLA executable (no hardware required).
+
+Sources (DESIGN §Roofline):
+* ``compiled.cost_analysis()`` -> per-partition HLO FLOPs and bytes accessed.
+* ``compiled.memory_analysis()`` -> per-device argument/output/temp bytes.
+* ``compiled.as_text()`` (post-SPMD optimized HLO) -> the collective schedule:
+  every all-reduce / all-gather / reduce-scatter / all-to-all /
+  collective-permute with its result shape and replica-group size.
+
+Hardware constants: TPU v5e -- 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+On-wire byte accounting per op (ring algorithms, n = replica-group size):
+  all-reduce       2 * bytes * (n-1)/n
+  all-gather       bytes_out * (n-1)/n
+  reduce-scatter   bytes_in  * (n-1)/n   (we see the *result* shape = 1/n of in)
+  all-to-all       bytes * (n-1)/n
+  collective-permute  bytes (single hop)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+import numpy as np
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s / chip
+ICI_BW = 50e9  # bytes/s/link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"(\w[\w.-]*)\s*=\s*((?:\([^)]*\))|(?:\w+\[[^\]]*\](?:\{[^}]*\})?))\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", )
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict[str, int]
+    result_bytes: dict[str, int]  # sum of per-device result-shape bytes
+    wire_bytes: float  # ring-model on-wire bytes per device
+    ops: list[dict]
+
+    def as_dict(self) -> dict[str, Any]:
+        return {"counts": self.counts, "result_bytes": self.result_bytes,
+                "wire_bytes": self.wire_bytes}
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    counts: dict[str, int] = {}
+    rbytes: dict[str, int] = {}
+    wire = 0.0
+    ops: list[dict] = []
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        name, shape_str, kind = m.group(1), m.group(2), m.group(3)
+        # async pairs: count the -start, skip the -done (same tensor).
+        if f"{kind}-done" in line:
+            continue
+        if name in seen_done:
+            continue
+        seen_done.add(name)
+        b = _shape_bytes(shape_str)
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            n = len(gm.group(1).split(","))
+        else:
+            gi = _GROUPS_IOTA_RE.search(line)
+            n = int(gi.group(2)) if gi else 16
+        n = max(n, 1)
+        if kind == "all-reduce":
+            w = 2.0 * b * (n - 1) / n
+        elif kind == "collective-permute":
+            w = float(b)
+        elif kind == "all-gather":
+            w = b * (n - 1) / n
+        elif kind == "reduce-scatter":
+            # result shape is the scatter output (1/n of the input).
+            w = b * (n - 1)
+        else:  # all-to-all
+            w = b * (n - 1) / n
+        counts[kind] = counts.get(kind, 0) + 1
+        rbytes[kind] = rbytes.get(kind, 0) + b
+        wire += w
+        ops.append({"kind": kind, "bytes": b, "group": n, "wire": w})
+    return CollectiveStats(counts, rbytes, wire, ops)
+
+
+_CONVERT_RE = re.compile(r"= f32\[([\d,]+)\]\S* convert\(%\S+\)")
+
+
+def cpu_upcast_bytes(hlo_text: str, scan_lengths: set[int]) -> int:
+    """Bytes of bf16->f32 weight upcasts hoisted out of scan loops.
+
+    The CPU backend has no native bf16 matmul, so XLA upconverts bf16 weights
+    to f32 and hoists the convert of the *whole stacked* (num_periods, ...)
+    tensor out of the while loop. A TPU's MXU consumes bf16 directly, so these
+    buffers do not exist on the target hardware; we report them separately and
+    subtract them from the adjusted footprint. Heuristic: f32 converts whose
+    leading dim equals a scan length and that are >= 64 MiB.
+    """
+    total = 0
+    for m in _CONVERT_RE.finditer(hlo_text):
+        dims = [int(d) for d in m.group(1).split(",") if d]
+        if not dims or dims[0] not in scan_lengths:
+            continue
+        n = 1
+        for d in dims:
+            n *= d
+        if n * 4 >= 64 * 2**20:
+            total += n * 4
+    return total
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_device: float
+    hbm_bytes_per_device: float
+    wire_bytes_per_device: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    memory_stats: dict[str, int]
+    collectives: dict[str, Any]
+    model_flops: float | None = None
+    useful_ratio: float | None = None
+    # scan-once raw values from cost_analysis, kept for reference:
+    scan_once_flops: float | None = None
+    scan_once_bytes: float | None = None
+    loop_multiplier: float | None = None
+
+    def as_dict(self) -> dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+def analyze(compiled, *, model_flops_global: float | None = None,
+            num_devices: int | None = None,
+            scan_lengths: set[int] | None = None) -> Roofline:
+    """Loop-aware roofline terms from the compiled artifact.
+
+    cost_analysis() counts while bodies once; the compute and collective terms
+    therefore come from hlo_program (dot FLOPs / ring bytes x trip counts).
+    The HBM term scales cost_analysis' scan-once byte count by the same
+    multiplicity ratio (per-layer byte traffic is uniform across the scanned
+    layers, so the ratio transfer is exact for the dominant contributors).
+    """
+    from repro.launch.hlo_program import analyze_program
+
+    ca = compiled.cost_analysis() or {}
+    so_flops = float(ca.get("flops", 0.0))
+    so_bytes = float(ca.get("bytes accessed", 0.0))
+    hlo_text = compiled.as_text()
+    prog = analyze_program(hlo_text)
+    flops = max(prog.dot_flops, so_flops)
+    loop_mult = flops / so_flops if so_flops > 0 else 1.0
+    # Placeholder; callers (dryrun) override with the analytic model -- see
+    # launch/analytic.py for why neither artifact byte count works.
+    hbm = so_bytes * max(loop_mult, 1.0)
+    ma = compiled.memory_analysis()
+    mem_stats = {}
+    if ma is not None:
+        for f in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "alias_size_in_bytes",
+                  "generated_code_size_in_bytes"):
+            mem_stats[f] = int(getattr(ma, f, 0))
+        # True per-device footprint: donated outputs alias their arguments.
+        mem_stats["footprint_bytes"] = (
+            mem_stats["argument_size_in_bytes"]
+            + mem_stats["temp_size_in_bytes"]
+            + mem_stats["output_size_in_bytes"]
+            - mem_stats["alias_size_in_bytes"])
+        if scan_lengths:
+            up = cpu_upcast_bytes(hlo_text, scan_lengths)
+            mem_stats["cpu_upcast_bytes"] = up
+            non_temp = (mem_stats["argument_size_in_bytes"]
+                        + mem_stats["output_size_in_bytes"]
+                        - mem_stats["alias_size_in_bytes"])
+            # Upcasts live in temp; never subtract below the non-temp part.
+            mem_stats["footprint_adjusted_bytes"] = non_temp + max(
+                mem_stats["temp_size_in_bytes"] - up, 0)
+    colls = parse_collectives(hlo_text)
+    # Loop-aware collective volume from the program graph (parse_collectives'
+    # static schedule is kept inside the record for the §Dry-run listing).
+    # The roofline term uses the bf16-adjusted volume: XLA:CPU upcasts bf16
+    # reductions to f32 on the wire; the TPU lowering does not.
+    colls.wire_bytes = prog.wire_bytes_bf16
+    colls.result_bytes["raw_f32_wire"] = int(prog.wire_bytes)
+    colls.counts = {k: int(v) for k, v in prog.collective_counts.items()}
+
+    compute_s = flops / PEAK_FLOPS
+    memory_s = hbm / HBM_BW
+    collective_s = colls.wire_bytes / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+
+    model_flops_dev = None
+    ratio = None
+    if model_flops_global is not None and num_devices:
+        model_flops_dev = model_flops_global / num_devices
+        ratio = model_flops_dev / flops if flops else None
+    return Roofline(flops, hbm, colls.wire_bytes, compute_s, memory_s,
+                    collective_s, dominant, mem_stats, colls.as_dict(),
+                    model_flops_dev, ratio,
+                    scan_once_flops=so_flops, scan_once_bytes=so_bytes,
+                    loop_multiplier=loop_mult)

@@ -1,0 +1,258 @@
+"""Loop-aware analysis of compiled HLO text.
+
+XLA's ``cost_analysis()`` counts every while-loop body ONCE -- useless for
+scan-over-layers programs where >95% of the work lives inside loops. This
+module re-derives the roofline quantities from the optimized HLO itself:
+
+  1. split the module into computations and build the call graph
+     (while body= / fusion calls= / to_apply= / conditional branches),
+  2. read each while op's trip count from ``backend_config
+     {"known_trip_count": {"n": ...}}`` (emitted by XLA for scans),
+  3. propagate execution multiplicities from ENTRY through the graph,
+  4. FLOPs: every ``dot`` contributes 2 * prod(result dims) * prod(lhs
+     contracting dims), times its computation's multiplicity,
+  5. collective wire bytes: ring-model bytes (see hlo_analysis) times
+     multiplicity,
+  6. HBM bytes: streamed operand+result bytes of dots, gathers, scatters and
+     dynamic-update-slices times multiplicity -- an upper estimate that
+     ignores fusion reuse of operands already in registers/VMEM (documented;
+     elementwise traffic is fused into these in practice).
+
+Elementwise FLOPs are ignored (matmuls dominate the compute term by >10x for
+every shape here); the SSD layer's einsums all lower to dots, so SSM archs
+are covered too.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*?)\)\s*->")
+_OP_DEF = re.compile(r"^\s+(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\([^)]*\)|[\w\[\],{}\s]+?)\s+([\w\-]+)\(")
+_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+# Per-field callee references. Values are either %name or {%a, %b}.
+_FIELD_REFS = {
+    "body": re.compile(r"\bbody=(?:\{([^}]*)\}|%([\w.\-]+))"),
+    "condition": re.compile(r"\bcondition=(?:\{([^}]*)\}|%([\w.\-]+))"),
+    "calls": re.compile(r"\bcalls=(?:\{([^}]*)\}|%([\w.\-]+))"),
+    "to_apply": re.compile(r"\bto_apply=(?:\{([^}]*)\}|%([\w.\-]+))"),
+    "true_computation": re.compile(r"\btrue_computation=(?:\{([^}]*)\}|%([\w.\-]+))"),
+    "false_computation": re.compile(r"\bfalse_computation=(?:\{([^}]*)\}|%([\w.\-]+))"),
+    "branch_computations": re.compile(r"\bbranch_computations=\{([^}]*)\}"),
+}
+_OPERANDS = re.compile(r"\(((?:%[\w.\-]+(?:,\s*)?)+)\)?")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_PARAM_DEF = re.compile(r"^\s+%([\w.\-]+)\s*=\s*(\([^)]*\)|[\w\[\],{}\s]+?)\s+parameter\(")
+
+
+def _shape_dims(shape_str: str) -> list[tuple[str, list[int]]]:
+    out = []
+    for m in _SHAPE.finditer(shape_str):
+        if m.group(1) in _DTYPE_BYTES:
+            dims = [int(d) for d in m.group(2).split(",") if d]
+            out.append((m.group(1), dims))
+    return out
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _shape_dims(shape_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    kind: str
+    shape: str
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: list[Op]
+
+
+def parse_computations(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for line in text.splitlines():
+        if line and not line[0].isspace():
+            m = _COMP_HDR.match(line)
+            if m:
+                cur = Computation(m.group(1), [])
+                comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        m = _OP_DEF.match(line)
+        if m:
+            cur.ops.append(Op(m.group(1), m.group(3), m.group(2), line))
+    return comps
+
+
+def _find_entry(text: str, comps: dict[str, Computation]) -> str:
+    m = re.search(r"^ENTRY\s+%?([\w.\-]+)", text, re.M)
+    if m and m.group(1) in comps:
+        return m.group(1)
+    return next(reversed(comps))
+
+
+def multiplicities(text: str, comps: dict[str, Computation]) -> dict[str, float]:
+    entry = _find_entry(text, comps)
+    mult: dict[str, float] = defaultdict(float)
+    mult[entry] = 1.0
+    # Build edges: (caller, callee, factor). Only a while's *body* gets the
+    # trip-count factor; its condition and all other call kinds get 1.
+    edges: dict[str, list[tuple[str, float]]] = defaultdict(list)
+    for cname, comp in comps.items():
+        for op in comp.ops:
+            trip = 1.0
+            if op.kind == "while":
+                tm = _TRIP.search(op.line)
+                trip = float(tm.group(1)) if tm else 1.0
+            for field, rx in _FIELD_REFS.items():
+                for m in rx.finditer(op.line):
+                    blob = next(g for g in m.groups() if g is not None)
+                    for callee in re.findall(r"%?([\w.\-]+)", blob):
+                        if callee in comps:
+                            factor = trip if field == "body" else 1.0
+                            edges[cname].append((callee, factor))
+    # Propagate in topological-ish order (HLO computations are listed callees
+    # first; iterate to fixpoint for safety -- the graph is a DAG).
+    for _ in range(len(comps)):
+        changed = False
+        new = defaultdict(float)
+        new[entry] = 1.0
+        for caller, outs in edges.items():
+            for callee, f in outs:
+                new[callee] += mult[caller] * f
+        new[entry] = 1.0
+        for k in set(new) | set(mult):
+            if abs(new[k] - mult[k]) > 1e-9:
+                changed = True
+        mult = new
+        if not changed:
+            break
+    return dict(mult)
+
+
+@dataclasses.dataclass
+class ProgramCosts:
+    dot_flops: float  # loop-aware matmul FLOPs (per device)
+    hbm_bytes: float  # loop-aware streamed-bytes upper estimate (per device)
+    wire_bytes: float  # loop-aware collective on-wire bytes (per device)
+    collective_counts: dict[str, float]  # dynamic (trip-weighted) counts
+    dot_count: int
+    while_trips: list[int]
+    # XLA:CPU reduces bf16 tensors in f32; the TPU lowering keeps bf16 on the
+    # wire. This halves every f32 collective as the hardware-faithful volume.
+    wire_bytes_bf16: float = 0.0
+
+
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+_MEM_KINDS = {"dot", "gather", "scatter", "dynamic-update-slice", "convolution"}
+
+
+def _collective_wire(op: Op) -> float:
+    b = _shape_bytes(op.shape)
+    gm = _GROUPS_RE.search(op.line)
+    if gm:
+        n = len(gm.group(1).split(","))
+    else:
+        gi = _GROUPS_IOTA_RE.search(op.line)
+        n = int(gi.group(2)) if gi else 16
+    n = max(n, 1)
+    kind = op.kind.replace("-start", "")
+    if kind == "all-reduce":
+        return 2.0 * b * (n - 1) / n
+    if kind == "collective-permute":
+        return float(b)
+    if kind == "reduce-scatter":
+        return b * (n - 1)
+    return b * (n - 1) / n  # all-gather, all-to-all
+
+
+def analyze_program(text: str) -> ProgramCosts:
+    comps = parse_computations(text)
+    mult = multiplicities(text, comps)
+
+    # name -> shape string (for dot operand lookup), per computation + params.
+    flops = 0.0
+    hbm = 0.0
+    wire = 0.0
+    wire_bf16 = 0.0
+    coll_counts: dict[str, float] = defaultdict(float)
+    dot_count = 0
+    trips = []
+
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        shapes = {op.name: op.shape for op in comp.ops}
+        # parameters defined with explicit shapes too (matched by _OP_DEF).
+        for op in comp.ops:
+            kind = op.kind
+            if kind == "while":
+                tm = _TRIP.search(op.line)
+                if tm:
+                    trips.append(int(tm.group(1)))
+            base = kind.replace("-start", "").replace("-done", "")
+            if base in _COLL_KINDS:
+                if kind.endswith("-done"):
+                    continue
+                w = m * _collective_wire(op)
+                wire += w
+                wire_bf16 += w * (0.5 if "f32[" in op.shape else 1.0)
+                coll_counts[base] += m
+                hbm += m * 2 * _shape_bytes(op.shape)
+                continue
+            if base not in _MEM_KINDS:
+                continue
+            out_bytes = _shape_bytes(op.shape)
+            args = re.search(r"\b" + re.escape(kind) + r"\(([^)]*)\)", op.line)
+            arg_names = re.findall(r"%([\w.\-]+)", args.group(1)) if args else []
+            in_bytes = sum(_shape_bytes(shapes.get(a, "")) for a in arg_names)
+            hbm += m * (out_bytes + in_bytes)
+            if base == "dot":
+                cm = _CONTRACT.search(op.line)
+                if not cm or not arg_names:
+                    continue
+                lhs_shape = shapes.get(arg_names[0], "")
+                dims = _shape_dims(lhs_shape)
+                if not dims:
+                    continue
+                lhs_dims = dims[0][1]
+                contract = 1
+                for ci in (int(c) for c in cm.group(1).split(",") if c):
+                    if ci < len(lhs_dims):
+                        contract *= lhs_dims[ci]
+                out_elems = 1
+                for _, od in _shape_dims(op.shape):
+                    for d in od:
+                        out_elems *= d
+                    break
+                flops += m * 2.0 * out_elems * contract
+                dot_count += 1
+
+    return ProgramCosts(flops, hbm, wire, dict(coll_counts), dot_count, trips,
+                        wire_bytes_bf16=wire_bf16)

@@ -1,0 +1,72 @@
+"""Batched serving driver: prefill a prompt batch, then decode N tokens.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-14b --reduced \
+      --batch 4 --prompt-len 48 --gen 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.synthetic import make_token_dataset
+from repro.models import decode_step, model_spec, prefill
+from repro.models.param import tree_materialize
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-14b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=48)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    if not cfg.supports_decode():
+        raise SystemExit(f"{cfg.arch_id} is encoder-only: no decode")
+
+    params = tree_materialize(model_spec(cfg), jax.random.key(args.seed))
+    stream = make_token_dataset(args.batch * args.prompt_len, cfg.vocab_size,
+                                args.seed)
+    prompts = jnp.asarray(stream.reshape(args.batch, args.prompt_len))
+    max_seq = args.prompt_len + args.gen
+
+    batch = {"tokens": prompts}
+    if cfg.frontend == "vision_stub":
+        p = min(cfg.num_patch_tokens, args.prompt_len // 2)
+        rng = np.random.default_rng(args.seed)
+        batch["patch_embeds"] = jnp.asarray(
+            rng.standard_normal((args.batch, p, cfg.d_model)).astype(np.float32))
+
+    t0 = time.time()
+    logits, caches, plen = prefill(params, batch, cfg, max_seq=max_seq)
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if cfg.frontend == "vision_stub":
+        plen = plen  # patches + text both occupy cache slots
+    out = [tok]
+    t1 = time.time()
+    step_fn = jax.jit(lambda p, t, c, n: decode_step(p, t, c, n, cfg))
+    for i in range(args.gen - 1):
+        logits, caches = step_fn(params, tok, caches, jnp.int32(plen + 1 + i))
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out.append(tok)
+    gen = np.stack([np.asarray(t) for t in out], axis=1)
+    dt_prefill, dt_decode = t1 - t0, time.time() - t1
+    print(f"prefill {args.batch}x{plen} in {dt_prefill:.2f}s; "
+          f"decoded {args.gen - 1} steps in {dt_decode:.2f}s "
+          f"({dt_decode / max(args.gen - 1, 1) * 1e3:.0f} ms/tok)")
+    print("generated token ids (batch 0):", gen[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

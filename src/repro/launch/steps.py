@@ -1,0 +1,394 @@
+"""Jitted step functions + their sharding trees for a given (config, mesh).
+
+``build_train_step``: data-parallel training over the mesh's data axes with
+either the plain synchronous exchange (mean gradient -- the CoCoA+-analogue
+baseline) or the ACPD GroupedDeltaExchange (B-of-K participation + top-rho
+sparsification + error feedback), then AdamW/SGD.
+
+``build_prefill_step`` / ``build_serve_step``: batched serving; decode caches
+are sequence-sharded over the mesh (and over *all* axes when batch=1, which is
+what makes the 524k-context single-sequence shape fit).
+
+Everything returns (jitted_fn, input_shardings, abstract_inputs) so the
+multi-pod dry-run can ``.lower(...)`` without allocating anything.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import InputShape
+from repro.core import exchange as exch_lib
+from repro.launch.mesh import batch_divisor, data_axes
+from repro.models import model_spec, train_loss, decode_step
+from repro.models.config import ModelConfig
+from repro.models.model import prefill as model_prefill
+from repro.models.param import tree_abstract, tree_pspecs
+from repro.optim.optimizers import OptimizerConfig, OptState, apply_update, init_state
+
+PyTree = Any
+
+# Weight-sharding rule tables (see models.param.DEFAULT_RULES):
+# * "tp" training profile: tensor-parallel weights over the model axis + FSDP
+#   over data ("embed" dims); XLA inserts the per-layer gathers inside the
+#   scan. Without FSDP, 235B/398B configs cannot hold even bf16 weights.
+# * "dp" training profile (§Perf): NO tensor parallelism -- the batch shards
+#   over every mesh axis (256-way on one pod) and weights FSDP-shard over
+#   (data, model) combined. Per-layer TP activation all-reduces disappear;
+#   the only collectives are FSDP weight gathers + the gradient reduction.
+# * serving keeps weights resident (no per-layer gathers); the big-MoE
+#   configs instead shard the expert ff dim over the data axis, which turns
+#   into a cheap per-MoE-layer psum at decode.
+from repro.models.param import DEFAULT_RULES, rule_scope
+
+TRAIN_RULES = {**DEFAULT_RULES, "embed": "data"}
+DP_RULES = {
+    "batch": ("pod", "data", "model"),
+    "seq": None,
+    "seq_shard": None,
+    "embed": ("data", "model"),  # FSDP over the whole pod
+    "vocab": None, "ff": None, "heads": None, "kv_heads": None,
+    "experts": None, "ssm_inner": None, "ssm_heads": None, "expert_ff": None,
+}
+# "ep" (§Perf, MoE archs): tokens shard over every axis like dp, but expert
+# weights STAY model-sharded (full-expert FSDP gathers are what made dp lose
+# on the 235B: 2.4 GB/layer of expert weights re-gathered 3x per step).
+# Dispatch groups remain the data slices; the token->expert movement across
+# the model axis lowers to an all-to-all-shaped exchange of (C, D) slots.
+EP_RULES = {
+    "batch": ("pod", "data", "model"),
+    "moe_groups": ("pod", "data"),
+    "seq": None,
+    "seq_shard": None,
+    "embed": "data",  # FSDP for the non-expert weights
+    "vocab": None, "ff": None, "heads": None, "kv_heads": None,
+    "experts": "model", "ssm_inner": None, "ssm_heads": None,
+    "expert_ff": None,
+}
+SERVE_RULES = {**DEFAULT_RULES, "expert_ff": "data"}
+PROFILE_RULES = {"tp": TRAIN_RULES, "dp": DP_RULES, "ep": EP_RULES}
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainSetup:
+    cfg: ModelConfig
+    optimizer: OptimizerConfig
+    exchange: exch_lib.ExchangeConfig | None  # None -> plain mean-grad DP
+    remat: bool = True
+    exploit_window: bool = True
+    seq_shard: bool = True  # sequence-parallel activations (memory fit)
+    zero1: bool = True  # shard optimizer moments over the data axis too
+    fsdp: bool = True  # shard weights over the data axis too (memory fit)
+    profile: str = "tp"  # "tp" | "dp" | "ep" (see the rule tables above)
+    # scan the exchange over groups (one gradient live at a time) instead of
+    # vmapping all K group-gradients -- mandatory at >10B params (§Perf).
+    sequential_exchange: bool = True
+
+
+def _sharding(mesh: Mesh, *spec) -> NamedSharding:
+    return NamedSharding(mesh, P(*spec))
+
+
+def _batch_pspec(cfg: ModelConfig, mesh: Mesh, batch: dict) -> dict:
+    """Shard every batch leaf's leading (batch) dim over the data axes."""
+    axes = data_axes(mesh)
+    div = batch_divisor(mesh)
+
+    def leaf(x):
+        b = x.shape[0]
+        lead = axes if (axes and b % div == 0) else None
+        return P(lead, *([None] * (x.ndim - 1)))
+
+    return jax.tree.map(leaf, batch)
+
+
+# ---------------------------------------------------------------------------
+# Training.
+# ---------------------------------------------------------------------------
+
+
+def build_train_step(setup: TrainSetup, mesh: Mesh, shape: InputShape):
+    cfg = setup.cfg
+    spec = model_spec(cfg)
+    if setup.profile in ("dp", "ep"):
+        rules = PROFILE_RULES[setup.profile]
+        daxes = tuple(mesh.shape.keys())  # batch (and groups) over every axis
+        seq_shard = False  # B_loc is tiny; no need to split the sequence
+        total = int(np.prod(list(mesh.shape.values())))
+        if shape.global_batch % total != 0:
+            raise ValueError(
+                f"profile {setup.profile!r} shards the batch over all "
+                f"{total} devices; global_batch={shape.global_batch} is not "
+                f"divisible (use the tp profile on this mesh)")
+    else:
+        rules = TRAIN_RULES if setup.fsdp else DEFAULT_RULES
+        daxes = data_axes(mesh)
+        seq_shard = setup.seq_shard
+    param_ps = tree_pspecs(spec, mesh, rules)
+    abstract_params = tree_abstract(spec)
+
+    from repro.configs import input_specs  # avoid cycle at module import
+    abstract_batch = input_specs(cfg, shape)["batch"]
+    div = int(np.prod([mesh.shape[a] for a in daxes])) if daxes else 1
+
+    def _leaf_ps(x):
+        lead = daxes if (daxes and x.shape[0] % div == 0) else None
+        return P(lead, *([None] * (x.ndim - 1)))
+
+    batch_ps = jax.tree.map(_leaf_ps, abstract_batch)
+
+    def _uses(ps_entries, axis: str) -> bool:
+        for e in ps_entries:
+            if e == axis or (isinstance(e, tuple) and axis in e):
+                return True
+        return False
+
+    def zero1_ps(ps: P, leaf) -> P:
+        """ZeRO-1: additionally shard optimizer moments over the data axis on
+        the first dim that is unsharded and divisible (no-op when FSDP already
+        spent the data axis on this tensor)."""
+        if not setup.zero1 or not daxes:
+            return ps
+        entries = list(ps) + [None] * (len(leaf.shape) - len(ps))
+        if any(_uses(entries, a) for a in daxes):
+            return ps
+        dsize = int(np.prod([mesh.shape[a] for a in daxes]))
+        for i, (e, dim) in enumerate(zip(entries, leaf.shape)):
+            if e is None and dim % dsize == 0:
+                entries[i] = daxes if len(daxes) > 1 else daxes[0]
+                return P(*entries)
+        return ps
+
+    moment_ps = jax.tree.map(zero1_ps, param_ps, abstract_params)
+    opt_ps = OptState(step=P(), mu=moment_ps,
+                      nu=moment_ps if setup.optimizer.name == "adamw" else None)
+    abstract_opt = jax.eval_shape(
+        lambda p: init_state(setup.optimizer, p), abstract_params)
+
+    def _g_axes(G: int):
+        """Largest subset of the data axes whose size divides G (G=2
+        pod-as-worker groups shard over 'pod' alone)."""
+        for cand in (daxes, ("pod",), ("data",), ()):
+            cand = tuple(a for a in cand if a in mesh.shape)
+            if cand and G % int(np.prod([mesh.shape[a] for a in cand])) == 0:
+                return cand
+        return None
+
+    def residual_ps(ps: P, G: int) -> P:
+        """Residuals (G, *shape): G shards over (a divisible subset of) the
+        data axes; inner dims keep their param sharding minus those axes."""
+        gax = _g_axes(G)
+        used = gax or ()
+        def strip(e):
+            if e is None:
+                return None
+            t = (e,) if isinstance(e, str) else tuple(e)
+            t = tuple(a for a in t if a not in used)
+            return t[0] if len(t) == 1 else (t if t else None)
+        inner = [strip(e) for e in ps]
+        return P(gax if gax else None, *inner)
+
+    exch = setup.exchange
+    if exch is not None:
+        exch_ps = exch_lib.ExchangeState(
+            residual=jax.tree.map(lambda ps: residual_ps(ps, exch.num_groups),
+                                  param_ps))
+        abstract_exch = jax.eval_shape(
+            lambda p: exch_lib.init_state(exch, p), abstract_params)
+    else:
+        exch_ps, abstract_exch = None, None
+
+    def loss_fn(params, batch):
+        with rule_scope(rules):
+            return train_loss(params, batch, cfg, mesh=mesh, remat=setup.remat,
+                              exploit_window=setup.exploit_window,
+                              seq_shard=seq_shard)
+
+    def grads_per_group(params, batch, groups: int):
+        def regroup(x):
+            g = x.reshape(groups, x.shape[0] // groups, *x.shape[1:])
+            return jax.lax.with_sharding_constraint(
+                g, _sharding(mesh, daxes if daxes else None))
+        grouped = jax.tree.map(regroup, batch)
+        return jax.vmap(jax.grad(loss_fn), in_axes=(None, 0))(params, grouped)
+
+    def constrain_update(u):
+        """ZeRO-1: pin the update to the moments' data-sharded layout so the
+        gradient reduction lowers to reduce-scatter (not all-reduce) and the
+        optimizer math runs on 1/|data| of each tensor."""
+        if not setup.zero1:
+            return u
+        return jax.tree.map(
+            lambda g, ps: jax.lax.with_sharding_constraint(
+                g, NamedSharding(mesh, ps)), u, moment_ps)
+
+    def step_fn(params, opt_state, exch_state, batch):
+        metrics = {}
+        if exch is None:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            update, new_exch = constrain_update(grads), exch_state
+        else:
+            loss = loss_fn(params, batch)  # monitored value
+            if setup.sequential_exchange:
+                grouped = jax.tree.map(
+                    lambda x: x.reshape(exch.num_groups,
+                                        x.shape[0] // exch.num_groups,
+                                        *x.shape[1:]), batch)
+                flat_mps = jax.tree.leaves(moment_ps)
+
+                def shard_acc(d):
+                    return {i: jax.lax.with_sharding_constraint(
+                        v, NamedSharding(mesh, flat_mps[i]))
+                        for i, v in d.items()}
+
+                update, new_exch, em = exch_lib.exchange_sequential(
+                    exch, jax.grad(loss_fn), params, grouped, exch_state,
+                    opt_state.step, shard_acc=shard_acc)
+            else:
+                g = grads_per_group(params, batch, exch.num_groups)
+                update, new_exch, em = exch_lib.exchange(
+                    exch, g, exch_state, opt_state.step)
+            metrics.update(em)
+        new_params, new_opt, om = apply_update(
+            setup.optimizer, params, update, opt_state)
+        metrics.update(om)
+        metrics["loss"] = loss
+        return new_params, new_opt, new_exch, metrics
+
+    in_shardings = (
+        jax.tree.map(lambda ps: NamedSharding(mesh, ps), param_ps),
+        jax.tree.map(lambda ps: NamedSharding(mesh, ps), opt_ps,
+                     is_leaf=lambda x: isinstance(x, P)),
+        jax.tree.map(lambda ps: NamedSharding(mesh, ps), exch_ps,
+                     is_leaf=lambda x: isinstance(x, P)) if exch_ps is not None else None,
+        jax.tree.map(lambda ps: NamedSharding(mesh, ps), batch_ps,
+                     is_leaf=lambda x: isinstance(x, P)),
+    )
+    out_shardings = (in_shardings[0], in_shardings[1], in_shardings[2],
+                     NamedSharding(mesh, P()))
+
+    jitted = jax.jit(step_fn, in_shardings=in_shardings,
+                     out_shardings=out_shardings, donate_argnums=(0, 1, 2))
+    abstract = (abstract_params, abstract_opt, abstract_exch, abstract_batch)
+    return jitted, in_shardings, abstract
+
+
+# ---------------------------------------------------------------------------
+# Serving.
+# ---------------------------------------------------------------------------
+
+
+def _cache_pspecs(cfg: ModelConfig, mesh: Mesh, batch_size: int, max_seq: int):
+    """PartitionSpec tree mirroring models.init_caches structurally."""
+    from repro.models import blocks as blocks_lib
+    from repro.models.blocks import AttnCache
+    from repro.models.ssm import SsmCache
+
+    daxes = data_axes(mesh)
+    div = batch_divisor(mesh)
+    batch_ok = bool(daxes) and batch_size % div == 0
+    b_ax = daxes if batch_ok else None
+    # When the batch can't shard (B=1 long-context), spread the sequence over
+    # every mesh axis; otherwise over the model axis only.
+    seq_axes_pref = ("model",) if batch_ok else tuple(mesh.shape.keys())
+
+    def seq_ax(s_buf: int) -> tuple[str, ...] | None:
+        total = int(np.prod([mesh.shape[a] for a in seq_axes_pref]))
+        if s_buf % total == 0:
+            return seq_axes_pref
+        if s_buf % mesh.shape["model"] == 0:
+            return ("model",)
+        return None
+
+    def div_ax(dim: int, ax: str = "model"):
+        return (ax,) if dim % mesh.shape[ax] == 0 else None
+
+    stages = []
+    for layout, periods in cfg.stages():
+        stage = {}
+        for i, layer in enumerate(layout):
+            if layer.kind == "attn":
+                if layer.window is not None and layer.window < max_seq:
+                    s_buf = layer.window
+                else:
+                    s_buf = max_seq
+                kv_spec = P(None, b_ax, seq_ax(s_buf), None, None)
+                stage[f"pos{i}"] = AttnCache(kv_spec, kv_spec)
+            else:
+                cc = cfg.d_inner + 2 * cfg.ssm_state
+                stage[f"pos{i}"] = SsmCache(
+                    conv=P(None, b_ax, None, div_ax(cc)),
+                    state=P(None, b_ax, div_ax(cfg.ssm_heads), None, None),
+                )
+        stages.append(stage)
+    return stages
+
+
+def build_serve_step(cfg: ModelConfig, mesh: Mesh, shape: InputShape):
+    """One-token decode against a seq_len-sized cache (decode shapes)."""
+    from repro.configs import input_specs
+
+    spec = model_spec(cfg)
+    param_ps = tree_pspecs(spec, mesh, SERVE_RULES)
+    abstract_params = tree_abstract(spec)
+    specs = input_specs(cfg, shape)
+    B, S = shape.global_batch, shape.seq_len
+    daxes = data_axes(mesh)
+    batch_ok = bool(daxes) and B % batch_divisor(mesh) == 0
+
+    cache_ps = _cache_pspecs(cfg, mesh, B, S)
+    token_ps = P(daxes if batch_ok else None)
+
+    def serve_fn(params, token, caches, cache_len):
+        logits, new_caches = decode_step(params, token, caches, cache_len, cfg,
+                                         mesh=mesh)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_token, new_caches
+
+    ns = lambda tree: jax.tree.map(lambda ps: NamedSharding(mesh, ps), tree,
+                                   is_leaf=lambda x: isinstance(x, P))
+    in_shardings = (ns(param_ps), NamedSharding(mesh, token_ps), ns(cache_ps),
+                    NamedSharding(mesh, P()))
+    out_shardings = (NamedSharding(mesh, token_ps), ns(cache_ps))
+    jitted = jax.jit(serve_fn, in_shardings=in_shardings,
+                     out_shardings=out_shardings, donate_argnums=(2,))
+    abstract = (abstract_params, specs["token"], specs["caches"],
+                specs["cache_len"])
+    return jitted, in_shardings, abstract
+
+
+def build_prefill_step(cfg: ModelConfig, mesh: Mesh, shape: InputShape):
+    """Prompt processing: forward + cache assembly (prefill shapes)."""
+    from repro.configs import input_specs
+
+    spec = model_spec(cfg)
+    param_ps = tree_pspecs(spec, mesh, SERVE_RULES)
+    abstract_params = tree_abstract(spec)
+    abstract_batch = input_specs(cfg, shape)["batch"]
+    batch_ps = _batch_pspec(cfg, mesh, abstract_batch)
+    B, S = shape.global_batch, shape.seq_len
+    cache_ps = _cache_pspecs(cfg, mesh, B, S)
+    daxes = data_axes(mesh)
+    batch_ok = bool(daxes) and B % batch_divisor(mesh) == 0
+
+    def prefill_fn(params, batch):
+        last, caches, _ = model_prefill(params, batch, cfg, max_seq=S, mesh=mesh)
+        return last, caches
+
+    ns = lambda tree: jax.tree.map(lambda ps: NamedSharding(mesh, ps), tree,
+                                   is_leaf=lambda x: isinstance(x, P))
+    in_shardings = (ns(param_ps), ns(batch_ps))
+    vocab_ax = "model" if cfg.vocab_size % mesh.shape["model"] == 0 else None
+    out_shardings = (NamedSharding(mesh, P(daxes if batch_ok else None, vocab_ax)),
+                     ns(cache_ps))
+    jitted = jax.jit(prefill_fn, in_shardings=in_shardings,
+                     out_shardings=out_shardings)
+    abstract = (abstract_params, abstract_batch)
+    return jitted, in_shardings, abstract

@@ -1,0 +1,11 @@
+"""Model stack: six architecture families on one scanned-stage substrate."""
+
+from repro.models.config import LayerSpec, ModelConfig  # noqa: F401
+from repro.models.model import (  # noqa: F401
+    decode_step,
+    init_caches,
+    model_spec,
+    prefill,
+    train_loss,
+)
+from repro.models import param  # noqa: F401

@@ -1,0 +1,218 @@
+"""Transformer/Mamba blocks and the scanned multi-stage stack.
+
+A *block* is one layer: pre-norm attention or SSD mixer, plus an optional
+pre-norm dense-MLP or MoE sublayer (per its :class:`LayerSpec`). A *stage*
+scans a stack of identical periods (see ModelConfig.stages); heterogeneous
+patterns (jamba 7:1, gemma3 5:1) put the whole period inside the scan body so
+the compiled HLO is O(period), not O(num_layers).
+
+KV caches: full-attention layers keep a (B, S_max, KV, hd) buffer (sequence-
+shardable); sliding-window layers keep a ring buffer of exactly ``window``
+slots -- at 524k context this is the difference between 21 GB and 40 MB per
+gemma3 local layer. SSD layers carry (conv, state) tuples. Caches thread
+through the scan as stacked xs/ys.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.models import attention as attn_lib
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.config import LayerSpec, ModelConfig
+from repro.models.layers import mlp, mlp_spec, rmsnorm, rmsnorm_spec
+from repro.models.param import ParamSpec, constraint, stack_specs
+
+
+class AttnCache(NamedTuple):
+    """KV buffer. Ring-ness is static, derived from shapes: the buffer is a
+    ring iff the layer has a window and S_buf == window (see _attn_decode)."""
+
+    k: jax.Array  # (B, S_buf, KV, hd)
+    v: jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Single block.
+# ---------------------------------------------------------------------------
+
+
+def block_spec(cfg: ModelConfig, layer: LayerSpec) -> dict:
+    spec: dict[str, Any] = {"norm1": rmsnorm_spec(cfg.d_model, "embed")}
+    if layer.kind == "attn":
+        spec["attn"] = attn_lib.attention_spec(cfg)
+    else:
+        spec["ssm"] = ssm_lib.ssm_spec(cfg)
+    if layer.mlp == "dense":
+        spec["norm2"] = rmsnorm_spec(cfg.d_model, "embed")
+        spec["mlp"] = mlp_spec(cfg)
+    elif layer.mlp == "moe":
+        spec["norm2"] = rmsnorm_spec(cfg.d_model, "embed")
+        spec["moe"] = moe_lib.moe_spec(cfg)
+    return spec
+
+
+def block_apply(
+    params: dict,
+    layer: LayerSpec,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    positions: jax.Array,
+    mesh: Mesh | None,
+    cache: Any = None,
+    cache_len: jax.Array | None = None,
+    exploit_window: bool = True,
+    prefill: bool = False,
+) -> tuple[jax.Array, Any, jax.Array]:
+    """Returns (x, new_cache, aux_loss). ``prefill=True`` returns raw caches
+    (full-sequence (k, v) / SsmCache) for the caller to assemble."""
+    aux = jnp.float32(0.0)
+    h = rmsnorm(params["norm1"], x, cfg.rmsnorm_eps)
+
+    if layer.kind == "attn":
+        if cache is None:
+            out, new_cache = attn_lib.attention(
+                params["attn"], h, cfg, positions=positions, window=layer.window,
+                mesh=mesh, exploit_window=exploit_window, return_kv=prefill)
+        else:
+            out, new_cache = _attn_decode(params["attn"], h, cfg, layer, cache,
+                                          cache_len, positions, mesh)
+    else:
+        if cache is None:
+            if prefill:
+                out, new_cache = ssm_lib.ssm_forward(params["ssm"], h, cfg, mesh,
+                                                     return_cache=True)
+            else:
+                out, new_cache = ssm_lib.ssm_forward(params["ssm"], h, cfg, mesh), None
+        else:
+            out, new_cache = ssm_lib.ssm_decode_step(params["ssm"], h, cache, cfg, mesh)
+    x = x + out
+
+    if layer.mlp == "dense":
+        h2 = rmsnorm(params["norm2"], x, cfg.rmsnorm_eps)
+        x = x + mlp(params["mlp"], h2)
+    elif layer.mlp == "moe":
+        h2 = rmsnorm(params["norm2"], x, cfg.rmsnorm_eps)
+        out2, aux = moe_lib.moe(params["moe"], h2, cfg, mesh)
+        x = x + out2
+    return x, new_cache, aux
+
+
+def _attn_decode(params, h, cfg, layer: LayerSpec, cache: AttnCache,
+                 cache_len, positions, mesh):
+    """One-token decode with either a linear or a ring KV buffer."""
+    B, S, D = h.shape
+    hd = cfg.resolved_head_dim
+    KV, H = cfg.num_kv_heads, cfg.num_heads
+    G = H // KV
+    q, k, v = attn_lib._project_qkv(params, h, cfg, positions, mesh)
+    S_buf = cache.k.shape[1]
+    pos = cache_len - 1
+    ring = layer.window is not None and S_buf == layer.window
+
+    if ring:
+        slot = jnp.mod(pos, S_buf)
+        k_buf = jax.lax.dynamic_update_slice_in_dim(cache.k, k, slot, axis=1)
+        v_buf = jax.lax.dynamic_update_slice_in_dim(cache.v, v, slot, axis=1)
+        valid = jnp.minimum(cache_len, S_buf)
+        out = attn_lib.attend_cache(q, k_buf, v_buf, cfg, cache_len=valid,
+                                    window=None)  # the ring IS the window
+    else:
+        k_buf = jax.lax.dynamic_update_slice_in_dim(cache.k, k, pos, axis=1)
+        v_buf = jax.lax.dynamic_update_slice_in_dim(cache.v, v, pos, axis=1)
+        out = attn_lib.attend_cache(q, k_buf, v_buf, cfg, cache_len=cache_len,
+                                    window=layer.window)
+
+    out = out.reshape(B, S, H * hd)
+    out = jnp.einsum("bsh,hd->bsd", out, params["wo"].astype(out.dtype))
+    return out, AttnCache(k_buf, v_buf)
+
+
+def init_layer_cache(cfg: ModelConfig, layer: LayerSpec, batch: int,
+                     max_seq: int, dtype) -> Any:
+    if layer.kind == "mamba":
+        return ssm_lib.ssm_init_cache(cfg, batch, dtype)
+    hd, KV = cfg.resolved_head_dim, cfg.num_kv_heads
+    if layer.window is not None and layer.window < max_seq:
+        s_buf = layer.window  # ring buffer: 524k context -> `window` slots
+    else:
+        s_buf = max_seq
+    z = jnp.zeros((batch, s_buf, KV, hd), dtype)
+    return AttnCache(z, z)
+
+
+# ---------------------------------------------------------------------------
+# Scanned stage stack.
+# ---------------------------------------------------------------------------
+
+
+def stage_spec(cfg: ModelConfig, layout: tuple[LayerSpec, ...], periods: int) -> dict:
+    period = {f"pos{i}": block_spec(cfg, l) for i, l in enumerate(layout)}
+    return stack_specs(period, periods)
+
+
+def stage_apply(
+    params: dict,
+    layout: tuple[LayerSpec, ...],
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    positions: jax.Array,
+    mesh: Mesh | None,
+    caches: Any = None,  # stacked over periods, or None
+    cache_len: jax.Array | None = None,
+    remat: bool = False,
+    exploit_window: bool = True,
+    prefill: bool = False,
+    seq_shard: bool = False,
+) -> tuple[jax.Array, Any, jax.Array]:
+    """Scan the stage over its periods. Returns (x, new_caches, aux_sum).
+
+    ``seq_shard=True`` pins the residual stream (and hence every scan-carry
+    activation checkpoint) to batch x sequence sharding -- Megatron-style
+    sequence parallelism. This is what makes 4k x 256 training checkpoints fit
+    HBM: the per-layer saved (B_loc, S, D) buffer shrinks by the model-axis
+    size, at the price of gather/scatter traffic around attention.
+    """
+    collect = prefill or caches is not None
+
+    def period_body(carry, scanned):
+        x, aux = carry
+        if seq_shard:
+            x = constraint(x, mesh, "batch", "seq", None)
+        p_params, p_caches = scanned
+        new_caches = {}
+        for i, layer in enumerate(layout):
+            c = None if p_caches is None else p_caches.get(f"pos{i}")
+            x, nc, a = block_apply(
+                p_params[f"pos{i}"], layer, x, cfg, positions=positions,
+                mesh=mesh, cache=c, cache_len=cache_len,
+                exploit_window=exploit_window, prefill=prefill)
+            new_caches[f"pos{i}"] = nc
+            aux = aux + a
+        if seq_shard:
+            x = constraint(x, mesh, "batch", "seq", None)
+        return (x, aux), (new_caches if collect else None)
+
+    body = jax.checkpoint(period_body) if remat else period_body
+    (x, aux), new_caches = jax.lax.scan(
+        body, (x, jnp.float32(0.0)), (params, caches))
+    return x, new_caches, aux
+
+
+def init_stage_caches(cfg: ModelConfig, layout: tuple[LayerSpec, ...],
+                      periods: int, batch: int, max_seq: int, dtype) -> Any:
+    def one_period():
+        return {f"pos{i}": init_layer_cache(cfg, l, batch, max_seq, dtype)
+                for i, l in enumerate(layout)}
+    proto = one_period()
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (periods, *a.shape)).copy()
+        if isinstance(a, jnp.ndarray) else a, proto)

@@ -1,0 +1,129 @@
+"""Shared neural layers: norms, RoPE, SwiGLU MLP, embeddings, chunked CE."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.param import ParamSpec
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm.
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_spec(dim: int, axis: str | None = None) -> dict:
+    return {"scale": ParamSpec((dim,), jnp.float32, (axis,), init="ones")}
+
+
+def rmsnorm(params: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * params["scale"].astype(jnp.float32)
+    return y.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding.
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, n_heads, head_dim); positions: broadcastable to (..., S)."""
+    head_dim = x.shape[-1]
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP.
+# ---------------------------------------------------------------------------
+
+
+def mlp_spec(cfg: ModelConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    dt = cfg.pdtype
+    return {
+        "gate": ParamSpec((d, f), dt, ("embed", "ff")),
+        "up": ParamSpec((d, f), dt, ("embed", "ff")),
+        "down": ParamSpec((f, d), dt, ("ff", "embed")),
+    }
+
+
+def mlp(params: dict, x: jax.Array) -> jax.Array:
+    dt = x.dtype
+    g = jnp.einsum("...d,df->...f", x, params["gate"].astype(dt))
+    u = jnp.einsum("...d,df->...f", x, params["up"].astype(dt))
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("...f,fd->...d", h, params["down"].astype(dt))
+
+
+# ---------------------------------------------------------------------------
+# Embedding + LM head with sequence-chunked cross entropy.
+#
+# The (B, S, V) logits tensor is never materialized: the loss scans over
+# sequence chunks, computing (B, C, V) logits, their logsumexp and the label
+# logit per chunk. This is the difference between fitting and OOMing at
+# vocab=262k, seq=4k on a 16 GB chip.
+# ---------------------------------------------------------------------------
+
+
+def embedding_spec(cfg: ModelConfig) -> dict:
+    return {"table": ParamSpec((cfg.vocab_size, cfg.d_model), cfg.pdtype,
+                               ("vocab", "embed"), scale=1.0)}
+
+
+def embed(params: dict, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    return params["table"].astype(cfg.cdtype)[tokens]
+
+
+def lm_head_spec(cfg: ModelConfig) -> dict:
+    return {"out": ParamSpec((cfg.d_model, cfg.vocab_size), cfg.pdtype,
+                             ("embed", "vocab"))}
+
+
+def logits(params: dict, h: jax.Array, cfg: ModelConfig) -> jax.Array:
+    return jnp.einsum("...d,dv->...v", h, params["out"].astype(h.dtype)).astype(jnp.float32)
+
+
+def chunked_cross_entropy(params: dict, h: jax.Array, labels: jax.Array,
+                          cfg: ModelConfig, chunk: int = 512) -> jax.Array:
+    """Mean NLL over (B, S) without materializing (B, S, V) logits."""
+    B, S, D = h.shape
+    chunk = min(chunk, S)
+    n_chunks = S // chunk
+    rem = S - n_chunks * chunk
+    w = params["out"]
+
+    def chunk_nll(hc: jax.Array, lc: jax.Array) -> jax.Array:
+        lg = jnp.einsum("bcd,dv->bcv", hc, w.astype(hc.dtype)).astype(jnp.float32)
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        picked = jnp.take_along_axis(lg, lc[..., None], axis=-1)[..., 0]
+        return jnp.sum(lse - picked)
+
+    if n_chunks > 0:
+        hs = h[:, : n_chunks * chunk].reshape(B, n_chunks, chunk, D).swapaxes(0, 1)
+        ls = labels[:, : n_chunks * chunk].reshape(B, n_chunks, chunk).swapaxes(0, 1)
+
+        def body(tot, xs):
+            hc, lc = xs
+            return tot + chunk_nll(hc, lc), None
+
+        # Remat per chunk: otherwise autodiff saves each (B, chunk, V) logits
+        # block across the scan, resurrecting the full logits tensor.
+        body = jax.checkpoint(body)
+        total, _ = jax.lax.scan(body, jnp.float32(0.0), (hs, ls))
+    else:
+        total = jnp.float32(0.0)
+    if rem:
+        total = total + chunk_nll(h[:, n_chunks * chunk:], labels[:, n_chunks * chunk:])
+    return total / (B * S)

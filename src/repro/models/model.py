@@ -1,0 +1,187 @@
+"""Top-level models: causal LM, encoder, VLM/audio wrappers.
+
+Public surface (all pure functions of (params, batch)):
+
+* ``model_spec(cfg)``         -- parameter plan (ParamSpec pytree)
+* ``train_loss(params, ...)`` -- scalar loss (chunked CE + MoE aux)
+* ``prefill(params, ...)``    -- forward + assembled decode caches
+* ``decode_step(params, ...)``-- one-token serve step against caches
+* ``init_caches(cfg, ...)``   -- empty cache pytree for a given context size
+
+Modality frontends (DESIGN: the one allowed stub): VLM batches carry
+precomputed ``patch_embeds`` and audio batches ``frame_embeds``; a learned
+linear projector stands in for the ViT/conv encoder output interface.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.models import blocks
+from repro.models.blocks import AttnCache
+from repro.models.config import LayerSpec, ModelConfig
+from repro.models.layers import (chunked_cross_entropy, embed, embedding_spec,
+                                 lm_head_spec, logits, rmsnorm, rmsnorm_spec)
+from repro.models.param import ParamSpec, constraint
+from repro.models.ssm import SsmCache
+
+
+def model_spec(cfg: ModelConfig) -> dict:
+    spec: dict[str, Any] = {}
+    if cfg.frontend == "text":
+        spec["embed"] = embedding_spec(cfg)
+    elif cfg.frontend == "vision_stub":
+        spec["embed"] = embedding_spec(cfg)  # text side of the VLM
+        spec["projector"] = {
+            "w": ParamSpec((cfg.d_model, cfg.d_model), cfg.pdtype, ("embed", None)),
+        }
+    elif cfg.frontend == "audio_stub":
+        spec["projector"] = {
+            "w": ParamSpec((cfg.d_model, cfg.d_model), cfg.pdtype, ("embed", None)),
+        }
+    for si, (layout, periods) in enumerate(cfg.stages()):
+        spec[f"stage{si}"] = blocks.stage_spec(cfg, layout, periods)
+    spec["final_norm"] = rmsnorm_spec(cfg.d_model, "embed")
+    spec["lm_head"] = lm_head_spec(cfg)
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# Input embedding per modality.
+# ---------------------------------------------------------------------------
+
+
+def _input_embeds(params: dict, batch: dict, cfg: ModelConfig,
+                  mesh: Mesh | None) -> jax.Array:
+    if cfg.frontend == "text":
+        x = embed(params["embed"], batch["tokens"], cfg)
+    elif cfg.frontend == "vision_stub":
+        text = embed(params["embed"], batch["tokens"], cfg)
+        patches = batch["patch_embeds"].astype(cfg.cdtype)
+        patches = jnp.einsum("bpd,de->bpe", patches,
+                             params["projector"]["w"].astype(cfg.cdtype))
+        x = jnp.concatenate([patches, text], axis=1)  # image tokens first
+    elif cfg.frontend == "audio_stub":
+        frames = batch["frame_embeds"].astype(cfg.cdtype)
+        x = jnp.einsum("bpd,de->bpe", frames,
+                       params["projector"]["w"].astype(cfg.cdtype))
+    else:
+        raise ValueError(cfg.frontend)
+    return constraint(x, mesh, "batch", None, None)
+
+
+def _forward_hidden(params, x, cfg, *, positions, mesh, caches=None,
+                    cache_len=None, remat=False, exploit_window=True,
+                    prefill=False, seq_shard=False):
+    aux_total = jnp.float32(0.0)
+    new_caches = []
+    for si, (layout, periods) in enumerate(cfg.stages()):
+        c = None if caches is None else caches[si]
+        x, nc, aux = blocks.stage_apply(
+            params[f"stage{si}"], layout, x, cfg, positions=positions, mesh=mesh,
+            caches=c, cache_len=cache_len, remat=remat,
+            exploit_window=exploit_window, prefill=prefill, seq_shard=seq_shard)
+        new_caches.append(nc)
+        aux_total = aux_total + aux
+    x = rmsnorm(params["final_norm"], x, cfg.rmsnorm_eps)
+    return x, new_caches, aux_total
+
+
+# ---------------------------------------------------------------------------
+# Training.
+# ---------------------------------------------------------------------------
+
+
+def train_loss(params: dict, batch: dict, cfg: ModelConfig, *,
+               mesh: Mesh | None = None, remat: bool = True,
+               exploit_window: bool = True, seq_shard: bool = False,
+               aux_weight: float = 0.01) -> jax.Array:
+    x = _input_embeds(params, batch, cfg, mesh)
+    B, S, _ = x.shape
+    positions = jnp.arange(S)[None, :].astype(jnp.int32)
+    h, _, aux = _forward_hidden(params, x, cfg, positions=positions, mesh=mesh,
+                                remat=remat, exploit_window=exploit_window,
+                                seq_shard=seq_shard)
+    if cfg.frontend == "vision_stub":
+        # Loss only on the text positions (after the patch prefix).
+        P = batch["patch_embeds"].shape[1]
+        h = h[:, P:]
+    labels = batch["labels"]
+    nll = chunked_cross_entropy(params["lm_head"], h, labels, cfg)
+    return nll + aux_weight * aux
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + single-token decode.
+# ---------------------------------------------------------------------------
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_seq: int, dtype) -> list:
+    return [blocks.init_stage_caches(cfg, layout, periods, batch, max_seq, dtype)
+            for layout, periods in cfg.stages()]
+
+
+def _assemble_attn_cache(raw_kv, layer: LayerSpec, S: int, max_seq: int) -> AttnCache:
+    """Stacked raw (k, v) (periods, B, S, KV, hd) -> decode buffers."""
+    k, v = raw_kv
+    window = layer.window
+    if window is not None and window < max_seq:
+        # Ring buffer: absolute position p lives in slot p % window.
+        W = window
+        take = min(S, W)
+        kw, vw = k[..., S - take:S, :, :], v[..., S - take:S, :, :]
+        slots = (jnp.arange(take) + (S - take)) % W
+        shape = (*k.shape[:2], W, *k.shape[3:])
+        k_buf = jnp.zeros(shape, k.dtype).at[..., slots, :, :].set(kw)
+        v_buf = jnp.zeros(shape, v.dtype).at[..., slots, :, :].set(vw)
+        return AttnCache(k_buf, v_buf)
+    pad = max_seq - S
+    k_buf = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    v_buf = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    return AttnCache(k_buf, v_buf)
+
+
+def prefill(params: dict, batch: dict, cfg: ModelConfig, *,
+            max_seq: int, mesh: Mesh | None = None,
+            exploit_window: bool = True):
+    """Run the prompt, return (last-position logits, caches, prompt_len)."""
+    x = _input_embeds(params, batch, cfg, mesh)
+    B, S, _ = x.shape
+    positions = jnp.arange(S)[None, :].astype(jnp.int32)
+    h, raw_caches, _ = _forward_hidden(
+        params, x, cfg, positions=positions, mesh=mesh, prefill=True,
+        exploit_window=exploit_window)
+
+    caches = []
+    for (layout, periods), stage_raw in zip(cfg.stages(), raw_caches):
+        stage_caches = {}
+        for i, layer in enumerate(layout):
+            raw = stage_raw[f"pos{i}"]
+            if layer.kind == "attn":
+                stage_caches[f"pos{i}"] = _assemble_attn_cache(raw, layer, S, max_seq)
+            else:
+                stage_caches[f"pos{i}"] = raw  # SsmCache already in decode form
+        caches.append(stage_caches)
+
+    last = logits(params["lm_head"], h[:, -1:], cfg)[:, 0]
+    return last, caches, S
+
+
+def decode_step(params: dict, token: jax.Array, caches: list,
+                cache_len: jax.Array, cfg: ModelConfig, *,
+                mesh: Mesh | None = None):
+    """One serve step: token (B,) int32, cache_len = prompt+generated count
+    (including this token). Returns (logits (B, V), new caches)."""
+    if cfg.frontend == "audio_stub":
+        raise ValueError("encoder-only model has no decode step")
+    x = embed(params["embed"], token[:, None], cfg)
+    x = constraint(x, mesh, "batch", None, None)
+    positions = (cache_len - 1) * jnp.ones((x.shape[0], 1), jnp.int32)
+    h, new_caches, _ = _forward_hidden(params, x, cfg, positions=positions,
+                                       mesh=mesh, caches=caches,
+                                       cache_len=cache_len)
+    return logits(params["lm_head"], h[:, -1:], cfg)[:, 0], new_caches

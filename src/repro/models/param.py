@@ -1,0 +1,199 @@
+"""Parameter plans: shapes + logical axes declared separately from values.
+
+Every module declares its parameters as a pytree of :class:`ParamSpec`
+(shape, dtype, logical axis names, initializer). The plan can then be
+
+* ``materialize``d into real arrays (training / smoke tests),
+* turned into ``abstract`` ShapeDtypeStructs (multi-pod dry-run -- no bytes
+  are ever allocated for the 398B configs), and
+* resolved into ``NamedSharding``s through a logical-axis -> mesh-axis rule
+  table (the MaxText-style indirection that keeps model code mesh-agnostic).
+
+Sharding safety: jax 0.8 rejects uneven shardings, so a logical axis is only
+mapped onto a mesh axis when the dimension divides the axis size; otherwise it
+silently replicates (recorded by ``explain_sharding`` for DESIGN notes).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+# Default logical-axis -> mesh-axis rules for the production mesh.
+# "batch"-like axes go to data parallel dims; big weight dims go to "model".
+DEFAULT_RULES: dict[str, str | tuple[str, ...] | None] = {
+    "batch": ("pod", "data"),
+    "seq": "model",  # sequence-parallel residual stream (activations)
+    "seq_shard": "model",  # sequence-sharded KV caches (decode)
+    "vocab": "model",
+    "ff": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "experts": "model",
+    "ssm_inner": "model",
+    "ssm_heads": "model",
+}
+
+
+# Active rule table. Sharding *profiles* (launch/steps.py) swap this during
+# tracing via rule_scope(); model code always consults the active table, so
+# the same model definition lowers under tensor-parallel or pure-DP layouts.
+_ACTIVE_RULES: list[dict] = [DEFAULT_RULES]
+
+
+def get_active_rules() -> dict:
+    return _ACTIVE_RULES[-1]
+
+
+class rule_scope:
+    """Context manager: override the logical-axis rules while tracing."""
+
+    def __init__(self, rules: dict | None):
+        self.rules = DEFAULT_RULES if rules is None else rules
+
+    def __enter__(self):
+        _ACTIVE_RULES.append(self.rules)
+        return self.rules
+
+    def __exit__(self, *exc):
+        _ACTIVE_RULES.pop()
+        return False
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    dtype: Any
+    axes: tuple[str | None, ...]  # logical axis name per dim (None = anonymous)
+    init: str = "normal"  # "normal" | "zeros" | "ones" | "scaled"
+    scale: float | None = None  # stddev override; None -> 1/sqrt(fan_in)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+    def abstract(self) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(self.shape, self.dtype)
+
+    def materialize(self, key: jax.Array) -> jax.Array:
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, self.dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, self.dtype)
+        fan_in = self.shape[0] if len(self.shape) > 1 else max(self.shape[-1], 1)
+        std = self.scale if self.scale is not None else 1.0 / math.sqrt(fan_in)
+        return (jax.random.normal(key, self.shape, jnp.float32) * std).astype(self.dtype)
+
+
+def stack_specs(spec: PyTree, num: int) -> PyTree:
+    """Prepend a scanned ``layers`` axis of size ``num`` to every leaf."""
+    def f(s: ParamSpec) -> ParamSpec:
+        return ParamSpec((num, *s.shape), s.dtype, ("layers", *s.axes), s.init, s.scale)
+    return jax.tree.map(f, spec, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def tree_abstract(spec: PyTree) -> PyTree:
+    return jax.tree.map(lambda s: s.abstract(), spec,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def tree_materialize(spec: PyTree, key: jax.Array) -> PyTree:
+    leaves, treedef = jax.tree.flatten(spec, is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(key, len(leaves))
+    vals = [s.materialize(k) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def _resolve_axis(name: str | None, dim: int, mesh: Mesh,
+                  rules: dict[str, Any]) -> str | tuple[str, ...] | None:
+    if name is None:
+        return None
+    target = rules.get(name)
+    if target is None:
+        return None
+    axes = (target,) if isinstance(target, str) else tuple(target)
+    axes = tuple(a for a in axes if a in mesh.shape)
+    if not axes:
+        return None
+    total = int(np.prod([mesh.shape[a] for a in axes]))
+    if dim % total != 0:
+        return None  # uneven -> replicate (jax 0.8 requires divisibility)
+    return axes if len(axes) > 1 else axes[0]
+
+
+def spec_to_pspec(s: ParamSpec, mesh: Mesh, rules: dict[str, Any] | None = None) -> P:
+    rules = DEFAULT_RULES if rules is None else rules
+    return P(*(_resolve_axis(a, dim, mesh, rules) for a, dim in zip(s.axes, s.shape)))
+
+
+def tree_pspecs(spec: PyTree, mesh: Mesh, rules: dict[str, Any] | None = None) -> PyTree:
+    return jax.tree.map(lambda s: spec_to_pspec(s, mesh, rules), spec,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def tree_shardings(spec: PyTree, mesh: Mesh, rules: dict[str, Any] | None = None) -> PyTree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, spec_to_pspec(s, mesh, rules)),
+                        spec, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def explain_sharding(spec: PyTree, mesh: Mesh, rules: dict[str, Any] | None = None) -> list[str]:
+    """Human-readable list of which params replicated due to indivisibility."""
+    out: list[str] = []
+    flat, _ = jax.tree.flatten_with_path(spec, is_leaf=lambda x: isinstance(x, ParamSpec))
+    rules = DEFAULT_RULES if rules is None else rules
+    for path, s in flat:
+        for a, dim in zip(s.axes, s.shape):
+            if a is not None and rules.get(a) is not None:
+                if _resolve_axis(a, dim, mesh, rules) is None:
+                    out.append(f"{jax.tree_util.keystr(path)}: axis {a!r} dim {dim} "
+                               f"not divisible -> replicated")
+    return out
+
+
+def num_params(spec: PyTree) -> int:
+    leaves = jax.tree.leaves(spec, is_leaf=lambda x: isinstance(x, ParamSpec))
+    return sum(int(np.prod(s.shape)) for s in leaves)
+
+
+def constraint(x: jax.Array, mesh: Mesh | None, *axes: str | tuple[str, ...] | None,
+               rules: dict[str, Any] | None = None) -> jax.Array:
+    """with_sharding_constraint on *logical* axis names.
+
+    Names are translated through the rule table (e.g. "batch" ->
+    ("pod", "data"), "heads" -> "model"); names not in the table are taken as
+    literal mesh axes. Axes absent from the mesh and indivisible dims resolve
+    to None (so the same model code runs on a 1-device CPU mesh), and an
+    unsharded name NEVER forces replication of a dim some other pass sharded
+    -- we only constrain dims we positively resolve.
+    """
+    if mesh is None:
+        return x
+    rules = get_active_rules() if rules is None else rules
+    resolved = []
+    any_set = False
+    for dim, a in zip(x.shape, axes):
+        if a is None:
+            resolved.append(None)
+            continue
+        target = rules.get(a, a) if isinstance(a, str) else a
+        if target is None:
+            resolved.append(None)
+            continue
+        cand = (target,) if isinstance(target, str) else tuple(target)
+        cand = tuple(c for c in cand if c in mesh.shape)
+        total = int(np.prod([mesh.shape[c] for c in cand])) if cand else 0
+        if cand and total and dim % total == 0:
+            resolved.append(cand if len(cand) > 1 else cand[0])
+            any_set = True
+        else:
+            resolved.append(None)
+    if not any_set:
+        return x  # nothing resolvable: don't force full replication
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*resolved)))

@@ -1,0 +1,203 @@
+"""Mamba2 (SSD, state-space duality) layer: chunked prefill + O(1) decode.
+
+Follows arXiv:2405.21060: per head h with scalar decay ``a_t = exp(dt_t * A_h)``
+and state ``h_t = a_t h_{t-1} + (dt_t x_t) B_t^T`` (state is head_dim x N),
+output ``y_t = C_t h_t + D_h x_t``, gated ``RMSNorm(y * silu(z))``, out-proj.
+
+Training/prefill uses the *chunked* SSD form: within a chunk of length Q the
+quadratic "attention" view computes intra-chunk terms,
+
+    scores[t, s] = (C_t . B_s) * exp(L_t - L_s) * dt_s,   s <= t,
+    L_t = cumsum(log a)_t  (inclusive),
+
+and a lax.scan over chunks carries the (B, H, P, N) inter-chunk state -- so
+the compiled cost is O(S Q) + O(S N P / Q), never O(S^2). Decode is the plain
+one-step recurrence on (conv_state, ssm_state).
+
+TPU adaptation notes: the chunk length is the MXU tiling knob (default 256,
+lane-aligned); the scan keeps HLO size O(1) in sequence length; B/C share one
+group (ngroups=1) as in the released mamba2 configs.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.models.config import ModelConfig
+from repro.models.layers import rmsnorm
+from repro.models.param import ParamSpec, constraint
+
+
+class SsmCache(NamedTuple):
+    conv: jax.Array  # (B, W-1, conv_channels) rolling conv input window
+    state: jax.Array  # (B, H, P, N) SSD state
+
+
+def _conv_channels(cfg: ModelConfig) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_state
+
+
+def ssm_spec(cfg: ModelConfig) -> dict:
+    D, DI, N, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    W, CC = cfg.ssm_conv_width, _conv_channels(cfg)
+    dt = cfg.pdtype
+    return {
+        "wz": ParamSpec((D, DI), dt, ("embed", "ssm_inner")),
+        "wx": ParamSpec((D, DI), dt, ("embed", "ssm_inner")),
+        "wB": ParamSpec((D, N), dt, ("embed", None)),
+        "wC": ParamSpec((D, N), dt, ("embed", None)),
+        "wdt": ParamSpec((D, H), dt, ("embed", "ssm_heads")),
+        "dt_bias": ParamSpec((H,), jnp.float32, ("ssm_heads",), init="zeros"),
+        "A_log": ParamSpec((H,), jnp.float32, ("ssm_heads",), init="zeros"),
+        "D_skip": ParamSpec((H,), jnp.float32, ("ssm_heads",), init="ones"),
+        "conv_w": ParamSpec((W, CC), jnp.float32, (None, None), scale=0.5),
+        "conv_b": ParamSpec((CC,), jnp.float32, (None,), init="zeros"),
+        "norm": {"scale": ParamSpec((DI,), jnp.float32, ("ssm_inner",), init="ones")},
+        "wout": ParamSpec((DI, D), dt, ("ssm_inner", "embed")),
+    }
+
+
+def _causal_depthwise_conv(u: jax.Array, w: jax.Array, b: jax.Array,
+                           init: jax.Array | None = None) -> jax.Array:
+    """u (B,S,C), w (W,C) -> causal depthwise conv; ``init`` prepends history."""
+    W = w.shape[0]
+    if init is None:
+        up = jnp.pad(u, ((0, 0), (W - 1, 0), (0, 0)))
+    else:
+        up = jnp.concatenate([init.astype(u.dtype), u], axis=1)
+    out = sum(up[:, i : i + u.shape[1]] * w[i][None, None, :] for i in range(W))
+    return jax.nn.silu(out + b[None, None, :].astype(u.dtype))
+
+
+def _project(params: dict, x: jax.Array, cfg: ModelConfig):
+    """Returns z (B,S,DI), conv input u (B,S,CC), dt (B,S,H)."""
+    dt_ = x.dtype
+    z = jnp.einsum("bsd,de->bse", x, params["wz"].astype(dt_))
+    xin = jnp.einsum("bsd,de->bse", x, params["wx"].astype(dt_))
+    Bp = jnp.einsum("bsd,dn->bsn", x, params["wB"].astype(dt_))
+    Cp = jnp.einsum("bsd,dn->bsn", x, params["wC"].astype(dt_))
+    dt_raw = jnp.einsum("bsd,dh->bsh", x, params["wdt"].astype(dt_))
+    dt_val = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    u = jnp.concatenate([xin, Bp, Cp], axis=-1)
+    return z, u, dt_val
+
+
+def _split_conv(u: jax.Array, cfg: ModelConfig):
+    DI, N = cfg.d_inner, cfg.ssm_state
+    return u[..., :DI], u[..., DI : DI + N], u[..., DI + N :]
+
+
+def ssm_forward(params: dict, x: jax.Array, cfg: ModelConfig,
+                mesh: Mesh | None = None, *, return_cache: bool = False):
+    """Chunked SSD over a full sequence. x (B,S,D) -> (B,S,D).
+
+    ``return_cache=True`` (prefill) additionally returns the SsmCache (conv
+    tail + final SSD state) so decoding can continue from position S."""
+    B, S, D = x.shape
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    Q = min(cfg.ssm_chunk, S)
+    nc = -(-S // Q)
+    Sp = nc * Q
+
+    z, u, dt_val = _project(params, x, cfg)
+    u_conv = _causal_depthwise_conv(u, params["conv_w"], params["conv_b"])
+    xs, Bs, Cs = _split_conv(u_conv, cfg)
+    xs = constraint(xs, mesh, "batch", None, "ssm_inner")
+
+    if Sp != S:
+        pad = ((0, 0), (0, Sp - S), (0, 0))
+        xs, Bs, Cs = jnp.pad(xs, pad), jnp.pad(Bs, pad), jnp.pad(Cs, pad)
+        dt_val = jnp.pad(dt_val, pad)  # softplus(0+bias) irrelevant: masked by dt=0
+
+    A = -jnp.exp(params["A_log"])  # (H,) negative decay rates
+    xh = xs.reshape(B, nc, Q, H, P).astype(jnp.float32)
+    Bc = Bs.reshape(B, nc, Q, N).astype(jnp.float32)
+    Cc = Cs.reshape(B, nc, Q, N).astype(jnp.float32)
+    dtc = dt_val.reshape(B, nc, Q, H)
+
+    loga = dtc * A[None, None, None, :]  # (B,nc,Q,H) log decay per step
+    L = jnp.cumsum(loga, axis=2)  # inclusive cumsum within chunk
+
+    # Move chunk axis first for the scan.
+    xh, Bc, Cc, dtc, loga, L = (jnp.moveaxis(t, 1, 0) for t in (xh, Bc, Cc, dtc, loga, L))
+
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+
+    def chunk_body(h, inp):
+        xq, Bq, Cq, dtq, logaq, Lq = inp  # each (B, Q, ...)
+        # Intra-chunk (quadratic within the chunk only).
+        cb = jnp.einsum("bqn,bsn->bqs", Cq, Bq)  # (B,Q,Q)
+        # L_t - L_s <= 0 exactly on the valid (s <= t) triangle; clamping at 0
+        # kills the +inf exp on the masked triangle that would otherwise leak
+        # NaN through the where() in the backward pass.
+        decay = jnp.exp(jnp.minimum(Lq[:, :, None, :] - Lq[:, None, :, :], 0.0))
+        w = jnp.where(tri[None, :, :, None], decay, 0.0) * dtq[:, None, :, :]
+        scores = cb[..., None] * w  # (B,Q,Q,H)
+        y_intra = jnp.einsum("bqsh,bshp->bqhp", scores, xq)
+        # Inter-chunk contribution of the carried state.
+        y_inter = jnp.einsum("bqn,bqh,bhpn->bqhp", Cq, jnp.exp(Lq), h)
+        # State carried to the end of the chunk.
+        total = Lq[:, -1:, :]  # (B,1,H)
+        w_state = jnp.exp(total - Lq) * dtq  # (B,Q,H): decay from s to chunk end
+        h_new = (jnp.exp(total[:, 0])[:, :, None, None] * h
+                 + jnp.einsum("bqh,bqhp,bqn->bhpn", w_state, xq, Bq))
+        return h_new, y_intra + y_inter
+
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    h_final, ys = jax.lax.scan(chunk_body, h0, (xh, Bc, Cc, dtc, loga, L))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, Sp, H, P)[:, :S]
+    x_skip = jnp.moveaxis(xh, 0, 1).reshape(B, Sp, H, P)[:, :S]
+    y = y + params["D_skip"][None, None, :, None] * x_skip
+    y = y.reshape(B, S, H * P).astype(x.dtype)
+
+    out = rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.rmsnorm_eps)
+    out = jnp.einsum("bse,ed->bsd", out, params["wout"].astype(x.dtype))
+    if not return_cache:
+        return out
+    W = cfg.ssm_conv_width
+    u_raw = jnp.concatenate(
+        [jnp.zeros((B, max(0, W - 1 - S), u.shape[-1]), u.dtype),
+         u[:, max(0, S - (W - 1)):S]], axis=1)
+    return out, SsmCache(conv=u_raw, state=h_final)
+
+
+def ssm_init_cache(cfg: ModelConfig, batch: int, dtype) -> SsmCache:
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    return SsmCache(
+        conv=jnp.zeros((batch, cfg.ssm_conv_width - 1, _conv_channels(cfg)), dtype),
+        state=jnp.zeros((batch, H, P, N), jnp.float32),
+    )
+
+
+def ssm_decode_step(params: dict, x: jax.Array, cache: SsmCache, cfg: ModelConfig,
+                    mesh: Mesh | None = None) -> tuple[jax.Array, SsmCache]:
+    """One-token step. x (B,1,D) -> (y (B,1,D), new cache)."""
+    B, S, D = x.shape
+    assert S == 1
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+
+    z, u, dt_val = _project(params, x, cfg)
+    u_conv = _causal_depthwise_conv(u, params["conv_w"], params["conv_b"],
+                                    init=cache.conv)
+    new_conv = jnp.concatenate([cache.conv[:, 1:], u.astype(cache.conv.dtype)], axis=1)
+    xs, Bs, Cs = _split_conv(u_conv, cfg)
+
+    A = -jnp.exp(params["A_log"])
+    a = jnp.exp(dt_val[:, 0] * A[None, :])  # (B,H)
+    xh = xs.reshape(B, H, P).astype(jnp.float32)
+    Bv = Bs[:, 0].astype(jnp.float32)  # (B,N)
+    Cv = Cs[:, 0].astype(jnp.float32)
+
+    inc = jnp.einsum("bh,bhp,bn->bhpn", dt_val[:, 0], xh, Bv)
+    h_new = a[:, :, None, None] * cache.state + inc
+    y = jnp.einsum("bn,bhpn->bhp", Cv, h_new)
+    y = y + params["D_skip"][None, :, None] * xh
+    y = y.reshape(B, 1, H * P).astype(x.dtype)
+
+    out = rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.rmsnorm_eps)
+    out = jnp.einsum("bse,ed->bsd", out, params["wout"].astype(x.dtype))
+    return out, SsmCache(conv=new_conv, state=h_new)

@@ -1,0 +1,101 @@
+"""Self-contained optimizers (no optax in this container): SGD(+momentum),
+AdamW, cosine/linear schedules. State is a plain pytree mirroring params so
+the sharding rules that apply to params apply verbatim to optimizer state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"  # "adamw" | "sgd"
+    learning_rate: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"  # "cosine" | "linear" | "constant"
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    momentum: float = 0.9
+    grad_clip: float = 1.0
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: PyTree  # first moment / momentum
+    nu: PyTree | None  # second moment (adamw only)
+
+
+def lr_at(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    frac = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    if cfg.schedule == "cosine":
+        decay = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    elif cfg.schedule == "linear":
+        decay = 1.0 - frac
+    else:
+        decay = jnp.float32(1.0)
+    return cfg.learning_rate * warm * decay
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> tuple[PyTree, jax.Array]:
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), gnorm
+
+
+def init_state(cfg: OptimizerConfig, params: PyTree) -> OptState:
+    zeros = lambda: jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    if cfg.name == "adamw":
+        return OptState(jnp.zeros((), jnp.int32), zeros(), zeros())
+    if cfg.name == "sgd":
+        return OptState(jnp.zeros((), jnp.int32), zeros(), None)
+    raise ValueError(cfg.name)
+
+
+def apply_update(cfg: OptimizerConfig, params: PyTree, grads: PyTree,
+                 state: OptState) -> tuple[PyTree, OptState, dict]:
+    """One optimizer step; grads may be any pytree matching params."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state.step + 1
+    lr = lr_at(cfg, step)
+
+    if cfg.name == "sgd":
+        mu = jax.tree.map(lambda m, g: cfg.momentum * m + g.astype(jnp.float32),
+                          state.mu, grads)
+        new_params = jax.tree.map(
+            lambda p, m: (p.astype(jnp.float32) - lr * (m + cfg.weight_decay
+                          * p.astype(jnp.float32))).astype(p.dtype), params, mu)
+        return new_params, OptState(step, mu, None), {"lr": lr, "grad_norm": gnorm}
+
+    if cfg.name == "adamw":
+        b1, b2 = cfg.beta1, cfg.beta2
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                          state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2)
+                          * jnp.square(g.astype(jnp.float32)), state.nu, grads)
+        t = step.astype(jnp.float32)
+        c1, c2 = 1 - b1**t, 1 - b2**t
+
+        def upd(p, m, v):
+            mh, vh = m / c1, v / c2
+            delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        return new_params, OptState(step, mu, nu), {"lr": lr, "grad_norm": gnorm}
+
+    raise ValueError(cfg.name)

@@ -1,0 +1,145 @@
+"""ACPD system behaviour: the paper's claims at test scale.
+
+These are the qualitative claims of Sec. V on a synthetic RCV1-like problem:
+  1. ACPD converges to the same optimum as the synchronous methods.
+  2. Per communication ROUND it tracks CoCoA+ (Fig. 3 cols 1-2).
+  3. Per simulated WALL-CLOCK it beats CoCoA+, dramatically so under a
+     sigma=10 straggler (Fig. 3 cols 3-4).
+  4. On-wire bytes shrink by ~rho vs dense (Table I).
+  5. The ablations order as in the paper: full ACPD fastest, B=K (no
+     group-wise) and rho=1 (no sparsity) in between, CoCoA+ slowest.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import baselines
+from repro.core.acpd import run_method
+from repro.core.simulate import ClusterModel
+
+K, D = 4, 512
+
+
+def _run(problem, method, *, sigma=1.0, outer=8, T=10):
+    cluster = ClusterModel(num_workers=K, straggler_sigma=sigma)
+    n_iter = outer * T if method.protocol == "group" else outer * T
+    return run_method(problem, method, cluster,
+                      num_outer=outer if method.protocol == "group" else n_iter,
+                      eval_every=2, seed=11)
+
+
+@pytest.fixture(scope="module")
+def runs(small_problem):
+    methods = {
+        "cocoa+": baselines.cocoa_plus(K, H=384),
+        "acpd": baselines.acpd(K, D, B=2, T=10, rho_d=32, gamma=0.5, H=384),
+        "acpd_bK": baselines.acpd_full_barrier(K, D, T=10, rho_d=32,
+                                               gamma=0.5, H=384),
+        "acpd_rho1": baselines.acpd_dense(K, B=2, T=10, gamma=0.5, H=384),
+    }
+    return {name: _run(small_problem, m) for name, m in methods.items()}
+
+
+def test_all_methods_converge(runs):
+    # the sparse-tail slowdown below 1e-4 is expected (paper Fig. 4a)
+    for name, res in runs.items():
+        assert res.records[-1].gap < 1e-3, (name, res.records[-1].gap)
+
+
+def test_gap_monotone_trend(runs):
+    """Duality gap should broadly decrease (allow small stochastic bumps)."""
+    for name, res in runs.items():
+        gaps = np.array([r.gap for r in res.records])
+        assert gaps[-1] < gaps[0] * 1e-1, name
+
+
+def test_bandwidth_reduction(runs):
+    """ACPD moves far fewer bytes than the dense group-wise ablation."""
+    sparse = runs["acpd"].records[-1].bytes_up
+    dense = runs["acpd_rho1"].records[-1].bytes_up
+    assert sparse < dense / 5
+
+
+def test_acpd_faster_than_cocoa_plus_with_straggler(small_problem):
+    """Paper's headline: up to ~4x faster under stragglers (sigma=10)."""
+    target = 1e-3
+    acpd = run_method(small_problem,
+                      baselines.acpd(K, D, B=2, T=10, rho_d=64, gamma=0.5, H=384),
+                      ClusterModel(num_workers=K, straggler_sigma=10.0),
+                      num_outer=8, eval_every=2, seed=3)
+    cocoa = run_method(small_problem, baselines.cocoa_plus(K, H=384),
+                       ClusterModel(num_workers=K, straggler_sigma=10.0),
+                       num_outer=80, eval_every=2, seed=3)
+    t_acpd = acpd.time_to_gap(target)
+    t_cocoa = cocoa.time_to_gap(target)
+    assert t_acpd is not None and t_cocoa is not None
+    assert t_acpd < t_cocoa, (t_acpd, t_cocoa)
+    # Analytic ceiling at this scale: CoCoA+ waits sigma*c every round; ACPD
+    # (B=2of4, T=10) only on sync rounds -> ~5x/round, ~2.4x more rounds ->
+    # net ~2x. The paper's 4x additionally needs comm-dominant d (Fig. 5).
+    assert t_cocoa / t_acpd > 1.5
+
+
+def test_exact_dual_feedback_maintains_primal_dual_relation():
+    """Alg. 2 lines 10-12 (theory variant): with the dual put-back, the
+    server model equals (1/lam n) A alpha at every evaluation -- the invariant
+    Lemma 1's analysis relies on. Needs n_k >= d so the unsent mass lies in
+    col(A_[k])."""
+    import dataclasses as _dc
+
+    import jax.numpy as jnp
+
+    from repro.core.objectives import primal_from_dual
+    from repro.data.synthetic import LinearDatasetSpec, make_linear_problem
+
+    prob = make_linear_problem(
+        LinearDatasetSpec(num_workers=2, n_per_worker=96, d=64,
+                          nnz_per_row=16, seed=33), lam=1e-2)
+    m = baselines.acpd(2, 64, B=1, T=5, rho_d=8, gamma=0.5, H=128)
+    m = _dc.replace(m, exact_dual_feedback=True)
+    res = run_method(prob, m, ClusterModel(num_workers=2), num_outer=4,
+                     eval_every=1, seed=0)
+    # reconstruct w(alpha) from the server-visible duals (worker-canonical
+    # alpha leads the server by the in-flight messages, so use alpha_applied)
+    w_alpha = primal_from_dual(jnp.asarray(res.alpha_applied), prob.X, prob.lam)
+    err = float(jnp.max(jnp.abs(w_alpha - jnp.asarray(res.w))))
+    assert err < 5e-4, err
+    # and the practical variant must violate it (that's the simplification)
+    res2 = run_method(prob, baselines.acpd(2, 64, B=1, T=5, rho_d=8,
+                                           gamma=0.5, H=128),
+                      ClusterModel(num_workers=2), num_outer=4, eval_every=1,
+                      seed=0)
+    w2 = primal_from_dual(jnp.asarray(res2.alpha_applied), prob.X, prob.lam)
+    err2 = float(jnp.max(jnp.abs(w2 - jnp.asarray(res2.w))))
+    assert err2 > 10 * max(err, 1e-6), (err, err2)
+
+
+def test_staleness_bounded_by_T(small_problem):
+    """Every worker is collected at the T-boundary: after any full sync, all
+    workers' applied duals are fresh -- proxy: gap_server ~ gap."""
+    res = run_method(small_problem,
+                     baselines.acpd(K, D, B=2, T=5, rho_d=64, gamma=0.5, H=256),
+                     ClusterModel(num_workers=K, straggler_sigma=5.0),
+                     num_outer=6, eval_every=1, seed=5)
+    # server-model gap must track the dual-certified gap within a constant
+    g = np.array([r.gap for r in res.records[5:]])
+    gs = np.array([r.gap_server for r in res.records[5:]])
+    assert np.all(gs < 10 * g + 1e-4)
+
+
+def test_round_for_round_parity_with_cocoa_plus(small_problem):
+    """Fig. 3 cols 1-2: sigma=1, ACPD needs at most ~2x the rounds of CoCoA+
+    to reach a mid accuracy (group-wise updates carry B/K of the info)."""
+    target = 1e-3
+    acpd = run_method(small_problem,
+                      baselines.acpd(K, D, B=2, T=10, rho_d=64, gamma=0.5, H=384),
+                      ClusterModel(num_workers=K), num_outer=10, eval_every=1,
+                      seed=7)
+    cocoa = run_method(small_problem, baselines.cocoa_plus(K, H=384),
+                       ClusterModel(num_workers=K), num_outer=100,
+                       eval_every=1, seed=7)
+    r_acpd = acpd.rounds_to_gap(target)
+    r_cocoa = cocoa.rounds_to_gap(target)
+    assert r_acpd is not None and r_cocoa is not None
+    # each ACPD round applies B=K/2 workers' updates -> allow 3x rounds
+    assert r_acpd <= 3 * r_cocoa

@@ -1,0 +1,100 @@
+"""The assignment table, verbatim: every architecture's numbers must match."""
+
+import pytest
+
+from repro.configs import (ARCH_IDS, INPUT_SHAPES, get_config, input_specs,
+                           shape_supported)
+
+TABLE = {
+    # arch: (layers, d_model, heads, kv, d_ff, vocab)
+    "pixtral-12b": (40, 5120, 32, 8, 14336, 131072),
+    "qwen3-moe-30b-a3b": (48, 2048, 32, 4, 768, 151936),
+    "jamba-1.5-large-398b": (72, 8192, 64, 8, 24576, 65536),
+    "mamba2-780m": (48, 1536, 1, 1, 0, 50280),
+    "qwen3-moe-235b-a22b": (94, 4096, 64, 4, 1536, 151936),
+    "hubert-xlarge": (48, 1280, 16, 16, 5120, 504),
+    "qwen3-14b": (40, 5120, 40, 8, 17408, 151936),
+    "phi3-medium-14b": (40, 5120, 40, 10, 17920, 100352),
+    "gemma3-27b": (62, 5376, 32, 16, 21504, 262144),
+    "codeqwen1.5-7b": (32, 4096, 32, 32, 13440, 92416),
+}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_exact_assignment_numbers(arch):
+    cfg = get_config(arch)
+    L, d, h, kv, ff, v = TABLE[arch]
+    assert cfg.num_layers == L
+    assert cfg.d_model == d
+    assert cfg.num_heads == h
+    assert cfg.num_kv_heads == kv
+    assert cfg.d_ff == ff
+    assert cfg.vocab_size == v
+    assert cfg.source  # every config cites its source
+
+
+def test_family_specifics():
+    q30 = get_config("qwen3-moe-30b-a3b")
+    assert q30.num_experts == 128 and q30.experts_per_token == 8
+    q235 = get_config("qwen3-moe-235b-a22b")
+    assert q235.num_experts == 128 and q235.experts_per_token == 8
+    jam = get_config("jamba-1.5-large-398b")
+    assert jam.num_experts == 16 and jam.experts_per_token == 2
+    kinds = [l.kind for l in jam.layout]
+    assert kinds.count("attn") == 1 and kinds.count("mamba") == 7
+    m2 = get_config("mamba2-780m")
+    assert m2.ssm_state == 128 and m2.layout[0].kind == "mamba"
+    g3 = get_config("gemma3-27b")
+    windows = [l.window for l in g3.layout]
+    assert windows == [1024] * 5 + [None]  # 5:1 local:global
+    hb = get_config("hubert-xlarge")
+    assert hb.causal is False and hb.frontend == "audio_stub"
+    px = get_config("pixtral-12b")
+    assert px.frontend == "vision_stub"
+
+
+def test_stage_layer_counts():
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        total = sum(len(layout) * periods for layout, periods in cfg.stages())
+        assert total == cfg.num_layers, arch
+
+
+def test_skip_table_matches_design():
+    """DESIGN §5: exactly 8 skipped (arch, shape) pairs."""
+    skips = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in INPUT_SHAPES.values():
+            ok, why = shape_supported(cfg, shape)
+            if not ok:
+                skips.append((arch, shape.name, why))
+    names = {(a, s) for a, s, _ in skips}
+    assert ("hubert-xlarge", "decode_32k") in names
+    assert ("hubert-xlarge", "long_500k") in names
+    long_runners = {a for a in ARCH_IDS
+                    if (a, "long_500k") not in names}
+    assert long_runners == {"mamba2-780m", "jamba-1.5-large-398b",
+                            "gemma3-27b"}
+    assert len(skips) == 8
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_input_specs_shapes(arch):
+    cfg = get_config(arch)
+    for shape in INPUT_SHAPES.values():
+        ok, _ = shape_supported(cfg, shape)
+        if not ok:
+            continue
+        specs = input_specs(cfg, shape)
+        if shape.kind in ("train", "prefill"):
+            batch = specs["batch"]
+            lead = next(iter(batch.values())).shape[0]
+            assert lead == shape.global_batch
+            total_seq = sum(
+                v.shape[1] for k, v in batch.items()
+                if k in ("tokens", "patch_embeds", "frame_embeds"))
+            assert total_seq == shape.seq_len
+        else:
+            assert specs["token"].shape == (shape.global_batch,)
+            assert specs["caches"]  # non-empty cache pytree

@@ -1,0 +1,93 @@
+"""GroupedDeltaExchange invariants (the deep-net ACPD integration)."""
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import exchange as ex
+
+
+def _grads(key, G, shapes):
+    ks = jax.random.split(key, len(shapes))
+    return {f"p{i}": jax.random.normal(k, (G, *s))
+            for i, (k, s) in enumerate(zip(ks, shapes))}
+
+
+def test_dense_config_equals_mean_gradient():
+    """B=K, rho=1, gamma=1 must reproduce plain data-parallel averaging."""
+    G = 4
+    cfg = ex.dense_config(G)
+    grads = _grads(jax.random.key(0), G, [(64,), (8, 16)])
+    params = {k: jnp.zeros(v.shape[1:]) for k, v in grads.items()}
+    state = ex.init_state(cfg, params)
+    update, new_state, metrics = ex.exchange(cfg, grads, state, jnp.int32(0))
+    for k in grads:
+        np.testing.assert_allclose(np.asarray(update[k]),
+                                   np.asarray(jnp.mean(grads[k], axis=0)),
+                                   rtol=1e-6, atol=1e-7)
+        assert float(jnp.abs(new_state.residual[k]).max()) == 0.0
+
+
+def test_error_feedback_conservation():
+    """gamma^-1 * B * update + sum(residual_new) == sum(residual_old + grads)
+    over participating groups; skipped groups accumulate untouched."""
+    G, B = 8, 3
+    cfg = ex.ExchangeConfig(num_groups=G, group_size=B, sync_period=1000,
+                            rho=0.1, gamma=0.7, min_leaf_size=8)
+    grads = _grads(jax.random.key(1), G, [(4096,)])
+    params = {"p0": jnp.zeros(4096)}
+    state = ex.init_state(cfg, params)
+    state = ex.ExchangeState(residual=jax.tree.map(
+        lambda r: r + 0.1, state.residual))  # nonzero starting residual
+    step = jnp.int32(3)
+    update, new_state, _ = ex.exchange(cfg, grads, state, step)
+    p = np.asarray(ex.participation(cfg, step))
+    dw = np.asarray(state.residual["p0"]) + np.asarray(grads["p0"])
+    # conservation: participating groups' (sent + residual) == dw
+    sent_total = np.asarray(update["p0"]) * p.sum() / cfg.gamma
+    res_new = np.asarray(new_state.residual["p0"])
+    recon = sent_total + (res_new * p[:, None]).sum(0)
+    np.testing.assert_allclose(recon, (dw * p[:, None]).sum(0), rtol=1e-4,
+                               atol=1e-5)
+    # skipped groups keep accumulating exactly
+    for g in range(G):
+        if p[g] == 0:
+            np.testing.assert_allclose(res_new[g], dw[g], rtol=1e-6, atol=1e-7)
+
+
+def test_participation_covers_all_groups():
+    cfg = ex.ExchangeConfig(num_groups=8, group_size=3, sync_period=100)
+    seen = np.zeros(8, bool)
+    for t in range(8):
+        seen |= np.asarray(ex.participation(cfg, jnp.int32(t))) > 0
+    assert seen.all()
+
+
+def test_dense_sync_every_T():
+    cfg = ex.ExchangeConfig(num_groups=4, group_size=1, sync_period=5, rho=0.01)
+    grads = _grads(jax.random.key(2), 4, [(512,)])
+    params = {"p0": jnp.zeros(512)}
+    state = ex.init_state(cfg, params)
+    _, state, m0 = ex.exchange(cfg, grads, state, jnp.int32(0))
+    assert float(m0["exchange/dense_step"]) == 0.0
+    _, state, m4 = ex.exchange(cfg, grads, state, jnp.int32(4))
+    assert float(m4["exchange/dense_step"]) == 1.0
+    # after a dense step every residual is flushed
+    assert float(jnp.abs(state.residual["p0"]).max()) == 0.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(256, 4096), st.floats(0.002, 0.3),
+       st.integers(0, 2**31 - 1))
+def test_threshold_topk_calibration(n, rho, seed):
+    """Histogram threshold keeps k'/k in [1, 1.25] on continuous data."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    k = max(1, int(rho * n))
+    t = ex.threshold_for_topk(x, jnp.int32(k))
+    kept = int(jnp.sum(jnp.abs(x) >= t))
+    assert kept >= k
+    assert kept <= max(k + 2, int(1.25 * k))

@@ -1,0 +1,53 @@
+"""Message filter properties (paper Alg. 2 lines 7-9) -- hypothesis-driven."""
+
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import filter as flt
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(8, 400), st.integers(1, 8), st.integers(0, 2**31 - 1))
+def test_conservation_and_count(d, k_div, seed):
+    """sent + residual == dw bitwise; mask count == k (exact variant)."""
+    rng = np.random.default_rng(seed)
+    dw = jnp.asarray(rng.standard_normal(d).astype(np.float32))
+    k = max(1, d // k_div)
+    res = flt.topk_mask_exact(dw, k)
+    assert bool(jnp.all(res.sent + res.residual == dw))
+    assert int(res.mask.sum()) == k
+    # every kept magnitude >= every dropped magnitude
+    kept_min = float(jnp.min(jnp.where(res.mask, jnp.abs(dw), jnp.inf)))
+    drop_max = float(jnp.max(jnp.where(res.mask, -jnp.inf, jnp.abs(dw))))
+    assert kept_min >= drop_max - 1e-7
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(8, 300), st.integers(0, 2**31 - 1))
+def test_threshold_variant_matches_paper_semantics(d, seed):
+    """topk_mask keeps everything >= c_k (ties pass), superset of exact-k."""
+    rng = np.random.default_rng(seed)
+    dw = jnp.asarray(rng.standard_normal(d).astype(np.float32))
+    k = max(1, d // 4)
+    res = flt.topk_mask(dw, k)
+    assert bool(jnp.all(res.mask == (jnp.abs(dw) >= res.threshold)))
+    assert int(res.mask.sum()) >= k
+
+
+def test_compress_decompress_roundtrip():
+    rng = np.random.default_rng(0)
+    dw = jnp.asarray(rng.standard_normal(1000).astype(np.float32))
+    k = 50
+    vals, idx = flt.compress(dw, k)
+    back = flt.decompress(vals, idx, 1000)
+    exact = flt.topk_mask_exact(dw, k)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(exact.sent),
+                               rtol=0, atol=0)
+
+
+def test_message_bytes_accounting():
+    assert flt.message_bytes(1000) == 8000  # 4B value + 4B index
+    assert flt.dense_bytes(47236) == 47236 * 4  # RCV1 full model (Table I)
+    assert flt.num_kept(47236, 1000 / 47236) == 1000  # paper's rho*d = 1e3

@@ -1,0 +1,81 @@
+"""Flash attention custom-VJP vs naive reference: forward + all gradients."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.flash import FlashSpec, flash_attention
+
+
+def naive(q, k, v, causal, window, softcap):
+    B, S, KV, G, hd = q.shape
+    s = jnp.einsum("bqkgh,bskh->bkgqs", q, k).astype(jnp.float32)
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    m = jnp.ones((S, S), bool)
+    if causal:
+        m &= kpos <= qpos
+    if window is not None:
+        m &= qpos - kpos < window
+    s = jnp.where(m[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgqs,bskh->bqkgh", p.astype(q.dtype), v)
+
+
+CASES = [
+    dict(S=96, causal=True, window=None, softcap=None, bq=32),
+    dict(S=64, causal=True, window=16, softcap=None, bq=16),
+    dict(S=100, causal=True, window=None, softcap=50.0, bq=32),  # pad + cap
+    dict(S=80, causal=False, window=None, softcap=None, bq=32),  # encoder
+    dict(S=128, causal=True, window=48, softcap=None, bq=32),  # win != bk mult
+    dict(S=33, causal=True, window=None, softcap=None, bq=32),  # 1 ragged blk
+]
+
+
+@pytest.mark.parametrize("case", CASES, ids=lambda c: f"S{c['S']}w{c['window']}")
+def test_flash_matches_naive(case):
+    rng = np.random.default_rng(case["S"])
+    B, KV, G, hd = 2, 2, 3, 16
+    S = case["S"]
+    q = jnp.asarray(rng.standard_normal((B, S, KV, G, hd)).astype(np.float32)) * 0.3
+    k = jnp.asarray(rng.standard_normal((B, S, KV, hd)).astype(np.float32)) * 0.3
+    v = jnp.asarray(rng.standard_normal((B, S, KV, hd)).astype(np.float32))
+    spec = FlashSpec(case["causal"], case["window"], case["bq"], case["bq"],
+                     case["softcap"])
+    args = (case["causal"], case["window"], case["softcap"])
+
+    o1 = flash_attention(q, k, v, spec)
+    o2 = naive(q, k, v, *args)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5)
+
+    f = lambda *a: jnp.sum(jnp.sin(flash_attention(*a, spec)))
+    g = lambda *a: jnp.sum(jnp.sin(naive(*a, *args)))
+    g1 = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(g, argnums=(0, 1, 2))(q, k, v)
+    for a, b, name in zip(g1, g2, "q k v".split()):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-4,
+                                   err_msg=f"d{name}")
+
+
+def test_block_size_invariance():
+    """Output must not depend on the tiling."""
+    rng = np.random.default_rng(0)
+    B, S, KV, G, hd = 1, 256, 2, 2, 8
+    q = jnp.asarray(rng.standard_normal((B, S, KV, G, hd)).astype(np.float32)) * 0.2
+    k = jnp.asarray(rng.standard_normal((B, S, KV, hd)).astype(np.float32)) * 0.2
+    v = jnp.asarray(rng.standard_normal((B, S, KV, hd)).astype(np.float32))
+    outs = [flash_attention(q, k, v, FlashSpec(True, None, bq, bk, None))
+            for bq, bk in [(32, 32), (64, 128), (256, 64)]]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o), atol=1e-5)
+
+
+def test_windowed_flops_path_used():
+    """Windowed layout must tile only window+bq keys per query block."""
+    from repro.models.flash import _layout
+    spec = FlashSpec(True, 1024, 512, 512, None)
+    bq, nq, bk, nk, wpad, Lk, windowed = _layout(spec, 32768)
+    assert windowed and Lk == 1024 + 512 and nk == 3  # not 64 blocks

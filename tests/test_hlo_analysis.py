@@ -1,0 +1,63 @@
+"""HLO collective parsing + roofline term arithmetic on synthetic text."""
+
+import numpy as np
+
+from repro.launch import hlo_analysis as ha
+
+SAMPLE = """
+HloModule jit_f, num_partitions=256
+ENTRY %main {
+  %ag = bf16[256,4096,1024]{2,1,0} all-gather(%x), channel_id=1, replica_groups=[16,16]<=[16,16]T(1,0), dimensions={0}
+  %ar = f32[16,4096]{1,0} all-reduce(%y), channel_id=2, replica_groups={{0,1,2,3}}, to_apply=%add
+  %rs = f32[16,256]{1,0} reduce-scatter(%z), channel_id=3, replica_groups=[32,16]<=[512], dimensions={1}
+  %cp = bf16[8,128]{1,0} collective-permute(%w), channel_id=4, source_target_pairs={{0,1}}
+  %a2a-start = (f32[1,8,64]{2,1,0}, f32[1,8,64]{2,1,0}) all-to-all(%v), channel_id=5, replica_groups=[64,8]<=[512]
+}
+"""
+
+
+def test_parse_collectives_kinds_and_bytes():
+    st = ha.parse_collectives(SAMPLE)
+    assert st.counts == {"all-gather": 1, "all-reduce": 1,
+                         "reduce-scatter": 1, "collective-permute": 1,
+                         "all-to-all": 1}
+    ag_bytes = 256 * 4096 * 1024 * 2
+    assert st.result_bytes["all-gather"] == ag_bytes
+    ar_bytes = 16 * 4096 * 4
+    assert st.result_bytes["all-reduce"] == ar_bytes
+    # ring models
+    ops = {o["kind"]: o for o in st.ops}
+    assert ops["all-gather"]["group"] == 16
+    assert abs(ops["all-gather"]["wire"] - ag_bytes * 15 / 16) < 1
+    assert ops["all-reduce"]["group"] == 4
+    assert abs(ops["all-reduce"]["wire"] - 2 * ar_bytes * 3 / 4) < 1
+    assert ops["collective-permute"]["wire"] == 8 * 128 * 2
+    # reduce-scatter result is 1/n of input -> wire = result * (n-1)
+    assert abs(ops["reduce-scatter"]["wire"] - 16 * 256 * 4 * 15) < 1
+
+
+def test_async_pairs_counted_once():
+    txt = """
+  %c = f32[4]{0} all-reduce-start(%x), channel_id=9, replica_groups={{0,1}}
+  %c.done = f32[4]{0} all-reduce-done(%c)
+"""
+    st = ha.parse_collectives(txt)
+    assert st.counts.get("all-reduce", 0) == 1
+
+
+def test_shape_bytes_tuple():
+    assert ha._shape_bytes("(f32[2,3], bf16[4])") == 2 * 3 * 4 + 4 * 2
+    assert ha._shape_bytes("pred[8,128]") == 1024
+
+
+def test_cpu_upcast_detection():
+    txt = "%cv = f32[40,5120,1088]{2,1,0} convert(%w)\n" \
+          "%cv2 = f32[16,512]{1,0} convert(%a)\n"
+    up = ha.cpu_upcast_bytes(txt, {40})
+    assert up == 40 * 5120 * 1088 * 4  # only the stacked >=64MiB one
+
+
+def test_roofline_terms_hardware_constants():
+    assert ha.PEAK_FLOPS == 197e12
+    assert ha.HBM_BW == 819e9
+    assert ha.ICI_BW == 50e9

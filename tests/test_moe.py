@@ -1,0 +1,93 @@
+"""MoE: routing math vs an explicit per-token reference; capacity semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import moe as moe_lib
+from repro.models.config import ModelConfig
+from repro.models.param import tree_materialize
+
+
+def _cfg(E=4, K=2, cap=8.0):
+    return ModelConfig(arch_id="t", family="moe", num_layers=1, d_model=32,
+                       num_heads=2, num_kv_heads=2, d_ff=64, vocab_size=64,
+                       num_experts=E, experts_per_token=K, d_ff_expert=48,
+                       moe_capacity_factor=cap, param_dtype="float32",
+                       compute_dtype="float32")
+
+
+def _reference(params, x, cfg):
+    """Explicit per-token loop: softmax -> top-k -> renorm -> expert SwiGLU."""
+    B, S, D = x.shape
+    xt = np.asarray(x).reshape(-1, D)
+    logits = xt @ np.asarray(params["router"])
+    probs = np.exp(logits - logits.max(-1, keepdims=True))
+    probs /= probs.sum(-1, keepdims=True)
+    out = np.zeros_like(xt)
+    for i, (xi, pi) in enumerate(zip(xt, probs)):
+        top = np.argsort(-pi)[: cfg.experts_per_token]
+        w = pi[top] / pi[top].sum()
+        for e, we in zip(top, w):
+            g = xi @ np.asarray(params["gate"][e])
+            u = xi @ np.asarray(params["up"][e])
+            h = (g / (1 + np.exp(-g))) * u
+            out[i] += we * (h @ np.asarray(params["down"][e]))
+    return out.reshape(B, S, D)
+
+
+def test_moe_matches_reference_with_ample_capacity():
+    cfg = _cfg(cap=16.0)  # no drops
+    params = tree_materialize(moe_lib.moe_spec(cfg), jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (2, 8, cfg.d_model)) * 0.5
+    out, aux = moe_lib.moe(params, x, cfg)
+    ref = _reference(params, x, cfg)
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=2e-3, atol=2e-4)
+    assert float(aux) >= 1.0 - 1e-5  # Switch aux loss lower bound is 1
+
+
+def test_capacity_drops_are_bounded():
+    """With capacity factor c, at most (1 - c*K... ) tokens drop; output of a
+    dropped slot is zero -- total output norm shrinks but stays finite."""
+    cfg_lo = _cfg(cap=0.25)
+    cfg_hi = _cfg(cap=16.0)
+    params = tree_materialize(moe_lib.moe_spec(cfg_hi), jax.random.key(0))
+    x = jax.random.normal(jax.random.key(2), (2, 32, cfg_hi.d_model)) * 0.5
+    out_lo, _ = moe_lib.moe(params, x, cfg_lo)
+    out_hi, _ = moe_lib.moe(params, x, cfg_hi)
+    n_lo = float(jnp.linalg.norm(out_lo))
+    n_hi = float(jnp.linalg.norm(out_hi))
+    assert np.isfinite(n_lo) and n_lo <= n_hi + 1e-5
+
+
+def test_moe_grads_finite():
+    cfg = _cfg()
+    params = tree_materialize(moe_lib.moe_spec(cfg), jax.random.key(0))
+    x = jax.random.normal(jax.random.key(3), (2, 16, cfg.d_model))
+
+    def loss(p):
+        out, aux = moe_lib.moe(p, x, cfg)
+        return jnp.sum(jnp.square(out)) + aux
+
+    grads = jax.grad(loss)(params)
+    assert all(np.isfinite(np.asarray(g)).all() for g in jax.tree.leaves(grads))
+
+
+def test_dispatch_groups_equivalent():
+    """Group-local dispatch (mesh path) == single-group when capacity ample."""
+    cfg = _cfg(cap=16.0)
+    params = tree_materialize(moe_lib.moe_spec(cfg), jax.random.key(0))
+    x = jax.random.normal(jax.random.key(4), (4, 8, cfg.d_model)) * 0.5
+    out1, _ = moe_lib.moe(params, x, cfg, mesh=None)  # G=1
+    # fake a "mesh" with data=2 by calling the internal with a 2-group reshape
+    import repro.models.moe as m
+
+    orig = m._num_dispatch_groups
+    m._num_dispatch_groups = lambda mesh, n: 2
+    try:
+        out2, _ = moe_lib.moe(params, x, cfg, mesh=None)
+    finally:
+        m._num_dispatch_groups = orig
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), rtol=2e-3,
+                               atol=2e-4)

@@ -1,0 +1,88 @@
+"""Objectives: conjugacy, duality gap, primal-dual map (paper Eqs. 2-5)."""
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import objectives as obj
+
+
+LOSSES = ["ridge", "smoothed_hinge", "logistic"]
+
+
+@pytest.mark.parametrize("loss", LOSSES)
+def test_fenchel_young_inequality(loss):
+    """phi(z) + phi*(-alpha) >= -alpha*z for feasible alpha (conjugacy)."""
+    rng = np.random.default_rng(0)
+    z = jnp.asarray(rng.standard_normal(256).astype(np.float32) * 2)
+    y = jnp.asarray(np.sign(rng.standard_normal(256)).astype(np.float32))
+    a = jnp.asarray(rng.uniform(0.05, 0.95, 256).astype(np.float32)) * y
+    lhs = obj.phi(loss, z, y) - obj.neg_conj(loss, a, y)
+    rhs = -a * z
+    assert bool(jnp.all(lhs >= rhs - 1e-5))
+
+
+@pytest.mark.parametrize("loss", LOSSES)
+def test_fenchel_young_equality_at_gradient(loss):
+    """Equality holds at -u in d phi(z): phi(z) + phi*(-u) == -u z."""
+    rng = np.random.default_rng(1)
+    z = jnp.asarray(rng.standard_normal(128).astype(np.float32))
+    y = jnp.asarray(np.sign(rng.standard_normal(128)).astype(np.float32))
+    u = obj.dual_feasible_direction(loss, z, y)
+    lhs = obj.phi(loss, z, y) - obj.neg_conj(loss, u, y)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(-u * z),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_duality_gap_nonnegative(small_problem):
+    rng = np.random.default_rng(2)
+    K, n_k = small_problem.y.shape
+    alpha = jnp.asarray(rng.uniform(-0.5, 0.5, (K, n_k)).astype(np.float32))
+    alpha = alpha * small_problem.y  # keep y*alpha >= -0.5 (ridge: any fine)
+    g = obj.duality_gap(alpha, small_problem.X, small_problem.y,
+                        small_problem.lam, loss="ridge")
+    assert float(g) >= -1e-6
+
+
+def test_gap_zero_at_optimum(small_problem, oracle):
+    alpha, w = oracle
+    K, n_k = small_problem.y.shape
+    g = obj.duality_gap(jnp.asarray(alpha.reshape(K, n_k)), small_problem.X,
+                        small_problem.y, small_problem.lam, loss="ridge")
+    assert float(g) < 1e-6
+
+
+def test_primal_dual_map(small_problem, oracle):
+    """w(alpha*) from Eq. 5 equals the SDCA-maintained w."""
+    alpha, w = oracle
+    K, n_k = small_problem.y.shape
+    w_alpha = obj.primal_from_dual(jnp.asarray(alpha.reshape(K, n_k)),
+                                   small_problem.X, small_problem.lam)
+    np.testing.assert_allclose(np.asarray(w_alpha), w, rtol=1e-4, atol=1e-5)
+
+
+def test_ridge_optimum_matches_closed_form(small_problem, oracle):
+    """Ridge ERM has the closed form (X^T X / n + lam I) w = X^T y / n."""
+    _, w = oracle
+    X = np.asarray(small_problem.global_X())
+    y = np.asarray(small_problem.global_y())
+    n, d = X.shape
+    A = X.T @ X / n + small_problem.lam * np.eye(d, dtype=np.float64)
+    w_star = np.linalg.solve(A, X.T @ y / n)
+    np.testing.assert_allclose(w, w_star, rtol=2e-3, atol=2e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.floats(-5, 5), st.sampled_from([-1.0, 1.0]),
+       st.sampled_from(LOSSES))
+def test_phi_nonnegative_and_smooth_bound(z, y, loss):
+    """Assumption 1/2 sanity: phi >= 0 and |phi'| finite."""
+    zz = jnp.float32(z)
+    yy = jnp.float32(y)
+    val = float(obj.phi(loss, zz, yy))
+    assert val >= -1e-6
+    grad = float(jax.grad(lambda q: obj.phi(loss, q, yy))(zz))
+    assert np.isfinite(grad)

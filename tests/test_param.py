@@ -1,0 +1,77 @@
+"""Parameter plans + logical-axis sharding rules (models/param.py)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.models import param as pm
+
+
+def _mesh():
+    # 1-device CPU mesh with named axes of size 1: the rule machinery must
+    # resolve identically (everything divisible by 1).
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def test_spec_abstract_and_materialize():
+    s = pm.ParamSpec((4, 8), jnp.float32, ("embed", "ff"))
+    a = s.abstract()
+    assert a.shape == (4, 8) and a.dtype == jnp.float32
+    v = s.materialize(jax.random.key(0))
+    assert v.shape == (4, 8)
+    z = pm.ParamSpec((3,), jnp.float32, (None,), init="zeros").materialize(
+        jax.random.key(0))
+    assert float(jnp.abs(z).max()) == 0.0
+
+
+def test_stack_specs_prepends_layers_axis():
+    spec = {"w": pm.ParamSpec((4, 8), jnp.float32, ("embed", "ff"))}
+    st = pm.stack_specs(spec, 5)
+    assert st["w"].shape == (5, 4, 8)
+    assert st["w"].axes == ("layers", "embed", "ff")
+
+
+def test_divisibility_gate():
+    # spec resolution only reads mesh.shape -- a stand-in works without
+    # fabricating 4 devices in this 1-CPU process.
+    import types
+    mesh = types.SimpleNamespace(shape={"data": 1, "model": 4})
+    ok = pm.ParamSpec((4, 8), jnp.float32, ("embed", "ff"))
+    bad = pm.ParamSpec((4, 6), jnp.float32, ("embed", "ff"))  # 6 % 4 != 0
+    assert pm.spec_to_pspec(ok, mesh) == P(None, "model")
+    assert pm.spec_to_pspec(bad, mesh) == P(None, None)
+    notes = pm.explain_sharding({"bad": bad}, mesh)
+    assert len(notes) == 1 and "not divisible" in notes[0]
+
+
+def test_rule_scope_overrides_and_restores():
+    assert pm.get_active_rules() is pm.DEFAULT_RULES
+    custom = {"batch": ("model",), "ff": None}
+    with pm.rule_scope(custom):
+        assert pm.get_active_rules() is custom
+        with pm.rule_scope(None):
+            assert pm.get_active_rules() is pm.DEFAULT_RULES
+        assert pm.get_active_rules() is custom
+    assert pm.get_active_rules() is pm.DEFAULT_RULES
+
+
+def test_constraint_never_forces_replication():
+    """A constraint with no resolvable axis must be a no-op (regression for
+    the bug that replicated every activation -- EXPERIMENTS §Perf iter 1)."""
+    mesh = _mesh()
+    x = jnp.ones((6, 10))  # 6 % nothing relevant
+
+    @jax.jit
+    def f(x):
+        return pm.constraint(x, mesh, "no_such_axis", None)
+
+    np.testing.assert_array_equal(np.asarray(f(x)), np.asarray(x))
+
+
+def test_num_params():
+    spec = {"a": pm.ParamSpec((4, 8), jnp.float32, (None, None)),
+            "b": pm.ParamSpec((3,), jnp.float32, (None,))}
+    assert pm.num_params(spec) == 35

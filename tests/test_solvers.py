@@ -1,0 +1,72 @@
+"""Alternative local solvers: work-normalized comparison vs plain SDCA."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import objectives as obj
+from repro.core.sdca import solve_subproblem
+from repro.core.solvers import (solve_subproblem_accelerated,
+                                solve_subproblem_importance)
+
+
+def _problem(seed=0, n_k=96, d=192, hetero=True):
+    rng = np.random.default_rng(seed)
+    X = rng.standard_normal((n_k, d)).astype(np.float32) / np.sqrt(d)
+    if hetero:  # importance sampling only matters with non-uniform norms
+        X *= rng.uniform(0.1, 3.0, (n_k, 1)).astype(np.float32)
+    y = np.sign(rng.standard_normal(n_k)).astype(np.float32)
+    return (jnp.asarray(X), jnp.asarray(y),
+            jnp.asarray(np.sum(X * X, 1)))
+
+
+def _dual_gain(solver, X, y, norms, H, seed=0, **kw):
+    lam, n, sp = 1e-2, X.shape[0], 1.0
+    res = solver(jnp.zeros(X.shape[1]), jnp.zeros(X.shape[0]), X, y, norms,
+                 lam, n, sp, jax.random.key(seed), loss="ridge",
+                 num_steps=H, **kw)
+    # local subproblem value gained (constants cancel at dalpha=0)
+    v = res.v
+    a = res.delta_alpha
+    return (float(jnp.sum(obj.neg_conj("ridge", a, y))) / n
+            - 0.5 * lam * sp * float(v @ v))
+
+
+def test_importance_sampling_is_valid_ascent():
+    """Empirical note (recorded, not asserted as superiority): on this ridge
+    instance the smoothness-proportional distribution UNDERPERFORMS uniform
+    by ~30% in early dual gain -- the Zhang-Xiao bound optimizes the worst
+    case, and exact coordinate maximization already divides each step's gain
+    by (1 + q_i), cancelling the intended bias. We assert only the
+    correctness properties: positive monotone gain within a factor of
+    uniform's (same optimum, slower constant)."""
+    X, y, norms = _problem(hetero=True)
+    uni = np.mean([_dual_gain(solve_subproblem, X, y, norms, 64, s)
+                   for s in range(6)])
+    imp = np.mean([_dual_gain(solve_subproblem_importance, X, y, norms, 64, s)
+                   for s in range(6)])
+    assert imp > 0
+    assert imp >= 0.5 * uni  # same-order progress, documented slowdown
+
+
+def test_accelerated_converges_and_is_consistent():
+    X, y, norms = _problem()
+    lam, n, sp = 1e-2, X.shape[0], 1.0
+    res = solve_subproblem_accelerated(
+        jnp.zeros(X.shape[1]), jnp.zeros(X.shape[0]), X, y, norms, lam, n,
+        sp, jax.random.key(1), loss="ridge", num_steps=400)
+    # v must remain consistent with dalpha (the ACPD invariant, Alg.2 l.6)
+    v_expect = X.T @ res.delta_alpha / (lam * n)
+    np.testing.assert_allclose(np.asarray(res.v), np.asarray(v_expect),
+                               rtol=1e-4, atol=1e-5)
+    gain = _dual_gain(solve_subproblem_accelerated, X, y, norms, 400, 2)
+    plain = _dual_gain(solve_subproblem, X, y, norms, 400, 2)
+    assert gain > 0 and gain >= 0.8 * plain  # same work, comparable progress
+
+
+@pytest.mark.parametrize("solver", [solve_subproblem_importance])
+def test_alternative_solvers_are_ascent(solver):
+    X, y, norms = _problem(seed=3)
+    gains = [_dual_gain(solver, X, y, norms, H, 0) for H in (16, 64, 256)]
+    assert gains[0] <= gains[1] <= gains[2] + 1e-6

@@ -1,0 +1,66 @@
+"""End-to-end behaviour tests for the paper's system: the full ACPD stack
+(straggler clock -> group-wise server -> SDCA workers -> top-k filter) run as
+a user would run it, checked against the paper's own narrative.
+"""
+
+import numpy as np
+
+from repro.core import baselines
+from repro.core.acpd import run_method
+from repro.core.simulate import ClusterModel
+from repro.data.synthetic import LinearDatasetSpec, make_linear_problem
+
+
+def test_paper_pipeline_end_to_end(small_problem):
+    """One full experiment: ACPD on 4 workers with a sigma=5 straggler reaches
+    gap 1e-3 in less simulated time AND fewer bytes than CoCoA+."""
+    cluster = ClusterModel(num_workers=4, straggler_sigma=5.0)
+    acpd = run_method(small_problem,
+                      baselines.acpd(4, small_problem.d, B=2, T=10, rho_d=64,
+                                     gamma=0.5, H=384),
+                      cluster, num_outer=8, eval_every=2, seed=0)
+    cocoa = run_method(small_problem, baselines.cocoa_plus(4, H=384), cluster,
+                       num_outer=80, eval_every=2, seed=0)
+    target = 1e-3
+    t_a, t_c = acpd.time_to_gap(target), cocoa.time_to_gap(target)
+    assert t_a is not None and t_c is not None and t_a < t_c
+    b_a = next(r.bytes_up for r in acpd.records if r.gap <= target)
+    b_c = next(r.bytes_up for r in cocoa.records if r.gap <= target)
+    # Table I: O(rho d) vs O(d). At rho=64/512=12.5% and with the dense
+    # catch-up replies counted, ~5x is the honest ceiling here; the >40x
+    # ratios show up at RCV1+ dimensionality (bench_table1 static rows).
+    assert b_a < b_c / 3
+
+
+def test_practical_filter_variant_converges_like_paper_claims():
+    """Sec. III-B2: replacing the exact dual put-back with the primal residual
+    'does not affect the convergence empirically' -- verify with tight rho."""
+    prob = make_linear_problem(
+        LinearDatasetSpec(num_workers=4, n_per_worker=96, d=1024,
+                          nnz_per_row=16, seed=21), lam=1e-3)
+    res = run_method(prob,
+                     baselines.acpd(4, 1024, B=2, T=10, rho_d=16, gamma=0.5,
+                                    H=256),
+                     ClusterModel(num_workers=4), num_outer=10, eval_every=5,
+                     seed=1)
+    gaps = [r.gap for r in res.records]
+    assert gaps[-1] < 1e-3
+    # primal-dual certified gap and server-model gap agree at convergence
+    assert abs(res.records[-1].gap_server - res.records[-1].gap) < 5e-3
+
+
+def test_rho_robustness_figure_4a():
+    """Fig. 4a: convergence is stable across two orders of magnitude of rho*d
+    while the gap is above ~1e-4."""
+    prob = make_linear_problem(
+        LinearDatasetSpec(num_workers=4, n_per_worker=96, d=1024,
+                          nnz_per_row=16, seed=22), lam=1e-3)
+    finals = {}
+    for rho_d in (16, 64, 1024):
+        res = run_method(prob,
+                         baselines.acpd(4, 1024, B=2, T=10, rho_d=rho_d,
+                                        gamma=0.5, H=256),
+                         ClusterModel(num_workers=4), num_outer=8,
+                         eval_every=8, seed=2)
+        finals[rho_d] = res.records[-1].gap
+    assert all(g < 2e-3 for g in finals.values()), finals
