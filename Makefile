@@ -1,0 +1,18 @@
+# Single entry point for the repo's sanity gate:
+#   make check  == tier-1 pytest + smoke-scale benchmarks (see ROADMAP.md)
+# Equivalent for environments without make: ./scripts/check.sh
+
+PY ?= python
+
+.PHONY: check test bench-quick bench
+
+check: test bench-quick
+
+test:
+	PYTHONPATH=src $(PY) -m pytest -x -q
+
+bench-quick:
+	PYTHONPATH=src $(PY) -m benchmarks.run --quick
+
+bench:
+	PYTHONPATH=src $(PY) -m benchmarks.run

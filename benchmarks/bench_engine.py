@@ -1,0 +1,90 @@
+"""Engine microbenchmark: the fused protocol engine vs the reference loops.
+
+Measures, at the ISSUE-1 acceptance point (K=16 workers), per simulated round:
+
+* wall-clock of ``engine.run_method`` vs ``acpd.run_method_reference``
+  (identical trajectories -- pinned bit-for-bit by tests/test_engine.py);
+* host-issued eager device dispatches, counted by wrapping JAX's
+  ``apply_primitive`` (every un-jitted op the host Python loop issues).
+  Jit-compiled calls bypass this counter on both sides, so the eager count
+  isolates exactly the overhead the engine removes: per-message ``.at[]``
+  updates, slicing, and the blocking ``int(nnz(...))`` pulls.
+
+The acceptance bar is >= 3x fewer dispatches or >= 2x wall-clock per round;
+both are emitted and recorded to experiments/bench/engine_microbench.json.
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import cluster, dump, emit, rcv1_like
+from repro.core import baselines, engine
+from repro.core.acpd import run_method_reference
+
+
+def _count_eager_dispatches(fn):
+    """Run ``fn`` counting eager device dispatches; returns (result, count).
+
+    Counting degrades gracefully (count = -1) if the JAX internal moves.
+    """
+    try:
+        import jax._src.dispatch as jdispatch
+
+        orig = jdispatch.apply_primitive
+    except (ImportError, AttributeError):
+        return fn(), -1
+    calls = [0]
+
+    def counting(*a, **k):
+        calls[0] += 1
+        return orig(*a, **k)
+
+    jdispatch.apply_primitive = counting
+    try:
+        out = fn()
+    finally:
+        jdispatch.apply_primitive = orig
+    return out, calls[0]
+
+
+def main(quick: bool = False) -> None:
+    K = 4 if quick else 16
+    d = 1024 if quick else 4096
+    outer = 1 if quick else 2
+    T = 5 if quick else 10
+    prob = rcv1_like(K=K, d=d, n_per_worker=64, seed=7)
+    m = baselines.acpd(K, d, B=max(1, K // 2), T=T, rho_d=128, gamma=0.5,
+                       H=64)
+    cl = cluster(K)
+    rounds = outer * T
+
+    results = {}
+    for label, fn in (("reference", run_method_reference),
+                      ("engine", engine.run_method)):
+        # Warm-up at the MEASURED shape (the engine's deferred eval compiles
+        # per snapshot count, so a smaller warm-up would leave a compile
+        # inside the timed region).
+        fn(prob, m, cl, num_outer=outer, eval_every=2, seed=0)
+        t0 = time.perf_counter()
+        _, dispatches = _count_eager_dispatches(
+            lambda: fn(prob, m, cl, num_outer=outer, eval_every=2, seed=0))
+        dt = time.perf_counter() - t0
+        results[label] = {"wall_s": dt, "eager_dispatches": dispatches,
+                          "rounds": rounds}
+        emit(f"engine/{label}/us_per_round", dt * 1e6 / rounds, dispatches)
+
+    speedup = results["reference"]["wall_s"] / results["engine"]["wall_s"]
+    emit(f"engine/K{K}/wallclock_speedup", 0.0, round(speedup, 2))
+    if results["engine"]["eager_dispatches"] > 0:
+        ratio = (results["reference"]["eager_dispatches"]
+                 / results["engine"]["eager_dispatches"])
+        emit(f"engine/K{K}/dispatch_ratio", 0.0, round(ratio, 2))
+        results["dispatch_ratio"] = ratio
+    results["wallclock_speedup"] = speedup
+    results["K"] = K
+    dump("engine_microbench", results)
+
+
+if __name__ == "__main__":
+    main()

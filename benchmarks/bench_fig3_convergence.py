@@ -14,18 +14,21 @@ from repro.core.acpd import run_method
 TARGET = 1e-3
 
 
-def main() -> None:
-    K, d = 4, 2048
+def main(quick: bool = False) -> None:
+    K, d = 4, 512 if quick else 2048
+    H = 64 if quick else 256
     prob = rcv1_like(K=K, d=d)
     curves = {}
-    for sigma in (1.0, 10.0):
+    for sigma in ((10.0,) if quick else (1.0, 10.0)):
         cl = cluster(K, sigma=sigma)
         methods = [
-            (baselines.cocoa_plus(K, H=256), 60),
-            (baselines.acpd(K, d, B=2, T=10, rho_d=64, gamma=0.5, H=256), 12),
+            (baselines.cocoa_plus(K, H=H), 10 if quick else 60),
+            (baselines.acpd(K, d, B=2, T=10, rho_d=64, gamma=0.5, H=H),
+             3 if quick else 12),
             (baselines.acpd_full_barrier(K, d, T=10, rho_d=64, gamma=0.5,
-                                         H=256), 8),
-            (baselines.acpd_dense(K, B=2, T=10, gamma=0.5, H=256), 8),
+                                         H=H), 2 if quick else 8),
+            (baselines.acpd_dense(K, B=2, T=10, gamma=0.5, H=H),
+             2 if quick else 8),
         ]
         for m, outer in methods:
             res, us = timed(run_method, prob, m, cl, num_outer=outer,

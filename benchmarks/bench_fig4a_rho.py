@@ -8,14 +8,15 @@ from repro.core import baselines
 from repro.core.acpd import run_method
 
 
-def main() -> None:
-    K, d = 4, 2048
+def main(quick: bool = False) -> None:
+    K, d = 4, 512 if quick else 2048
+    H = 64 if quick else 256
     prob = rcv1_like(K=K, d=d)
     curves = {}
-    for rho_d in (8, 32, 128, 512, 2048):
-        m = baselines.acpd(K, d, B=2, T=10, rho_d=rho_d, gamma=0.5, H=256)
-        res, us = timed(run_method, prob, m, cluster(K), num_outer=8,
-                        eval_every=2, seed=0)
+    for rho_d in ((8, 128) if quick else (8, 32, 128, 512, 2048)):
+        m = baselines.acpd(K, d, B=2, T=10, rho_d=rho_d, gamma=0.5, H=H)
+        res, us = timed(run_method, prob, m, cluster(K),
+                        num_outer=2 if quick else 8, eval_every=2, seed=0)
         r = res.rounds_to_gap(1e-3)
         final = res.records[-1].gap
         emit(f"fig4a/rho_d{rho_d}/rounds_to_1e-3", us, r)

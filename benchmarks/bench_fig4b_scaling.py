@@ -1,5 +1,6 @@
 """Fig. 4b: scaling the number of workers K -- simulated time to a fixed gap
-for ACPD (B=K/2) vs CoCoA+, K in {2, 4, 8}."""
+for ACPD (B=K/2) vs CoCoA+ (plus the engine's async/lag registry protocols),
+K in {2, 4, 8}."""
 
 from __future__ import annotations
 
@@ -10,28 +11,41 @@ from repro.core.acpd import run_method
 TARGET = 1e-3
 
 
-def main() -> None:
+def main(quick: bool = False) -> None:
     # Higher d than the other benches: Fig. 4b's regime is communication-bound
     # (the paper's point is that CoCoA+ stops scaling once O(d) messages
     # dominate); at small d the simulated network is too cheap to matter.
-    d = 8192
+    d = 1024 if quick else 8192
+    H = 64 if quick else 256
+    Ks = (2, 4) if quick else (2, 4, 8)
     results = {}
-    for K in (2, 4, 8):
-        prob = rcv1_like(K=K, d=d, n_per_worker=128, seed=7 + K)
+    for K in Ks:
+        prob = rcv1_like(K=K, d=d, n_per_worker=64 if quick else 128,
+                         seed=7 + K)
         cl = cluster(K, sigma=1.0)
-        acpd = baselines.acpd(K, d, B=max(1, K // 2), T=10, rho_d=128,
-                              gamma=0.5, H=256)
-        coco = baselines.cocoa_plus(K, H=256)
-        res_a, us_a = timed(run_method, prob, acpd, cl, num_outer=8,
+        # All four registry protocols at this scale: group vs sync is the
+        # paper's Fig. 4b; async/lag chart the engine's new design space.
+        methods = [
+            (baselines.acpd(K, d, B=max(1, K // 2), T=10, rho_d=128,
+                            gamma=0.5, H=H), 2 if quick else 8),
+            (baselines.cocoa_plus(K, H=H), 10 if quick else 60),
+            (baselines.acpd_async(K, d, T=10, rho_d=128, gamma=0.5, H=H),
+             4 if quick else 16),
+            (baselines.acpd_lag(K, d, B=max(1, K // 2), T=10, rho_d=128,
+                                gamma=0.5, H=H), 2 if quick else 8),
+        ]
+        row = {}
+        for m, outer in methods:
+            res, us = timed(run_method, prob, m, cl, num_outer=outer,
                             eval_every=2, seed=0)
-        res_c, us_c = timed(run_method, prob, coco, cl, num_outer=60,
-                            eval_every=2, seed=0)
-        t_a, t_c = res_a.time_to_gap(TARGET), res_c.time_to_gap(TARGET)
-        emit(f"fig4b/K{K}/acpd_time", us_a, None if t_a is None else round(t_a, 4))
-        emit(f"fig4b/K{K}/cocoa+_time", us_c, None if t_c is None else round(t_c, 4))
+            t = res.time_to_gap(TARGET)
+            emit(f"fig4b/K{K}/{m.name}_time", us,
+                 None if t is None else round(t, 4))
+            row[m.name] = t
+        t_a, t_c = row["ACPD"], row["CoCoA+"]
         if t_a and t_c:
             emit(f"fig4b/K{K}/speedup", 0.0, round(t_c / t_a, 2))
-        results[K] = {"acpd": t_a, "cocoa+": t_c}
+        results[K] = row
     dump("fig4b_scaling", results)
 
 

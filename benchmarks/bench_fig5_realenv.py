@@ -11,14 +11,15 @@ from repro.core.acpd import run_method
 TARGET = 1e-3
 
 
-def main() -> None:
-    K, d = 8, 4096
+def main(quick: bool = False) -> None:
+    K, d = (4, 1024) if quick else (8, 4096)
+    H = 64 if quick else 256
     prob = rcv1_like(K=K, d=d, n_per_worker=96, seed=31)
     cl = cluster(K, sigma=1.0, jitter=0.6)  # multiplicative lognormal noise
-    acpd = baselines.acpd(K, d, B=4, T=10, rho_d=64, gamma=0.5, H=256)
-    coco = baselines.cocoa_plus(K, H=256)
+    acpd = baselines.acpd(K, d, B=K // 2, T=10, rho_d=64, gamma=0.5, H=H)
+    coco = baselines.cocoa_plus(K, H=H)
     out = {}
-    for m, outer in ((acpd, 8), (coco, 60)):
+    for m, outer in ((acpd, 2 if quick else 8), (coco, 10 if quick else 60)):
         res, us = timed(run_method, prob, m, cl, num_outer=outer,
                         eval_every=2, seed=0)
         t = res.time_to_gap(TARGET)

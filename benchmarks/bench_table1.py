@@ -18,13 +18,14 @@ from repro.core.filter import dense_bytes, message_bytes, num_kept
 from repro.kernels import ops
 
 
-def main() -> None:
-    K, d = 4, 2048
+def main(quick: bool = False) -> None:
+    K, d = 4, 512 if quick else 2048
+    H = 64 if quick else 256
     prob = rcv1_like(K=K, d=d)
     rows = {}
-    for preset, outer in ((baselines.cocoa_plus(K, H=256), 20),
-                          (baselines.acpd(K, d, rho_d=64, H=256), 2),
-                          (baselines.acpd_dense(K, H=256), 2)):
+    for preset, outer in ((baselines.cocoa_plus(K, H=H), 5 if quick else 20),
+                          (baselines.acpd(K, d, rho_d=64, H=H), 1 if quick else 2),
+                          (baselines.acpd_dense(K, H=H), 1 if quick else 2)):
         res, us = timed(run_method, prob, preset, cluster(K),
                         num_outer=outer, eval_every=5, seed=0)
         rounds = res.records[-1].iteration

@@ -45,7 +45,8 @@ def fmt_row(r: dict) -> str:
             f"{rf['collective_s']*1e3:.2f} | **{dom}** | - |")
 
 
-def main() -> None:
+def main(quick: bool = False) -> None:
+    del quick  # artifact reader: already cheap, nothing to scale down
     recs = load_records()
     if not recs:
         emit("roofline/no_artifacts", 0.0, "run repro.launch.dryrun first")

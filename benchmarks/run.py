@@ -1,24 +1,45 @@
-"""Benchmark driver: one module per paper table/figure + the roofline reader.
+"""Benchmark driver: one module per paper table/figure + the roofline reader
+and the engine microbenchmark.
 
 Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/common.py).
+
+``--quick`` runs every benchmark at smoke scale (tiny K, num_outer, H) --
+seconds instead of minutes; used by ``make check`` / scripts/check.sh as the
+CI-style sanity gate that the whole bench surface still executes.
 """
 
 from __future__ import annotations
 
+import argparse
 import sys
 import time
 
 
-def main() -> None:
-    from benchmarks import (bench_fig3_convergence, bench_fig4a_rho,
-                            bench_fig4b_scaling, bench_fig5_realenv,
-                            bench_table1, roofline)
+def main(argv: list[str] | None = None) -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--quick", action="store_true",
+                        help="smoke mode: tiny K/num_outer/H per benchmark")
+    parser.add_argument("--only", default=None,
+                        help="substring filter on benchmark module names")
+    args = parser.parse_args(argv)
+
+    from benchmarks import (bench_engine, bench_fig3_convergence,
+                            bench_fig4a_rho, bench_fig4b_scaling,
+                            bench_fig5_realenv, bench_table1, roofline)
+
+    mods = [bench_table1, bench_fig3_convergence, bench_fig4a_rho,
+            bench_fig4b_scaling, bench_fig5_realenv, bench_engine, roofline]
+    if args.only:
+        mods = [m for m in mods if args.only in m.__name__]
+        if not mods:
+            print(f"# no benchmark matches --only={args.only!r}",
+                  file=sys.stderr)
+            return
 
     print("name,us_per_call,derived")
     t0 = time.time()
-    for mod in (bench_table1, bench_fig3_convergence, bench_fig4a_rho,
-                bench_fig4b_scaling, bench_fig5_realenv, roofline):
-        mod.main()
+    for mod in mods:
+        mod.main(quick=args.quick)
     print(f"# all benchmarks done in {time.time() - t0:.1f}s", file=sys.stderr)
 
 

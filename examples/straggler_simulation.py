@@ -1,10 +1,11 @@
 """Straggler sweep (paper Fig. 3): how the speedup of ACPD over CoCoA+ grows
-with the straggler factor sigma, including both ablations.
+with the straggler factor sigma, including both ablations and the engine's
+new registry protocols (fully-async B=1 and LAG-style lazy uploads).
 
 Run:  PYTHONPATH=src python examples/straggler_simulation.py
 """
 
-from repro.core import baselines
+from repro.core import baselines, engine
 from repro.core.acpd import run_method
 from repro.core.simulate import ClusterModel
 from repro.data.synthetic import LinearDatasetSpec, make_linear_problem
@@ -23,8 +24,9 @@ def main() -> None:
     problem = make_linear_problem(
         LinearDatasetSpec(num_workers=K, n_per_worker=192, d=D,
                           nnz_per_row=24, seed=7), lam=1e-3)
+    print(f"protocol registry: {', '.join(engine.available_protocols())}")
     print(f"{'sigma':>6s} {'CoCoA+':>9s} {'ACPD':>9s} {'ACPD B=K':>9s} "
-          f"{'ACPD rho=1':>10s} {'speedup':>8s}")
+          f"{'ACPD rho=1':>10s} {'async':>9s} {'LAG':>9s} {'speedup':>8s}")
     for sigma in (1.0, 2.0, 5.0, 10.0):
         t_c = time_to(problem, baselines.cocoa_plus(K, H=256), sigma, 60)
         t_a = time_to(problem, baselines.acpd(K, D, B=2, T=10, rho_d=64,
@@ -33,17 +35,24 @@ def main() -> None:
             K, D, T=10, rho_d=64, gamma=0.5, H=256), sigma, 8)
         t_r1 = time_to(problem, baselines.acpd_dense(K, B=2, T=10, gamma=0.5,
                                                      H=256), sigma, 8)
+        t_as = time_to(problem, baselines.acpd_async(
+            K, D, T=10, rho_d=64, gamma=0.5, H=256), sigma, 40)
+        t_lg = time_to(problem, baselines.acpd_lag(
+            K, D, B=2, T=10, rho_d=64, gamma=0.5, H=256), sigma, 12)
         fmt = lambda t: f"{t:8.3f}s" if t else "     n/a"
         sp = f"{t_c / t_a:7.2f}x" if (t_c and t_a) else "     n/a"
         print(f"{sigma:6.1f} {fmt(t_c)} {fmt(t_a)} {fmt(t_bk)} "
-              f"{fmt(t_r1):>10s} {sp}")
+              f"{fmt(t_r1):>10s} {fmt(t_as)} {fmt(t_lg)} {sp}")
     print("\nExpected: ACPD's speedup over CoCoA+ grows with sigma (the "
           "group-wise server never waits for the straggler between syncs); "
-          "B=K (full barrier) is slowest. Note: at this small d the DENSE "
-          "group-wise ablation (rho=1) is fastest -- sparsity costs extra "
-          "rounds while communication is cheap, the paper's own observation "
-          "(2); the sparsity payoff appears at RCV1+ dimensionality "
-          "(bench_table1 static rows, EXPERIMENTS.md §Repro).")
+          "B=K (full barrier) is slowest. The async protocol (B=1, no "
+          "barrier) is immune to the straggler but pays more rounds per unit "
+          "progress; LAG tracks ACPD's time while uploading fewer bytes. "
+          "Note: at this small d the DENSE group-wise ablation (rho=1) is "
+          "fastest -- sparsity costs extra rounds while communication is "
+          "cheap, the paper's own observation (2); the sparsity payoff "
+          "appears at RCV1+ dimensionality (bench_table1 static rows, "
+          "EXPERIMENTS.md §Repro).")
 
 
 if __name__ == "__main__":

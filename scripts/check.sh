@@ -1,0 +1,7 @@
+#!/usr/bin/env bash
+# Tier-1 tests + smoke-scale benchmarks, one command (same as `make check`).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+python -m pytest -x -q
+python -m benchmarks.run --quick

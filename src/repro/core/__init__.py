@@ -13,6 +13,17 @@ from repro.core.objectives import (  # noqa: F401
     primal_from_dual,
     primal_objective,
 )
-from repro.core.acpd import MethodConfig, RunResult, run_method  # noqa: F401
+from repro.core.acpd import (  # noqa: F401
+    MethodConfig,
+    RunResult,
+    run_method,
+    run_method_reference,
+)
+from repro.core.engine import (  # noqa: F401
+    Protocol,
+    available_protocols,
+    get_protocol,
+    register_protocol,
+)
 from repro.core import baselines  # noqa: F401
 from repro.core import filter  # noqa: F401

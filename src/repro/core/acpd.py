@@ -38,7 +38,7 @@ class MethodConfig:
     """One distributed primal-dual method, in the paper's parameterization."""
 
     name: str
-    protocol: str = "group"  # "group" (Alg. 1/2) or "sync" (CoCoA family)
+    protocol: str = "group"  # registry entry: "group", "sync", "async", "lag", ...
     B: int = 2  # group size: server proceeds once B workers arrived
     T: int = 20  # full-sync period; bounds staleness tau <= T-1
     rho: float = 1.0  # fraction of coordinates sent (1.0 = dense)
@@ -52,6 +52,11 @@ class MethodConfig:
     # solve per round -- the paper itself calls it impractical and uses the
     # primal residual instead (our default, exact_dual_feedback=False).
     exact_dual_feedback: bool = False
+    # LAG-style lazy aggregation (protocol="lag"): a worker skips its upload
+    # when ||F(dw)||^2 < lag_xi * ||its last catch-up reply||^2, i.e. when its
+    # contribution is negligible next to how much the global model is already
+    # moving without it (see engine.LagProtocol).
+    lag_xi: float = 1.0
 
     def resolved_sigma_prime(self, K: int) -> float:
         if self.sigma_prime is not None:
@@ -137,15 +142,49 @@ def run_method(
     seed: int = 0,
     eval_every: int = 1,
 ) -> RunResult:
+    """Run a method through the pluggable protocol engine (core/engine.py).
+
+    The engine reproduces the reference loops below bit-for-bit for the
+    ``group``/``sync`` protocols (pinned by tests/test_engine.py) with far
+    fewer host<->device dispatches. The one exception is the impractical
+    ``exact_dual_feedback`` theory variant, whose per-round host ``lstsq``
+    cannot be fused -- it stays on the reference path.
+    """
+    if method.exact_dual_feedback:
+        return run_method_reference(problem, method, cluster,
+                                    num_outer=num_outer, seed=seed,
+                                    eval_every=eval_every)
+    from repro.core import engine  # late import: engine imports our types
+
+    return engine.run_method(problem, method, cluster, num_outer=num_outer,
+                             seed=seed, eval_every=eval_every)
+
+
+def run_method_reference(
+    problem: objectives.Problem,
+    method: MethodConfig,
+    cluster: ClusterModel,
+    *,
+    num_outer: int,
+    seed: int = 0,
+    eval_every: int = 1,
+) -> RunResult:
+    """The seed implementation: host-Python loops, one dispatch per op.
+
+    Kept as the equivalence oracle for the engine (and for the
+    ``exact_dual_feedback`` variant) -- do not optimize; its op-for-op
+    ordering defines the bit-exact trajectories the engine must reproduce.
+    """
     if method.protocol == "sync":
         return _run_sync(problem, method, cluster, num_outer=num_outer, seed=seed, eval_every=eval_every)
     if method.protocol == "group":
         return _run_group(problem, method, cluster, num_outer=num_outer, seed=seed, eval_every=eval_every)
-    raise ValueError(f"unknown protocol {method.protocol!r}")
+    raise ValueError(f"reference implementation only covers 'group'/'sync', "
+                     f"got {method.protocol!r}")
 
 
 # ---------------------------------------------------------------------------
-# Group-wise protocol: Algorithms 1 + 2.
+# Reference group-wise protocol: Algorithms 1 + 2.
 # ---------------------------------------------------------------------------
 
 
@@ -287,7 +326,7 @@ def _run_sync(problem, method, cluster, *, num_outer, seed, eval_every) -> RunRe
     alpha = jnp.zeros((K, n_k), problem.X.dtype)
 
     sim_time = 0.0
-    bytes_moved = 0
+    bytes_up = bytes_down = 0
     compute_time = comm_time = 0.0
     records: list[RunRecord] = []
 
@@ -307,7 +346,14 @@ def _run_sync(problem, method, cluster, *, num_outer, seed, eval_every) -> RunRe
         sim_time += step_compute + step_comm
         compute_time += step_compute
         comm_time += step_comm
-        bytes_moved += 2 * (K - 1) * d * 4  # ring all-reduce traffic
+        # Ring all-reduce = reduce-scatter + all-gather, (K-1)/K * d * 4 bytes
+        # per node per phase. The reduce-scatter moves worker contributions
+        # toward the aggregate (upload-like), the all-gather distributes the
+        # result (download-like) -- split so Table-1 byte columns compare
+        # like-for-like with the group protocol's up/down accounting.
+        phase = (K - 1) * d * 4
+        bytes_up += phase
+        bytes_down += phase
 
         if it % eval_every == 0:
             cert = objectives.gap_certificate(problem, alpha, w=w)
@@ -315,7 +361,7 @@ def _run_sync(problem, method, cluster, *, num_outer, seed, eval_every) -> RunRe
                 iteration=it, sim_time=sim_time,
                 gap=cert["gap"], gap_server=cert["gap_server"],
                 primal=cert["primal"], dual=cert["dual"],
-                bytes_up=bytes_moved, bytes_down=0,
+                bytes_up=bytes_up, bytes_down=bytes_down,
                 compute_time=compute_time, comm_time=comm_time,
             ))
 

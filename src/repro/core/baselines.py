@@ -51,6 +51,29 @@ def acpd_dense(K: int, *, B: int | None = None, T: int = 20, gamma: float = 0.5,
                         rho=1.0, gamma=gamma, H=H)
 
 
+def acpd_async(K: int, d: int, *, T: int = 20, rho_d: int = 1000,
+               gamma: float = 0.5, H: int = 1000) -> MethodConfig:
+    """Fully-asynchronous: B=1, per-arrival apply, no sync barrier.
+
+    ``T`` only sets the round budget (num_outer * T rounds), not a barrier.
+    sigma' is floored at 1: the paper's gamma*B rule would give gamma < 1,
+    under-damping the local subproblem when every round applies one worker.
+    """
+    return MethodConfig(name="ACPD-async", protocol="async", B=1, T=T,
+                        rho=min(1.0, rho_d / d), gamma=gamma, H=H,
+                        sigma_prime=max(1.0, gamma))
+
+
+def acpd_lag(K: int, d: int, *, B: int | None = None, T: int = 20,
+             rho_d: int = 1000, gamma: float = 0.5, H: int = 1000,
+             lag_xi: float = 1.0) -> MethodConfig:
+    """LAG-style lazy uploads on top of the group protocol (engine.LagProtocol)."""
+    B = B if B is not None else max(1, K // 2)
+    return MethodConfig(name="ACPD-LAG", protocol="lag", B=B, T=T,
+                        rho=min(1.0, rho_d / d), gamma=gamma, H=H,
+                        lag_xi=lag_xi)
+
+
 ALL_PRESETS = {
     "cocoa": cocoa,
     "cocoa_plus": cocoa_plus,
@@ -58,4 +81,6 @@ ALL_PRESETS = {
     "acpd": acpd,
     "acpd_full_barrier": acpd_full_barrier,
     "acpd_dense": acpd_dense,
+    "acpd_async": acpd_async,
+    "acpd_lag": acpd_lag,
 }

@@ -1,0 +1,628 @@
+"""Pluggable event-driven protocol engine for distributed primal-dual methods.
+
+One priority-queue server loop, parameterized by a :class:`Protocol` that
+supplies the three rules the paper's Algorithm 1 fixes ad hoc:
+
+* **arrival rule**   -- how many worker messages the server waits for
+  (``B`` of ``K`` for the group protocol, all ``K`` for synchronous methods,
+  1 for fully-asynchronous operation);
+* **aggregation rule** -- how arrived payloads enter the server state
+  (catch-up buffers ``dw_tilde`` for the group family, plain allreduce-style
+  summation for the CoCoA lineage);
+* **reply rule**     -- what goes back to each worker and how it is timed
+  and billed (p2p catch-up replies vs one ring all-reduce).
+
+Protocols are registry entries (:func:`register_protocol`), so new server
+disciplines -- e.g. LAG-style lazy aggregation (Chen et al., arXiv:1805.09965)
+-- are ~50-line configs instead of forks of the loop.
+
+Performance contract vs the reference loops in :mod:`repro.core.acpd`:
+
+* each worker round is ONE donated, jitted dispatch (SDCA solve + dual update
+  + top-k filter + residual update fused; the PRNG split happens inside);
+* each server round is ONE jitted dispatch (aggregation + catch-up replies +
+  reply ``nnz`` computed in-graph) followed by a single scalar pull for the
+  byte accounting -- the reference does a blocking ``int(nnz(...))`` per
+  message;
+* duality-gap evaluation is deferred: snapshots of ``(w, alpha)`` device
+  arrays are collected during simulation and evaluated afterwards (one
+  ``lax.map`` dispatch by default -- NOT vmap, which would break bit-exactness;
+  see ``_eval_batched`` -- or op-for-op identical to the reference with
+  ``eval_mode="replay"``).
+
+``benchmarks/bench_engine.py`` measures the resulting dispatch/wall-clock
+reduction; ``tests/test_engine.py`` pins bit-for-bit equality of the
+``group``/``sync`` trajectories against the reference implementation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from functools import partial
+from typing import Iterable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import filter as msg_filter
+from repro.core import objectives
+from repro.core.acpd import MethodConfig, RunRecord, RunResult
+from repro.core.sdca import solve_subproblem, solve_subproblem_all
+from repro.core.simulate import ClusterModel
+
+# ---------------------------------------------------------------------------
+# Protocol registry.
+# ---------------------------------------------------------------------------
+
+_PROTOCOLS: dict[str, type["Protocol"]] = {}
+
+
+def register_protocol(name: str):
+    """Class decorator: make a Protocol constructible via ``MethodConfig.protocol``."""
+
+    def deco(cls: type["Protocol"]) -> type["Protocol"]:
+        cls.protocol_name = name
+        _PROTOCOLS[name] = cls
+        return cls
+
+    return deco
+
+
+def available_protocols() -> tuple[str, ...]:
+    return tuple(sorted(_PROTOCOLS))
+
+
+def get_protocol(name: str) -> type["Protocol"]:
+    try:
+        return _PROTOCOLS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown protocol {name!r}; available: {available_protocols()}"
+        ) from None
+
+
+# ---------------------------------------------------------------------------
+# Messages and deferred evaluation records.
+# ---------------------------------------------------------------------------
+
+
+class Message:
+    """An in-flight worker->server message (payload stays on device)."""
+
+    __slots__ = ("arrival", "worker", "payload", "alpha_snapshot", "nbytes",
+                 "seq", "applied")
+
+    def __init__(self, arrival: float, worker: int, payload, alpha_snapshot,
+                 nbytes: int, seq: int, applied: bool = True):
+        self.arrival = arrival
+        self.worker = worker
+        self.payload = payload
+        self.alpha_snapshot = alpha_snapshot
+        self.nbytes = nbytes
+        self.seq = seq
+        self.applied = applied  # False for LAG heartbeats (skipped uploads)
+
+    def __lt__(self, other: "Message") -> bool:
+        return (self.arrival, self.seq) < (other.arrival, other.seq)
+
+
+@dataclasses.dataclass
+class _Snapshot:
+    """Host-side accounting + device state captured at an eval boundary."""
+
+    iteration: int
+    sim_time: float
+    bytes_up: int
+    bytes_down: int
+    compute_time: float
+    comm_time: float
+    w: jax.Array
+    alpha: jax.Array  # (K, n_k) server-visible (group) / canonical (sync)
+
+
+# ---------------------------------------------------------------------------
+# Fused jitted rounds.
+# ---------------------------------------------------------------------------
+
+
+def _local_round(key, w_local, alpha_k, residual_k, X_k, y_k, norms_k, k, lam,
+                 n, sigma_p, gamma, *, loss, num_steps, k_keep, use_exact):
+    """Shared Alg. 2 body: solve + dual update + filter. Traced, not jitted --
+    both fused worker rounds inline it so the op sequence (and therefore the
+    bit-exact trajectory) is defined in exactly one place."""
+    key, sub = jax.random.split(key)
+    w_eff = w_local[k] + gamma * residual_k
+    dalpha, v = solve_subproblem(
+        w_eff, alpha_k, X_k, y_k, norms_k, lam, n, sigma_p, sub,
+        loss=loss, num_steps=num_steps)
+    alpha_new = alpha_k + gamma * dalpha  # Alg. 2 line 5
+    dw = residual_k + v  # line 6
+    if k_keep <= 0:
+        sent, new_residual = dw, jnp.zeros_like(dw)
+    else:
+        filt = msg_filter.topk_mask_exact if use_exact else msg_filter.topk_mask
+        res = filt(dw, k_keep)
+        sent, new_residual = res.sent, res.residual
+    return key, alpha_new, new_residual, dw, sent
+
+
+@partial(jax.jit, static_argnames=("loss", "num_steps", "k_keep", "use_exact"),
+         donate_argnums=(0, 2, 3))
+def _worker_round_fused(key, w_local, alpha_k, residual_k, X_k, y_k, norms_k,
+                        k, lam, n, sigma_p, gamma, *, loss, num_steps, k_keep,
+                        use_exact):
+    """One full local round (Alg. 2) as a single dispatch.
+
+    ``k_keep == 0`` means dense (no filtering). Returns the new global PRNG
+    key, the worker's updated dual row and residual, and the filtered payload.
+    """
+    key, alpha_new, new_residual, _, sent = _local_round(
+        key, w_local, alpha_k, residual_k, X_k, y_k, norms_k, k, lam, n,
+        sigma_p, gamma, loss=loss, num_steps=num_steps, k_keep=k_keep,
+        use_exact=use_exact)
+    return key, alpha_new, new_residual, sent
+
+
+@partial(jax.jit, static_argnames=("loss", "num_steps", "k_keep", "use_exact"),
+         donate_argnums=(0, 2, 3))
+def _worker_round_lag(key, w_local, alpha_k, residual_k, ref_k, X_k, y_k,
+                      norms_k, k, lam, n, sigma_p, gamma, xi, *, loss,
+                      num_steps, k_keep, use_exact):
+    """LAG-style lazy worker round: upload only if the delta is informative.
+
+    The upload is skipped when ``||F(dw)||^2 < xi * ref`` where ``ref`` is the
+    squared norm of the worker's last catch-up reply -- its freshest view of
+    how much the global model is already moving without it (the primal-dual
+    analogue of LAG's gradient-change-vs-model-movement test). Skipped mass
+    stays in the residual: error feedback makes laziness lossless, only late,
+    and since replies shrink as the system converges the test stays calibrated
+    (all-quiet -> replies ~ 0 -> uploads resume, no starvation).
+    """
+    key, alpha_new, new_residual, dw, sent = _local_round(
+        key, w_local, alpha_k, residual_k, X_k, y_k, norms_k, k, lam, n,
+        sigma_p, gamma, loss=loss, num_steps=num_steps, k_keep=k_keep,
+        use_exact=use_exact)
+    send_sq = jnp.vdot(sent, sent)
+    skip = send_sq < xi * ref_k
+    sent = jnp.where(skip, jnp.zeros_like(sent), sent)
+    new_residual = jnp.where(skip, dw, new_residual)
+    return key, alpha_new, new_residual, sent, skip
+
+
+# Only dw_tilde/w_local are donated: w_server and alpha_applied may be held
+# by deferred eval snapshots, which donation would invalidate.
+@partial(jax.jit, donate_argnums=(1, 2))
+def _server_apply_fused(w_server, dw_tilde, w_local, alpha_applied, idxs,
+                        payloads, snapshots, apply_mask, gamma):
+    """Alg. 1 lines 8-11 for one group of arrivals, as a single dispatch.
+
+    ``payloads``/``snapshots`` are tuples ordered by arrival (the summation
+    order matters bit-for-bit); ``apply_mask`` marks real uploads (False for
+    LAG heartbeats, whose zero payloads leave the sum unchanged but whose dual
+    snapshots must NOT become server-visible). Reply ``nnz`` is computed
+    in-graph and returned as one small vector -- the only device->host value
+    the event loop needs.
+    """
+    total = jnp.zeros_like(w_server)
+    for p in payloads:
+        total = total + p
+    w_server = w_server + gamma * total
+    dw_tilde = dw_tilde + gamma * total[None, :]
+    snap = jnp.stack(list(snapshots))
+    mask = apply_mask[:, None]
+    alpha_applied = alpha_applied.at[idxs].set(
+        jnp.where(mask, snap, alpha_applied[idxs]))
+    replies = dw_tilde[idxs]
+    reply_nnz = jnp.sum(replies != 0, axis=1)
+    reply_sq = jnp.sum(replies * replies, axis=1)  # LAG's laziness reference
+    w_local = w_local.at[idxs].add(replies)
+    dw_tilde = dw_tilde.at[idxs].set(0.0)
+    return w_server, dw_tilde, w_local, alpha_applied, reply_nnz, reply_sq
+
+
+# Only the key is donated: w/alpha may be held by deferred eval snapshots.
+@partial(jax.jit, static_argnames=("loss", "num_steps"), donate_argnums=(0,))
+def _sync_round_fused(key, w, alpha, X, y, norms_sq, lam, n, sigma_p, gamma, *,
+                      loss, num_steps):
+    """One lockstep CoCoA-family round (all K subproblems + aggregation)."""
+    K = X.shape[0]
+    key, sub = jax.random.split(key)
+    keys = jax.random.split(sub, K)
+    w_all = jnp.broadcast_to(w, (K, w.shape[0]))
+    dalpha, v = solve_subproblem_all(
+        w_all, alpha, X, y, norms_sq, lam, n, sigma_p, keys,
+        loss=loss, num_steps=num_steps)
+    alpha = alpha + gamma * dalpha
+    w = w + gamma * jnp.sum(v, axis=0)
+    return key, w, alpha
+
+
+@partial(jax.jit, static_argnames=("loss",))
+def _eval_batched(ws, alphas, X, y, lam, *, loss):
+    """All deferred gap certificates in one dispatch.
+
+    ``lax.map`` (not vmap): the per-snapshot computation stays unbatched, so
+    each reduction sees the exact operand shapes of the reference's eager
+    ``gap_certificate`` calls -- batched dot_generals reduce in a different
+    order on CPU and break the last-bit equivalence contract.
+    """
+
+    def one(args):
+        w, alpha = args
+        w_alpha = objectives.primal_from_dual(alpha, X, lam)
+        p = objectives.primal_objective(w_alpha, X, y, lam, loss=loss)
+        dv = objectives.dual_objective(alpha, X, y, lam, loss=loss)
+        p_srv = objectives.primal_objective(w, X, y, lam, loss=loss)
+        return p, dv, p - dv, p_srv - dv
+
+    return jax.lax.map(one, (ws, alphas))
+
+
+# ---------------------------------------------------------------------------
+# Protocols.
+# ---------------------------------------------------------------------------
+
+
+class Protocol:
+    """Arrival + aggregation + reply rules driving the engine's event loop."""
+
+    protocol_name = "abstract"
+
+    def __init__(self, problem: objectives.Problem, method: MethodConfig,
+                 cluster: ClusterModel, *, seed: int):
+        self.problem = problem
+        self.method = method
+        self.cluster = cluster
+        self.K, self.n_k, self.d = problem.X.shape
+        self.n = self.K * self.n_k
+        self.sigma_p = method.resolved_sigma_prime(self.K)
+        self.rng = np.random.default_rng(seed)
+        self.key = jax.random.key(seed)
+        self.bytes_up = 0
+        self.bytes_down = 0
+        self.compute_time = 0.0
+        self.comm_time = 0.0
+        self.sim_time = 0.0
+        self.seq = 0
+
+    # --- hooks the engine loop calls -------------------------------------
+
+    def num_rounds(self, num_outer: int) -> int:
+        raise NotImplementedError
+
+    def initial_messages(self) -> Iterable[Message]:
+        raise NotImplementedError
+
+    def arrivals_needed(self, round_index: int) -> int:
+        raise NotImplementedError
+
+    def process_round(self, round_index: int, arrived: list[Message]) -> list[Message]:
+        raise NotImplementedError
+
+    def snapshot(self, iteration: int) -> _Snapshot:
+        raise NotImplementedError
+
+    def finalize(self, records: list[RunRecord]) -> RunResult:
+        raise NotImplementedError
+
+
+@register_protocol("group")
+class GroupProtocol(Protocol):
+    """Algorithms 1+2: straggler-agnostic B-of-K server with catch-up buffers."""
+
+    full_sync_period: bool = True  # every T-th round is a K-barrier
+
+    def __init__(self, problem, method, cluster, *, seed):
+        super().__init__(problem, method, cluster, seed=seed)
+        dt = problem.X.dtype
+        self.dense = method.rho >= 1.0
+        self.k_keep = 0 if self.dense else msg_filter.num_kept(self.d, method.rho)
+        self.up_bytes = (msg_filter.dense_bytes(self.d) if self.dense
+                         else msg_filter.message_bytes(self.k_keep))
+        self.w_server = jnp.zeros((self.d,), dt)
+        self.dw_tilde = jnp.zeros((self.K, self.d), dt)
+        self.w_local = jnp.zeros((self.K, self.d), dt)
+        self.alpha_applied = jnp.zeros((self.K, self.n_k), dt)
+        self.alpha = [jnp.zeros((self.n_k,), dt) for _ in range(self.K)]
+        self.residual = [jnp.zeros((self.d,), dt) for _ in range(self.K)]
+        # Per-worker constants, sliced once (the reference re-slices per round).
+        self.X_k = [problem.X[k] for k in range(self.K)]
+        self.y_k = [problem.y[k] for k in range(self.K)]
+        norms_sq = jnp.sum(problem.X * problem.X, axis=-1)
+        self.norms_k = [norms_sq[k] for k in range(self.K)]
+
+    def num_rounds(self, num_outer: int) -> int:
+        return num_outer * self.method.T
+
+    def initial_messages(self):
+        return [self._launch_worker(k, 0.0) for k in range(self.K)]
+
+    def arrivals_needed(self, round_index: int) -> int:
+        T = self.method.T
+        if self.full_sync_period and round_index % T == T - 1:
+            return self.K
+        return min(self.method.B, self.K)
+
+    def _launch_worker(self, k: int, start_time: float) -> Message:
+        m = self.method
+        self.key, alpha_new, residual_new, sent = _worker_round_fused(
+            self.key, self.w_local, self.alpha[k], self.residual[k],
+            self.X_k[k], self.y_k[k], self.norms_k[k], k, self.problem.lam,
+            self.n, self.sigma_p, m.gamma, loss=self.problem.loss,
+            num_steps=m.H, k_keep=self.k_keep, use_exact=m.use_exact_k)
+        self.alpha[k] = alpha_new
+        self.residual[k] = residual_new
+        duration = self.cluster.compute_time(k, m.H, self.rng)
+        up_time = self.cluster.p2p_time(self.up_bytes)
+        self.compute_time += duration
+        self.comm_time += up_time
+        self.bytes_up += self.up_bytes
+        self.seq += 1
+        return Message(start_time + duration + up_time, k, sent, alpha_new,
+                       self.up_bytes, self.seq)
+
+    def _apply_server(self, arrived):
+        """Fused aggregation + replies; returns (server_time, reply nnz)."""
+        server_time = max(m.arrival for m in arrived)
+        idxs = jnp.asarray([m.worker for m in arrived], jnp.int32)
+        mask = jnp.asarray([m.applied for m in arrived], bool)
+        (self.w_server, self.dw_tilde, self.w_local, self.alpha_applied,
+         reply_nnz, reply_sq) = _server_apply_fused(
+            self.w_server, self.dw_tilde, self.w_local, self.alpha_applied,
+            idxs, tuple(m.payload for m in arrived),
+            tuple(m.alpha_snapshot for m in arrived), mask, self.method.gamma)
+        self._last_reply_sq = reply_sq  # stays on device; LAG reads slices
+        # The ONE host<->device sync of the round (skipped when replies are
+        # dense, whose byte count is static).
+        nnz_host = None if self.dense else np.asarray(reply_nnz)
+        return server_time, nnz_host
+
+    def _account_reply(self, j, server_time, nnz_host) -> float:
+        """Bill the catch-up reply; returns the worker's next start time."""
+        rbytes = (msg_filter.dense_bytes(self.d) if self.dense
+                  else msg_filter.message_bytes(int(nnz_host[j])))
+        self.bytes_down += rbytes
+        down_time = self.cluster.p2p_time(rbytes)
+        self.comm_time += down_time
+        return server_time + down_time
+
+    def process_round(self, round_index, arrived):
+        server_time, nnz_host = self._apply_server(arrived)
+        # Reply accounting and relaunch interleave per worker, matching the
+        # reference's float accumulation order exactly (down, up, down, up).
+        out = []
+        for j, m in enumerate(arrived):
+            start = self._account_reply(j, server_time, nnz_host)
+            out.append(self._launch_worker(m.worker, start))
+        self.sim_time = server_time
+        return out
+
+    def snapshot(self, iteration):
+        return _Snapshot(iteration, self.sim_time, self.bytes_up,
+                         self.bytes_down, self.compute_time, self.comm_time,
+                         self.w_server, self.alpha_applied)
+
+    def finalize(self, records):
+        return RunResult(self.method, records, np.asarray(self.w_server),
+                         np.stack([np.asarray(a) for a in self.alpha]),
+                         alpha_applied=np.asarray(self.alpha_applied))
+
+
+@register_protocol("async")
+class AsyncProtocol(GroupProtocol):
+    """Fully-asynchronous ablation: B=1, per-worker apply, no sync barrier.
+
+    Every arrival is applied immediately; staleness is unbounded (Assumption 3
+    is intentionally violated -- this is the protocol the paper's T-periodic
+    barrier exists to tame, now expressible as a config).
+    """
+
+    full_sync_period = False
+
+    def __init__(self, problem, method, cluster, *, seed):
+        if method.B != 1:
+            raise ValueError(
+                f"protocol 'async' is defined by B=1 (per-arrival apply); "
+                f"got B={method.B}. Use protocol='group' for B-of-K "
+                f"aggregation, or baselines.acpd_async() for a valid config.")
+        super().__init__(problem, method, cluster, seed=seed)
+
+
+@register_protocol("lag")
+class LagProtocol(GroupProtocol):
+    """Group protocol + LAG-style lazy uploads (arXiv:1805.09965 adapted).
+
+    Workers whose filtered delta carries little mass relative to their last
+    catch-up reply (their freshest view of global model movement) send an
+    8-byte heartbeat instead of the payload and keep the mass in the
+    residual. The server treats heartbeats as arrivals (the worker is alive
+    and gets its catch-up reply) but applies nothing for them.
+    """
+
+    HEARTBEAT_BYTES = 8
+
+    def __init__(self, problem, method, cluster, *, seed):
+        super().__init__(problem, method, cluster, seed=seed)
+        # ||last catch-up reply||^2 per worker; 0 => first round always uploads.
+        self.ref = [jnp.zeros((), problem.X.dtype) for _ in range(self.K)]
+
+    def _launch_lag(self, k: int, start_time: float):
+        """Fused round; returns (device skip flag, message-parts tuple)."""
+        m = self.method
+        self.key, alpha_new, residual_new, sent, skip = _worker_round_lag(
+            self.key, self.w_local, self.alpha[k], self.residual[k],
+            self.ref[k], self.X_k[k], self.y_k[k], self.norms_k[k], k,
+            self.problem.lam, self.n, self.sigma_p, m.gamma, m.lag_xi,
+            loss=self.problem.loss, num_steps=m.H,
+            k_keep=self.k_keep, use_exact=m.use_exact_k)
+        self.alpha[k] = alpha_new
+        self.residual[k] = residual_new
+        return skip, (k, start_time, sent, alpha_new)
+
+    def _finish_launch(self, skipped: bool, parts) -> Message:
+        k, start_time, sent, alpha_new = parts
+        nbytes = self.HEARTBEAT_BYTES if skipped else self.up_bytes
+        duration = self.cluster.compute_time(k, self.method.H, self.rng)
+        up_time = self.cluster.p2p_time(nbytes)
+        self.compute_time += duration
+        self.comm_time += up_time
+        self.bytes_up += nbytes
+        self.seq += 1
+        return Message(start_time + duration + up_time, k, sent, alpha_new,
+                       nbytes, self.seq, applied=not skipped)
+
+    def _relaunch_batched(self, starts):
+        if not starts:
+            return []
+        flags, parts = zip(*[self._launch_lag(k, s) for k, s in starts])
+        skipped = np.asarray(jnp.stack(flags))  # one pull for the whole group
+        return [self._finish_launch(bool(s), p) for s, p in zip(skipped, parts)]
+
+    def initial_messages(self):
+        return self._relaunch_batched([(k, 0.0) for k in range(self.K)])
+
+    def process_round(self, round_index, arrived):
+        server_time, nnz_host = self._apply_server(arrived)
+        starts = []
+        for j, m in enumerate(arrived):
+            # Refresh the laziness reference from this round's reply (device
+            # slice, no host sync).
+            self.ref[m.worker] = self._last_reply_sq[j]
+            starts.append((m.worker,
+                           self._account_reply(j, server_time, nnz_host)))
+        self.sim_time = server_time
+        return self._relaunch_batched(starts)
+
+
+@register_protocol("sync")
+class SyncProtocol(Protocol):
+    """CoCoA / CoCoA+ / DisDCA: lockstep rounds timed as MPI allreduce.
+
+    The queue degenerates to K tokens popped per round; timing follows the
+    reference implementation exactly (max worker compute + ring allreduce,
+    bytes split evenly between the reduce-scatter and all-gather phases).
+    """
+
+    def __init__(self, problem, method, cluster, *, seed):
+        super().__init__(problem, method, cluster, seed=seed)
+        dt = problem.X.dtype
+        self.w = jnp.zeros((self.d,), dt)
+        self.alpha = jnp.zeros((self.K, self.n_k), dt)
+        self.norms_sq = jnp.sum(problem.X * problem.X, axis=-1)
+
+    def num_rounds(self, num_outer: int) -> int:
+        return num_outer
+
+    def _tokens(self):
+        out = []
+        for k in range(self.K):
+            self.seq += 1
+            out.append(Message(self.sim_time, k, None, None, 0, self.seq))
+        return out
+
+    def initial_messages(self):
+        return self._tokens()
+
+    def arrivals_needed(self, round_index: int) -> int:
+        return self.K
+
+    def process_round(self, round_index, arrived):
+        m = self.method
+        self.key, self.w, self.alpha = _sync_round_fused(
+            self.key, self.w, self.alpha, self.problem.X, self.problem.y,
+            self.norms_sq, self.problem.lam, self.n, self.sigma_p, m.gamma,
+            loss=self.problem.loss, num_steps=m.H)
+        step_compute = max(self.cluster.compute_time(k, m.H, self.rng)
+                           for k in range(self.K))
+        step_comm = self.cluster.allreduce_time(self.d)
+        self.sim_time += step_compute + step_comm
+        self.compute_time += step_compute
+        self.comm_time += step_comm
+        phase = (self.K - 1) * self.d * 4  # ring reduce-scatter == all-gather
+        self.bytes_up += phase
+        self.bytes_down += phase
+        return self._tokens()
+
+    def snapshot(self, iteration):
+        return _Snapshot(iteration, self.sim_time, self.bytes_up,
+                         self.bytes_down, self.compute_time, self.comm_time,
+                         self.w, self.alpha)
+
+    def finalize(self, records):
+        return RunResult(self.method, records, np.asarray(self.w),
+                         np.asarray(self.alpha))
+
+
+# ---------------------------------------------------------------------------
+# The engine loop.
+# ---------------------------------------------------------------------------
+
+
+def _materialize_records(snaps: list[_Snapshot], problem: objectives.Problem,
+                         eval_mode: str) -> list[RunRecord]:
+    """Turn deferred snapshots into RunRecords.
+
+    ``batched``: one ``lax.map`` dispatch covering every gap certificate.
+    ``replay``: op-for-op the reference's per-round ``gap_certificate`` calls
+    (bit-identical floats by construction; used as a debugging oracle --
+    ``batched`` is equally bit-exact, which tests/test_engine.py pins).
+    """
+    if not snaps:
+        return []
+    if eval_mode == "replay":
+        rows = []
+        for s in snaps:
+            cert = objectives.gap_certificate(problem, s.alpha, w=s.w)
+            rows.append((cert["primal"], cert["dual"], cert["gap"],
+                         cert["gap_server"]))
+    elif eval_mode == "batched":
+        ws = jnp.stack([s.w for s in snaps])
+        alphas = jnp.stack([s.alpha for s in snaps])
+        p, dv, gap, gap_srv = _eval_batched(ws, alphas, problem.X, problem.y,
+                                            problem.lam, loss=problem.loss)
+        rows = list(zip(np.asarray(p, np.float64), np.asarray(dv, np.float64),
+                        np.asarray(gap, np.float64),
+                        np.asarray(gap_srv, np.float64)))
+    else:
+        raise ValueError(f"unknown eval_mode {eval_mode!r}")
+    return [
+        RunRecord(iteration=s.iteration, sim_time=s.sim_time,
+                  gap=float(gap), gap_server=float(gap_srv), primal=float(p),
+                  dual=float(dv), bytes_up=int(s.bytes_up),
+                  bytes_down=int(s.bytes_down), compute_time=s.compute_time,
+                  comm_time=s.comm_time)
+        for s, (p, dv, gap, gap_srv) in zip(snaps, rows)
+    ]
+
+
+def run_method(
+    problem: objectives.Problem,
+    method: MethodConfig,
+    cluster: ClusterModel,
+    *,
+    num_outer: int,
+    seed: int = 0,
+    eval_every: int = 1,
+    eval_mode: str = "batched",
+) -> RunResult:
+    """Run ``method`` through the pluggable engine. Same contract as
+    :func:`repro.core.acpd.run_method` (which now delegates here)."""
+    proto = get_protocol(method.protocol)(problem, method, cluster, seed=seed)
+    queue: list[Message] = []
+    for msg in proto.initial_messages():
+        heapq.heappush(queue, msg)
+
+    snaps: list[_Snapshot] = []
+    iteration = 0
+    for r in range(proto.num_rounds(num_outer)):
+        need = proto.arrivals_needed(r)
+        arrived = [heapq.heappop(queue) for _ in range(need)]
+        for msg in proto.process_round(r, arrived):
+            heapq.heappush(queue, msg)
+        iteration += 1
+        if iteration % eval_every == 0:
+            snaps.append(proto.snapshot(iteration))
+
+    return proto.finalize(_materialize_records(snaps, problem, eval_mode))

@@ -56,7 +56,9 @@ def _sdca_kernel(idx_row,  # (H,) int32 visit order for this worker (SMEM-read)
     def body(h, carry):
         dalpha, v = carry
         i = idx_row[h]
-        x_i = pl.load(x_ref, (0, pl.ds(i, 1), slice(None)))[0]  # (d,)
+        # All-slice index tuple: a bare scalar 0 here breaks the JAX 0.4.x
+        # interpret-mode discharge rule (int has no .shape).
+        x_i = pl.load(x_ref, (pl.ds(0, 1), pl.ds(i, 1), slice(None)))[0, 0]  # (d,)
         a_i = alpha[i] + dalpha[i]
         z_i = jnp.dot(w_eff, x_i) + sigma_p * jnp.dot(v, x_i)
         q_i = sigma_p * norms[i] / lam_n

@@ -22,7 +22,9 @@ from repro.models.param import ParamSpec
 
 def active_params(cfg: ModelConfig) -> float:
     spec = model_spec(cfg)
-    flat, _ = jax.tree.flatten_with_path(
+    # jax.tree.flatten_with_path only exists from JAX 0.5; tree_util spelling
+    # works on 0.4.x too.
+    flat, _ = jax.tree_util.tree_flatten_with_path(
         spec, is_leaf=lambda x: isinstance(x, ParamSpec))
     total = 0.0
     moe_scale = (cfg.experts_per_token / cfg.num_experts) if cfg.num_experts else 1.0

@@ -175,6 +175,8 @@ def analyze(compiled, *, model_flops_global: float | None = None,
     from repro.launch.hlo_program import analyze_program
 
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # JAX 0.4.x: one dict per device
+        ca = ca[0] if ca else {}
     so_flops = float(ca.get("flops", 0.0))
     so_bytes = float(ca.get("bytes accessed", 0.0))
     hlo_text = compiled.as_text()

@@ -8,19 +8,34 @@ import jax
 from jax.sharding import Mesh
 
 
+def _axis_type_kwargs(num_axes: int) -> dict:
+    """``axis_types=`` kwarg when this JAX has it, empty dict otherwise.
+
+    ``jax.sharding.AxisType`` only exists from JAX 0.5; on 0.4.x every mesh
+    axis is implicitly Auto, so omitting the kwarg is semantically identical.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * num_axes}
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]) -> Mesh:
+    """Version-safe ``jax.make_mesh`` with all axes Auto-typed."""
+    return jax.make_mesh(shape, axes, **_axis_type_kwargs(len(axes)))
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     """16x16 v5e pod (256 chips); multi_pod adds the 2-pod axis (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh() -> Mesh:
     """Whatever this host has (1 CPU device here): for smoke tests/examples."""
     n = len(jax.devices())
-    return jax.make_mesh((1, n), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((1, n), ("data", "model"))
 
 
 def data_axes(mesh: Mesh) -> tuple[str, ...]:

@@ -146,7 +146,9 @@ def tree_shardings(spec: PyTree, mesh: Mesh, rules: dict[str, Any] | None = None
 def explain_sharding(spec: PyTree, mesh: Mesh, rules: dict[str, Any] | None = None) -> list[str]:
     """Human-readable list of which params replicated due to indivisibility."""
     out: list[str] = []
-    flat, _ = jax.tree.flatten_with_path(spec, is_leaf=lambda x: isinstance(x, ParamSpec))
+    # tree_util spelling: jax.tree.flatten_with_path needs JAX >= 0.5.
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        spec, is_leaf=lambda x: isinstance(x, ParamSpec))
     rules = DEFAULT_RULES if rules is None else rules
     for path, s in flat:
         for a, dim in zip(s.axes, s.shape):

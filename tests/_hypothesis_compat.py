@@ -1,0 +1,99 @@
+"""Use hypothesis when installed; otherwise a deterministic fallback.
+
+The property tests in this suite only use ``@settings(...) @given(st.integers(a, b), ...)``.
+When ``hypothesis`` is unavailable (it is not baked into every container this
+repo runs in), ``given`` degrades to a deterministic sweep: the endpoints of
+every integer strategy plus a fixed-seed random sample, capped at the test's
+``max_examples``. That keeps the properties exercised (including the edge
+cases hypothesis shrinks toward) instead of skipping four whole modules.
+
+Usage in test modules::
+
+    from _hypothesis_compat import given, settings, st
+"""
+
+from __future__ import annotations
+
+import functools
+import itertools
+
+try:  # pragma: no cover - exercised implicitly by which branch imports
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+
+    _DEFAULT_MAX_EXAMPLES = 20
+
+    class _IntegersStrategy:
+        def __init__(self, lo: int, hi: int):
+            self.lo, self.hi = int(lo), int(hi)
+
+        def examples(self, rng: np.random.Generator, n: int) -> list[int]:
+            edge = [self.lo, self.hi, min(self.hi, self.lo + 1)]
+            rand = rng.integers(self.lo, self.hi + 1, size=max(n, 1)).tolist()
+            return [int(v) for v in itertools.chain(edge, rand)][:n]
+
+    class _FloatsStrategy:
+        def __init__(self, lo: float, hi: float):
+            self.lo, self.hi = float(lo), float(hi)
+
+        def examples(self, rng: np.random.Generator, n: int) -> list[float]:
+            edge = [self.lo, self.hi, 0.5 * (self.lo + self.hi)]
+            rand = rng.uniform(self.lo, self.hi, size=max(n, 1)).tolist()
+            return [float(v) for v in itertools.chain(edge, rand)][:n]
+
+    class _SampledFromStrategy:
+        def __init__(self, elements):
+            self.elements = list(elements)
+
+        def examples(self, rng: np.random.Generator, n: int):
+            idx = rng.integers(0, len(self.elements), size=max(n, 1))
+            cycled = itertools.chain(self.elements, (self.elements[i] for i in idx))
+            return list(cycled)[:n]
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _IntegersStrategy:
+            return _IntegersStrategy(min_value, max_value)
+
+        @staticmethod
+        def floats(min_value: float, max_value: float, **_ignored) -> _FloatsStrategy:
+            return _FloatsStrategy(min_value, max_value)
+
+        @staticmethod
+        def sampled_from(elements) -> _SampledFromStrategy:
+            return _SampledFromStrategy(elements)
+
+    st = _Strategies()  # type: ignore[assignment]
+
+    def given(*strategies):  # type: ignore[misc]
+        def decorate(fn):
+            # No functools.wraps: pytest must see a ZERO-arg signature, or it
+            # would try to resolve the property arguments as fixtures.
+            def wrapper():
+                n = getattr(wrapper, "_compat_max_examples", _DEFAULT_MAX_EXAMPLES)
+                rng = np.random.default_rng(0)
+                columns = [s.examples(rng, n) for s in strategies]
+                for case in zip(*columns):
+                    fn(*case)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+
+        return decorate
+
+    def settings(*, max_examples: int = _DEFAULT_MAX_EXAMPLES, **_ignored):  # type: ignore[misc]
+        def decorate(fn):
+            fn._compat_max_examples = max_examples
+            return fn
+
+        return decorate
+
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]

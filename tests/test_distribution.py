@@ -23,8 +23,8 @@ _SCRIPT = textwrap.dedent("""
     from repro.launch import hlo_analysis
     from repro.optim.optimizers import OptimizerConfig
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((2, 4), ("data", "model"))
     cfg = get_config("qwen3-moe-30b-a3b").reduced()
     out = {}
 

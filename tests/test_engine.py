@@ -1,0 +1,154 @@
+"""Engine regression: the pluggable protocol engine (core/engine.py) must
+reproduce the reference implementation (core/acpd.py loops) bit-for-bit for
+the seed's ``group`` and ``sync`` protocols, and its new protocols
+(``async``, ``lag``) must behave as designed."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import baselines, engine
+from repro.core.acpd import run_method, run_method_reference
+from repro.core.simulate import ClusterModel
+
+K, D = 4, 512
+
+
+def _assert_records_identical(got, want):
+    assert len(got.records) == len(want.records)
+    for rg, rw in zip(got.records, want.records):
+        for f in dataclasses.fields(rg):
+            a, b = getattr(rg, f.name), getattr(rw, f.name)
+            assert a == b, (f.name, a, b, rg.iteration)
+
+
+def _assert_runs_identical(got, want):
+    _assert_records_identical(got, want)
+    np.testing.assert_array_equal(got.w, want.w)
+    np.testing.assert_array_equal(got.alpha, want.alpha)
+    if want.alpha_applied is None:
+        assert got.alpha_applied is None
+    else:
+        np.testing.assert_array_equal(got.alpha_applied, want.alpha_applied)
+
+
+@pytest.mark.parametrize("method_fn,kwargs,outer", [
+    (baselines.acpd, dict(B=2, T=6, rho_d=32, gamma=0.5, H=96), 3),
+    (baselines.acpd_dense, dict(B=2, T=6, gamma=0.5, H=96), 3),
+    (baselines.acpd_full_barrier, dict(T=6, rho_d=32, gamma=0.5, H=96), 3),
+], ids=["sparse", "dense", "full_barrier"])
+def test_group_engine_bit_for_bit(small_problem, method_fn, kwargs, outer):
+    if method_fn is baselines.acpd_dense:
+        m = method_fn(K, **kwargs)
+    else:
+        m = method_fn(K, D, **kwargs)
+    cluster = ClusterModel(num_workers=K, straggler_sigma=3.0)
+    ref = run_method_reference(small_problem, m, cluster, num_outer=outer,
+                               eval_every=1, seed=13)
+    got = engine.run_method(small_problem, m, cluster, num_outer=outer,
+                            eval_every=1, seed=13)
+    _assert_runs_identical(got, ref)
+
+
+def test_group_engine_bit_for_bit_with_jitter(small_problem):
+    """Jittered straggler clock: the host-rng draw order must match too."""
+    m = baselines.acpd(K, D, B=2, T=5, rho_d=64, gamma=0.5, H=64)
+    cluster = ClusterModel(num_workers=K, straggler_sigma=2.0, jitter=0.3)
+    ref = run_method_reference(small_problem, m, cluster, num_outer=2,
+                               eval_every=2, seed=5)
+    got = engine.run_method(small_problem, m, cluster, num_outer=2,
+                            eval_every=2, seed=5)
+    _assert_runs_identical(got, ref)
+
+
+def test_sync_engine_bit_for_bit(small_problem):
+    m = baselines.cocoa_plus(K, H=96)
+    cluster = ClusterModel(num_workers=K, straggler_sigma=3.0)
+    ref = run_method_reference(small_problem, m, cluster, num_outer=12,
+                               eval_every=3, seed=13)
+    got = engine.run_method(small_problem, m, cluster, num_outer=12,
+                            eval_every=3, seed=13)
+    _assert_runs_identical(got, ref)
+
+
+def test_run_method_dispatches_to_engine(small_problem):
+    """The public entry point and the engine produce the same stream."""
+    m = baselines.acpd(K, D, B=2, T=5, rho_d=64, gamma=0.5, H=64)
+    cluster = ClusterModel(num_workers=K)
+    a = run_method(small_problem, m, cluster, num_outer=2, eval_every=2, seed=3)
+    b = engine.run_method(small_problem, m, cluster, num_outer=2, eval_every=2,
+                          seed=3)
+    _assert_runs_identical(a, b)
+
+
+def test_registry_contents_and_errors():
+    names = engine.available_protocols()
+    for expected in ("group", "sync", "async", "lag"):
+        assert expected in names
+    with pytest.raises(ValueError, match="unknown protocol"):
+        engine.get_protocol("nope")
+
+
+def test_async_rejects_group_sized_B(small_problem):
+    """B is a public knob; 'async' must refuse B != 1 instead of silently
+    ignoring it."""
+    m = dataclasses.replace(baselines.acpd_async(K, D), B=4)
+    with pytest.raises(ValueError, match="B=1"):
+        run_method(small_problem, m, ClusterModel(num_workers=K),
+                   num_outer=1, eval_every=1, seed=0)
+
+
+def test_async_protocol_converges(small_problem):
+    """B=1 per-arrival apply: steady progress despite unbounded staleness.
+
+    Each round applies ONE worker (vs B for the group protocol), so the
+    per-round bar is proportionally lower: a 20x gap reduction over 80
+    single-arrival rounds, no divergence.
+    """
+    m = baselines.acpd_async(K, D, T=10, rho_d=64, gamma=0.5, H=256)
+    res = run_method(small_problem, m, ClusterModel(num_workers=K,
+                                                    straggler_sigma=5.0),
+                     num_outer=8, eval_every=4, seed=2)
+    gaps = [r.gap for r in res.records]
+    assert gaps[-1] < 1e-2, gaps[-1]
+    assert gaps[-1] < gaps[0] / 20, (gaps[0], gaps[-1])
+    # every round waits for exactly one arrival -> one record per arrival
+    assert res.records[-1].iteration == 8 * 10
+
+
+def test_lag_protocol_converges_and_saves_upload_bytes(small_problem):
+    """Lazy uploads must cut bytes_up vs the plain group protocol without
+    giving up convergence (mass is preserved by the residual)."""
+    cluster = ClusterModel(num_workers=K)
+    group = baselines.acpd(K, D, B=2, T=10, rho_d=64, gamma=0.5, H=256)
+    lag = baselines.acpd_lag(K, D, B=2, T=10, rho_d=64, gamma=0.5, H=256,
+                             lag_xi=1.0)
+    res_g = run_method(small_problem, group, cluster, num_outer=8,
+                       eval_every=4, seed=2)
+    res_l = run_method(small_problem, lag, cluster, num_outer=8,
+                       eval_every=4, seed=2)
+    assert res_l.records[-1].gap < 1e-3, res_l.records[-1].gap
+    # Strictly fewer upload bytes == heartbeats actually happened (both runs
+    # launch the same number of worker rounds; a full upload costs 512 bytes
+    # here, a heartbeat 8).
+    assert res_l.records[-1].bytes_up < res_g.records[-1].bytes_up, (
+        res_l.records[-1].bytes_up, res_g.records[-1].bytes_up)
+
+
+def test_exact_dual_feedback_stays_on_reference_path():
+    """The impractical theory variant cannot be fused; run_method must route
+    it to the reference loop (and still produce the Lemma-1 invariant)."""
+    m = dataclasses.replace(
+        baselines.acpd(2, 64, B=1, T=5, rho_d=8, gamma=0.5, H=64),
+        exact_dual_feedback=True)
+    from repro.data.synthetic import LinearDatasetSpec, make_linear_problem
+
+    prob = make_linear_problem(
+        LinearDatasetSpec(num_workers=2, n_per_worker=96, d=64,
+                          nnz_per_row=16, seed=33), lam=1e-2)
+    res = run_method(prob, m, ClusterModel(num_workers=2), num_outer=2,
+                     eval_every=1, seed=0)
+    ref = run_method_reference(prob, m, ClusterModel(num_workers=2),
+                               num_outer=2, eval_every=1, seed=0)
+    _assert_runs_identical(res, ref)

@@ -1,11 +1,10 @@
 """GroupedDeltaExchange invariants (the deep-net ACPD integration)."""
 
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+from _hypothesis_compat import given, settings, st
 
 from repro.core import exchange as ex
 

@@ -1,9 +1,8 @@
 """Message filter properties (paper Alg. 2 lines 7-9) -- hypothesis-driven."""
 
-import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
+from _hypothesis_compat import given, settings, st
 
 from repro.core import filter as flt
 

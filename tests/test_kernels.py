@@ -1,11 +1,10 @@
 """Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + properties."""
 
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels import ops, ref
 

@@ -1,11 +1,10 @@
 """Objectives: conjugacy, duality gap, primal-dual map (paper Eqs. 2-5)."""
 
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+from _hypothesis_compat import given, settings, st
 
 from repro.core import objectives as obj
 

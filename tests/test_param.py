@@ -12,8 +12,9 @@ from repro.models import param as pm
 def _mesh():
     # 1-device CPU mesh with named axes of size 1: the rule machinery must
     # resolve identically (everything divisible by 1).
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+
+    return make_mesh((1, 1), ("data", "model"))
 
 
 def test_spec_abstract_and_materialize():

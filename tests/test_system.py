@@ -24,12 +24,15 @@ def test_paper_pipeline_end_to_end(small_problem):
     target = 1e-3
     t_a, t_c = acpd.time_to_gap(target), cocoa.time_to_gap(target)
     assert t_a is not None and t_c is not None and t_a < t_c
-    b_a = next(r.bytes_up for r in acpd.records if r.gap <= target)
-    b_c = next(r.bytes_up for r in cocoa.records if r.gap <= target)
-    # Table I: O(rho d) vs O(d). At rho=64/512=12.5% and with the dense
-    # catch-up replies counted, ~5x is the honest ceiling here; the >40x
-    # ratios show up at RCV1+ dimensionality (bench_table1 static rows).
-    assert b_a < b_c / 3
+    ra = next(r for r in acpd.records if r.gap <= target)
+    rc = next(r for r in cocoa.records if r.gap <= target)
+    # Table I: O(rho d) vs O(d) in the upload direction. With the ring
+    # allreduce split evenly into up/down (like-for-like accounting), the
+    # honest upload ceiling at rho=64/512=12.5% is ~2.4x, and the total only
+    # narrowly favors ACPD (its catch-up replies are dense); the >40x ratios
+    # show up at RCV1+ dimensionality (bench_table1 static rows).
+    assert ra.bytes_up < rc.bytes_up / 2
+    assert ra.bytes_up + ra.bytes_down < rc.bytes_up + rc.bytes_down
 
 
 def test_practical_filter_variant_converges_like_paper_claims():
