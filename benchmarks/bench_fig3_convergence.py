@@ -1,47 +1,40 @@
 """Fig. 3: duality-gap convergence vs rounds and vs simulated time, for
 sigma in {1, 10}, comparing CoCoA+, ACPD, and the two ablations (B=K, rho=1).
 
+Spec-driven: each sigma is one ``repro.api.presets.fig3`` ExperimentSpec
+(round-trippable via ``python -m repro spec fig3``); the dumped JSON embeds
+the specs as provenance.
+
 Derived metric: simulated time to duality gap 1e-3 (the paper's headline is
 the wall-clock ratio under stragglers).
 """
 
 from __future__ import annotations
 
-from benchmarks.common import cluster, dump, emit, rcv1_like, timed
-from repro.core import baselines
-from repro.core.acpd import run_method
+from benchmarks.common import dump, emit, timed
+from repro.api import Experiment, presets
 
 TARGET = 1e-3
 
 
 def main(quick: bool = False) -> None:
-    K, d = 4, 512 if quick else 2048
-    H = 64 if quick else 256
-    prob = rcv1_like(K=K, d=d)
     curves = {}
+    specs = []
     for sigma in ((10.0,) if quick else (1.0, 10.0)):
-        cl = cluster(K, sigma=sigma)
-        methods = [
-            (baselines.cocoa_plus(K, H=H), 10 if quick else 60),
-            (baselines.acpd(K, d, B=2, T=10, rho_d=64, gamma=0.5, H=H),
-             3 if quick else 12),
-            (baselines.acpd_full_barrier(K, d, T=10, rho_d=64, gamma=0.5,
-                                         H=H), 2 if quick else 8),
-            (baselines.acpd_dense(K, B=2, T=10, gamma=0.5, H=H),
-             2 if quick else 8),
-        ]
-        for m, outer in methods:
-            res, us = timed(run_method, prob, m, cl, num_outer=outer,
-                            eval_every=2, seed=0)
+        spec = presets.fig3(sigma=sigma, quick=quick)
+        specs.append(spec)
+        exp = Experiment(spec)
+        for entry in spec.methods:
+            res, us = timed(exp.run_entry, entry)
             t = res.time_to_gap(TARGET)
             r = res.rounds_to_gap(TARGET)
-            tag = f"fig3/sigma{int(sigma)}/{m.name}"
+            tag = f"fig3/sigma{int(sigma)}/{entry.config.name}"
             emit(tag + "/time_to_gap_s", us, None if t is None else round(t, 4))
             emit(tag + "/rounds_to_gap", us, r)
-            curves[f"{m.name}@sigma{int(sigma)}"] = [
+            curves[f"{entry.config.name}@sigma{int(sigma)}"] = [
                 {"iter": rec.iteration, "time": rec.sim_time, "gap": rec.gap}
                 for rec in res.records]
-    dump("fig3_convergence", curves)
+    dump("fig3_convergence", curves, specs=specs)
 
 
 if __name__ == "__main__":

@@ -1,29 +1,29 @@
 """Fig. 4a: effect of the sparsity constant rho on convergence (rounds to a
-mid-accuracy gap and the final gap), rho*d from d/256 up to d (dense)."""
+mid-accuracy gap and the final gap), rho*d from d/256 up to d (dense).
+
+Spec-driven: the whole sweep is one ``repro.api.presets.fig4a``
+ExperimentSpec (one ACPD method entry per rho*d)."""
 
 from __future__ import annotations
 
-from benchmarks.common import cluster, dump, emit, rcv1_like, timed
-from repro.core import baselines
-from repro.core.acpd import run_method
+from benchmarks.common import dump, emit, timed
+from repro.api import Experiment, presets
 
 
 def main(quick: bool = False) -> None:
-    K, d = 4, 512 if quick else 2048
-    H = 64 if quick else 256
-    prob = rcv1_like(K=K, d=d)
+    spec = presets.fig4a(quick=quick)
+    exp = Experiment(spec)
     curves = {}
-    for rho_d in ((8, 128) if quick else (8, 32, 128, 512, 2048)):
-        m = baselines.acpd(K, d, B=2, T=10, rho_d=rho_d, gamma=0.5, H=H)
-        res, us = timed(run_method, prob, m, cluster(K),
-                        num_outer=2 if quick else 8, eval_every=2, seed=0)
+    for entry in spec.methods:
+        rho_d = entry.config.name.removeprefix("ACPD-rho_d")
+        res, us = timed(exp.run_entry, entry)
         r = res.rounds_to_gap(1e-3)
         final = res.records[-1].gap
         emit(f"fig4a/rho_d{rho_d}/rounds_to_1e-3", us, r)
         emit(f"fig4a/rho_d{rho_d}/final_gap", us, f"{final:.2e}")
         curves[rho_d] = [{"iter": rec.iteration, "gap": rec.gap}
                          for rec in res.records]
-    dump("fig4a_rho", curves)
+    dump("fig4a_rho", curves, specs=spec)
 
 
 if __name__ == "__main__":

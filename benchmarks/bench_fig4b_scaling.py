@@ -1,12 +1,14 @@
 """Fig. 4b: scaling the number of workers K -- simulated time to a fixed gap
 for ACPD (B=K/2) vs CoCoA+ (plus the engine's async/lag registry protocols),
-K in {2, 4, 8}."""
+K in {2, 4, 8}.
+
+Spec-driven: one ``repro.api.presets.fig4b`` ExperimentSpec per K (also
+exposed as the CLI presets ``fig4b-K2`` / ``fig4b-K4`` / ``fig4b-K8``)."""
 
 from __future__ import annotations
 
-from benchmarks.common import cluster, dump, emit, timed, rcv1_like
-from repro.core import baselines
-from repro.core.acpd import run_method
+from benchmarks.common import dump, emit, timed
+from repro.api import Experiment, presets
 
 TARGET = 1e-3
 
@@ -15,38 +17,25 @@ def main(quick: bool = False) -> None:
     # Higher d than the other benches: Fig. 4b's regime is communication-bound
     # (the paper's point is that CoCoA+ stops scaling once O(d) messages
     # dominate); at small d the simulated network is too cheap to matter.
-    d = 1024 if quick else 8192
-    H = 64 if quick else 256
     Ks = (2, 4) if quick else (2, 4, 8)
     results = {}
+    specs = []
     for K in Ks:
-        prob = rcv1_like(K=K, d=d, n_per_worker=64 if quick else 128,
-                         seed=7 + K)
-        cl = cluster(K, sigma=1.0)
-        # All four registry protocols at this scale: group vs sync is the
-        # paper's Fig. 4b; async/lag chart the engine's new design space.
-        methods = [
-            (baselines.acpd(K, d, B=max(1, K // 2), T=10, rho_d=128,
-                            gamma=0.5, H=H), 2 if quick else 8),
-            (baselines.cocoa_plus(K, H=H), 10 if quick else 60),
-            (baselines.acpd_async(K, d, T=10, rho_d=128, gamma=0.5, H=H),
-             4 if quick else 16),
-            (baselines.acpd_lag(K, d, B=max(1, K // 2), T=10, rho_d=128,
-                                gamma=0.5, H=H), 2 if quick else 8),
-        ]
+        spec = presets.fig4b(K, quick=quick)
+        specs.append(spec)
+        exp = Experiment(spec)
         row = {}
-        for m, outer in methods:
-            res, us = timed(run_method, prob, m, cl, num_outer=outer,
-                            eval_every=2, seed=0)
+        for entry in spec.methods:
+            res, us = timed(exp.run_entry, entry)
             t = res.time_to_gap(TARGET)
-            emit(f"fig4b/K{K}/{m.name}_time", us,
+            emit(f"fig4b/K{K}/{entry.config.name}_time", us,
                  None if t is None else round(t, 4))
-            row[m.name] = t
+            row[entry.config.name] = t
         t_a, t_c = row["ACPD"], row["CoCoA+"]
         if t_a and t_c:
             emit(f"fig4b/K{K}/speedup", 0.0, round(t_c / t_a, 2))
         results[K] = row
-    dump("fig4b_scaling", results)
+    dump("fig4b_scaling", results, specs=specs)
 
 
 if __name__ == "__main__":

@@ -1,39 +1,36 @@
 """Fig. 5: the 'real distributed environment' proxy -- lognormal compute
 jitter on every worker (other tenants), 8 workers, URL/KDD-like higher d.
-Reports time to gap and the compute/communication time split."""
+Reports time to gap and the compute/communication time split.
+
+Spec-driven: ``repro.api.presets.fig5``."""
 
 from __future__ import annotations
 
-from benchmarks.common import cluster, dump, emit, rcv1_like, timed
-from repro.core import baselines
-from repro.core.acpd import run_method
+from benchmarks.common import dump, emit, timed
+from repro.api import Experiment, presets
 
 TARGET = 1e-3
 
 
 def main(quick: bool = False) -> None:
-    K, d = (4, 1024) if quick else (8, 4096)
-    H = 64 if quick else 256
-    prob = rcv1_like(K=K, d=d, n_per_worker=96, seed=31)
-    cl = cluster(K, sigma=1.0, jitter=0.6)  # multiplicative lognormal noise
-    acpd = baselines.acpd(K, d, B=K // 2, T=10, rho_d=64, gamma=0.5, H=H)
-    coco = baselines.cocoa_plus(K, H=H)
+    spec = presets.fig5(quick=quick)
+    exp = Experiment(spec)
     out = {}
-    for m, outer in ((acpd, 2 if quick else 8), (coco, 10 if quick else 60)):
-        res, us = timed(run_method, prob, m, cl, num_outer=outer,
-                        eval_every=2, seed=0)
+    for entry in spec.methods:
+        res, us = timed(exp.run_entry, entry)
         t = res.time_to_gap(TARGET)
         last = res.records[-1]
-        emit(f"fig5/{m.name}/time_to_gap", us, None if t is None else round(t, 4))
-        emit(f"fig5/{m.name}/comm_fraction", us,
+        name = entry.config.name
+        emit(f"fig5/{name}/time_to_gap", us, None if t is None else round(t, 4))
+        emit(f"fig5/{name}/comm_fraction", us,
              round(last.comm_time / max(last.comm_time + last.compute_time,
                                         1e-9), 4))
-        out[m.name] = {"time_to_gap": t, "comm_time": last.comm_time,
-                       "compute_time": last.compute_time}
+        out[name] = {"time_to_gap": t, "comm_time": last.comm_time,
+                     "compute_time": last.compute_time}
     if out["ACPD"]["time_to_gap"] and out["CoCoA+"]["time_to_gap"]:
         emit("fig5/speedup", 0.0,
              round(out["CoCoA+"]["time_to_gap"] / out["ACPD"]["time_to_gap"], 2))
-    dump("fig5_realenv", out)
+    dump("fig5_realenv", out, specs=spec)
 
 
 if __name__ == "__main__":

@@ -3,6 +3,10 @@
 Measures actual on-wire bytes per communication round for each method on the
 RCV1-like problem (and at RCV1's real dimensionality for the static part),
 plus the wall time of the message filter itself.
+
+Spec-driven: ``repro.api.presets.table1``; the static accounting rows go
+through the shared ``repro.core.compress`` registry (the same byte formulas
+the engine and the exchange path bill with).
 """
 
 from __future__ import annotations
@@ -11,39 +15,39 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import cluster, dump, emit, rcv1_like, timed
-from repro.core import baselines
-from repro.core.acpd import run_method
-from repro.core.filter import dense_bytes, message_bytes, num_kept
+from benchmarks.common import dump, emit, timed
+from repro.api import Experiment, presets
+from repro.core.compress import Dense, TopKExact
+from repro.core.filter import num_kept
 from repro.kernels import ops
 
 
 def main(quick: bool = False) -> None:
-    K, d = 4, 512 if quick else 2048
-    H = 64 if quick else 256
-    prob = rcv1_like(K=K, d=d)
+    spec = presets.table1(quick=quick)
+    exp = Experiment(spec)
     rows = {}
-    for preset, outer in ((baselines.cocoa_plus(K, H=H), 5 if quick else 20),
-                          (baselines.acpd(K, d, rho_d=64, H=H), 1 if quick else 2),
-                          (baselines.acpd_dense(K, H=H), 1 if quick else 2)):
-        res, us = timed(run_method, prob, preset, cluster(K),
-                        num_outer=outer, eval_every=5, seed=0)
+    for entry in spec.methods:
+        res, us = timed(exp.run_entry, entry)
         rounds = res.records[-1].iteration
         per_round = (res.records[-1].bytes_up + res.records[-1].bytes_down) / rounds
-        rows[preset.name] = per_round
-        emit(f"table1/bytes_per_round/{preset.name}", us / rounds, int(per_round))
+        rows[entry.config.name] = per_round
+        emit(f"table1/bytes_per_round/{entry.config.name}", us / rounds,
+             int(per_round))
 
-    # Static accounting at the paper's real dataset sizes (Table II).
+    # Static accounting at the paper's real dataset sizes (Table II), via the
+    # unified compressor registry (one byte formula for sim + exchange).
     for name, dd in (("RCV1", 47_236), ("URL", 3_231_961), ("KDD", 29_890_095)):
-        ratio = dense_bytes(dd) / message_bytes(num_kept(dd, 1000 / dd))
+        k = num_kept(dd, 1000 / dd)
+        ratio = Dense().wire_bytes(dd) / TopKExact(k=k).wire_bytes(dd)
         emit(f"table1/static_ratio/{name}", 0.0, round(ratio, 1))
 
     # The filter hot-spot itself (Pallas kernel, interpret mode on CPU).
+    d = 512 if quick else 2048
     x = jnp.asarray(np.random.default_rng(0).standard_normal(d).astype(np.float32))
     _, us = timed(lambda: jax.block_until_ready(ops.topk_filter(x, 64)),
                   repeats=3)
     emit("table1/topk_filter_us", us, 64)
-    dump("table1", rows)
+    dump("table1", rows, specs=spec)
 
 
 if __name__ == "__main__":

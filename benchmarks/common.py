@@ -4,7 +4,10 @@ Every benchmark prints ``name,us_per_call,derived`` rows (one per measured
 configuration) so ``python -m benchmarks.run`` output is machine-readable;
 ``derived`` carries the benchmark's headline metric (speedup, bytes ratio,
 rounds-to-gap, ...). Figures' raw curves are also dumped as JSON under
-experiments/bench/ for EXPERIMENTS.md.
+experiments/bench/ for EXPERIMENTS.md; every payload is stamped with
+provenance (the ExperimentSpec JSON that produced it, the seed, and
+``jax.__version__``) so bench trajectories are reproducible from the file
+alone (``python -m repro run`` accepts the embedded spec).
 """
 
 from __future__ import annotations
@@ -14,8 +17,9 @@ import pathlib
 import time
 from typing import Callable
 
+from repro.api.problems import rcv1_like as _rcv1_like_builder
+from repro.api.spec import ExperimentSpec
 from repro.core.simulate import ClusterModel
-from repro.data.synthetic import LinearDatasetSpec, make_linear_problem
 
 OUT_DIR = pathlib.Path(__file__).resolve().parent.parent / "experiments" / "bench"
 
@@ -24,16 +28,34 @@ def emit(name: str, us_per_call: float, derived) -> None:
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
 
 
-def dump(name: str, payload) -> None:
+def dump(name: str, payload, *, specs=None, seed=None) -> None:
+    """Write a bench payload with reproducibility provenance.
+
+    ``specs``: the ExperimentSpec(s) the trajectories came from (single spec
+    or a list); ``seed``: the driving seed when no spec applies.
+    """
+    import jax
+
+    if isinstance(specs, ExperimentSpec):
+        specs = [specs]
+    provenance = {"jax_version": jax.__version__}
+    if specs:
+        provenance["specs"] = [s.to_dict() for s in specs]
+        provenance["seed"] = specs[0].seed if seed is None else seed
+    elif seed is not None:
+        provenance["seed"] = seed
     OUT_DIR.mkdir(parents=True, exist_ok=True)
-    (OUT_DIR / f"{name}.json").write_text(json.dumps(payload, indent=1))
+    doc = {"provenance": provenance, "data": payload}
+    (OUT_DIR / f"{name}.json").write_text(json.dumps(doc, indent=1))
 
 
 def rcv1_like(K: int = 4, seed: int = 7, d: int = 2048, n_per_worker: int = 192):
-    """Scaled-down stand-in for the paper's RCV1 split (no network access)."""
-    spec = LinearDatasetSpec(num_workers=K, n_per_worker=n_per_worker, d=d,
-                             nnz_per_row=24, seed=seed)
-    return make_linear_problem(spec, lam=1e-3, loss="ridge")
+    """Scaled-down stand-in for the paper's RCV1 split (no network access).
+
+    Thin wrapper over the ``rcv1_like`` problem-registry entry so ad-hoc
+    callers and spec-driven runs build the identical dataset.
+    """
+    return _rcv1_like_builder(K=K, seed=seed, d=d, n_per_worker=n_per_worker)
 
 
 def cluster(K: int, sigma: float = 1.0, jitter: float = 0.0) -> ClusterModel:

@@ -6,6 +6,9 @@ Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/common.py).
 ``--quick`` runs every benchmark at smoke scale (tiny K, num_outer, H) --
 seconds instead of minutes; used by ``make check`` / scripts/check.sh as the
 CI-style sanity gate that the whole bench surface still executes.
+
+This is the ONE driver: ``python -m repro bench [--quick] [--only ...]``
+forwards here, so the CLI and ``python -m benchmarks.run`` stay in lockstep.
 """
 
 from __future__ import annotations

@@ -1,46 +1,50 @@
-"""Quickstart: the paper in one minute.
+"""Quickstart: the paper in one minute, through the public API.
 
 Distributed ridge regression on a synthetic RCV1-like dataset over 4 simulated
 workers, one of which is a 5x straggler. Compares CoCoA+ (synchronous, dense
 messages) against ACPD (B-of-K group-wise server + top-rho*d sparse messages)
 on duality gap vs simulated wall-clock and on bytes moved.
 
+The experiment is one declarative ``ExperimentSpec`` (print it with
+``python -m repro spec quickstart``); each method runs as a streaming
+``Session`` that stops early once the duality gap reaches 1e-3.
+
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 
-from repro.core import baselines
-from repro.core.acpd import run_method
-from repro.core.simulate import ClusterModel
-from repro.data.synthetic import LinearDatasetSpec, make_linear_problem
+from repro import api
 
-K, D = 4, 4096
+TARGET = 1e-3
 
 
 def main() -> None:
-    print("building synthetic sparse problem (K=4 workers, d=4096)...")
-    problem = make_linear_problem(
-        LinearDatasetSpec(num_workers=K, n_per_worker=256, d=D,
-                          nnz_per_row=32, seed=0), lam=1e-3, loss="ridge")
-    cluster = ClusterModel(num_workers=K, straggler_sigma=5.0)
+    spec = api.build_preset("quickstart")  # target_gap=1e-3 baked in
+    print(f"spec {spec.name!r}: problem={spec.problem.kind}"
+          f"{spec.problem.params}, straggler x{spec.cluster.straggler_sigma}")
+    print("building synthetic sparse problem...")
+    exp = api.Experiment(spec)
 
-    methods = [
-        (baselines.cocoa_plus(K, H=512), 40),
-        (baselines.acpd(K, D, B=2, T=10, rho_d=128, gamma=0.5, H=512), 8),
-    ]
     print(f"{'method':10s} {'rounds':>7s} {'sim time':>9s} {'MB moved':>9s} "
           f"{'final gap':>10s}")
     results = {}
-    for method, outer in methods:
-        res = run_method(problem, method, cluster, num_outer=outer,
-                         eval_every=4, seed=0)
+    for entry in spec.methods:
+        session = exp.session(entry)
+        stop = None
+        for ev in session:
+            if isinstance(ev, api.StopEvent):
+                stop = ev
+        res = session.result()
         last = res.records[-1]
-        t = res.time_to_gap(1e-3)
-        results[method.name] = t
-        print(f"{method.name:10s} {last.iteration:7d} {last.sim_time:8.2f}s "
-              f"{(last.bytes_up + last.bytes_down) / 1e6:8.2f} {last.gap:10.2e}"
-              f"   (reached gap 1e-3 at t={t and round(t, 2)}s)")
+        t = res.time_to_gap(TARGET)
+        results[entry.config.name] = t
+        note = (f"(gap {TARGET:g} at t={round(t, 2)}s, "
+                f"stop={stop.reason})" if t else f"(stop={stop.reason})")
+        print(f"{entry.config.name:10s} {last.iteration:7d} "
+              f"{last.sim_time:8.2f}s "
+              f"{(last.bytes_up + last.bytes_down) / 1e6:8.2f} "
+              f"{last.gap:10.2e}   {note}")
     if all(results.values()):
-        print(f"\nACPD speedup to gap 1e-3: "
+        print(f"\nACPD speedup to gap {TARGET:g}: "
               f"{results['CoCoA+'] / results['ACPD']:.2f}x "
               f"(paper reports up to 4x at larger d)")
 

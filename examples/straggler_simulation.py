@@ -1,48 +1,58 @@
 """Straggler sweep (paper Fig. 3): how the speedup of ACPD over CoCoA+ grows
 with the straggler factor sigma, including both ablations and the engine's
-new registry protocols (fully-async B=1 and LAG-style lazy uploads).
+registry protocols (fully-async B=1 and LAG-style lazy uploads).
+
+Each sigma is one declarative ``ExperimentSpec`` executed through streaming
+``Session``s with early stop at the target gap -- no hand-wired run loops.
 
 Run:  PYTHONPATH=src python examples/straggler_simulation.py
 """
 
+from repro import api
 from repro.core import baselines, engine
-from repro.core.acpd import run_method
-from repro.core.simulate import ClusterModel
-from repro.data.synthetic import LinearDatasetSpec, make_linear_problem
 
 K, D, TARGET = 4, 2048, 1e-3
 
 
-def time_to(problem, method, sigma, outer):
-    res = run_method(problem, method,
-                     ClusterModel(num_workers=K, straggler_sigma=sigma),
-                     num_outer=outer, eval_every=2, seed=0)
-    return res.time_to_gap(TARGET)
+def sweep_spec(sigma: float) -> api.ExperimentSpec:
+    H = 256
+    methods = (
+        api.MethodEntry(baselines.cocoa_plus(K, H=H), 60),
+        api.MethodEntry(baselines.acpd(K, D, B=2, T=10, rho_d=64, gamma=0.5,
+                                       H=H), 12),
+        api.MethodEntry(baselines.acpd_full_barrier(K, D, T=10, rho_d=64,
+                                                    gamma=0.5, H=H), 8),
+        api.MethodEntry(baselines.acpd_dense(K, B=2, T=10, gamma=0.5, H=H), 8),
+        api.MethodEntry(baselines.acpd_async(K, D, T=10, rho_d=64, gamma=0.5,
+                                             H=H), 40),
+        api.MethodEntry(baselines.acpd_lag(K, D, B=2, T=10, rho_d=64,
+                                           gamma=0.5, H=H), 12),
+    )
+    return api.ExperimentSpec(
+        name=f"straggler-sweep-sigma{sigma:g}",
+        problem=api.ProblemSpec("linear_synthetic",
+                                {"num_workers": K, "n_per_worker": 192,
+                                 "d": D, "nnz_per_row": 24, "seed": 7,
+                                 "lam": 1e-3}),
+        cluster=api.presets.cluster_model(K, sigma=sigma),
+        methods=methods, eval_every=2, seed=0, target_gap=TARGET)
 
 
 def main() -> None:
-    problem = make_linear_problem(
-        LinearDatasetSpec(num_workers=K, n_per_worker=192, d=D,
-                          nnz_per_row=24, seed=7), lam=1e-3)
     print(f"protocol registry: {', '.join(engine.available_protocols())}")
+    print(f"compressor registry: {', '.join(api.available_compressors())}")
     print(f"{'sigma':>6s} {'CoCoA+':>9s} {'ACPD':>9s} {'ACPD B=K':>9s} "
           f"{'ACPD rho=1':>10s} {'async':>9s} {'LAG':>9s} {'speedup':>8s}")
     for sigma in (1.0, 2.0, 5.0, 10.0):
-        t_c = time_to(problem, baselines.cocoa_plus(K, H=256), sigma, 60)
-        t_a = time_to(problem, baselines.acpd(K, D, B=2, T=10, rho_d=64,
-                                              gamma=0.5, H=256), sigma, 12)
-        t_bk = time_to(problem, baselines.acpd_full_barrier(
-            K, D, T=10, rho_d=64, gamma=0.5, H=256), sigma, 8)
-        t_r1 = time_to(problem, baselines.acpd_dense(K, B=2, T=10, gamma=0.5,
-                                                     H=256), sigma, 8)
-        t_as = time_to(problem, baselines.acpd_async(
-            K, D, T=10, rho_d=64, gamma=0.5, H=256), sigma, 40)
-        t_lg = time_to(problem, baselines.acpd_lag(
-            K, D, B=2, T=10, rho_d=64, gamma=0.5, H=256), sigma, 12)
-        fmt = lambda t: f"{t:8.3f}s" if t else "     n/a"
+        spec = sweep_spec(sigma)
+        results = api.Experiment(spec).run()
+        t = {name: res.time_to_gap(TARGET) for name, res in results.items()}
+        fmt = lambda v: f"{v:8.3f}s" if v else "     n/a"
+        t_c, t_a = t["CoCoA+"], t["ACPD"]
         sp = f"{t_c / t_a:7.2f}x" if (t_c and t_a) else "     n/a"
-        print(f"{sigma:6.1f} {fmt(t_c)} {fmt(t_a)} {fmt(t_bk)} "
-              f"{fmt(t_r1):>10s} {fmt(t_as)} {fmt(t_lg)} {sp}")
+        print(f"{sigma:6.1f} {fmt(t_c)} {fmt(t_a)} {fmt(t['ACPD-B=K'])} "
+              f"{fmt(t['ACPD-rho=1']):>10s} {fmt(t['ACPD-async'])} "
+              f"{fmt(t['ACPD-LAG'])} {sp}")
     print("\nExpected: ACPD's speedup over CoCoA+ grows with sigma (the "
           "group-wise server never waits for the straggler between syncs); "
           "B=K (full barrier) is slowest. The async protocol (B=1, no "

@@ -6,6 +6,11 @@ top-rho sparsification + error feedback), comparing loss and exchanged bytes.
 This is the end-to-end driver for the deep-learning integration; on a pod the
 same code path runs the full configs via repro.launch.train.
 
+The sparsifier is a ``repro.core.compress`` registry entry
+(``ExchangeConfig.compressor``) -- the same objects the primal-dual simulator
+uses -- and the exchanged bytes come from the step's
+``exchange/bytes_step`` metric, billed with the identical registry formulas.
+
 Run:  PYTHONPATH=src python examples/train_transformer_acpd.py [--steps 200]
 """
 
@@ -13,6 +18,8 @@ import argparse
 
 import jax
 import numpy as np
+
+from repro.core import compress as compress_lib
 
 from repro.configs import InputShape, get_config
 from repro.core import exchange as exch_lib
@@ -24,7 +31,7 @@ from repro.models.param import num_params, tree_materialize
 from repro.optim.optimizers import OptimizerConfig, init_state
 
 
-def run(exchange, steps, cfg, tag):
+def run(exchange, steps, cfg, tag, bill_groups=1):
     mesh = make_host_mesh()
     shape = InputShape("ex", 128, 8, "train")
     opt = OptimizerConfig(learning_rate=1e-3, warmup_steps=10,
@@ -38,17 +45,23 @@ def run(exchange, steps, cfg, tag):
                   if exchange is not None else None)
     pipe = TokenPipeline(cfg, 8, 128, seed=0)
     n_params = num_params(model_spec(cfg))
-    losses, sent = [], []
+    # Like exchange/bytes_step, bill the dense baseline per participating
+    # group (every group ships its full gradient), so the ratio below
+    # compares like for like.
+    dense_bytes = bill_groups * compress_lib.Dense().payload_bytes(n_params)
+    losses, step_bytes = [], []
     with mesh:
         for step in range(steps):
             batch = pipe.next_batch()
             params, opt_state, exch_state, m = jitted(
                 params, opt_state, exch_state, batch)
             losses.append(float(m["loss"]))
-            sent.append(float(m.get("exchange/sent_fraction", 1.0)))
+            # Registry-billed bytes (exchange/bytes_step); the dense baseline
+            # has no exchange metrics -- bill one full dense payload.
+            step_bytes.append(float(m.get("exchange/bytes_step", dense_bytes)))
             if step % 25 == 0:
                 print(f"  [{tag}] step {step:4d} loss {losses[-1]:.4f}")
-    mb = np.mean(sent) * n_params * 8 / 1e6  # value+index words per step
+    mb = np.mean(step_bytes) / 1e6
     return losses, mb
 
 
@@ -58,18 +71,20 @@ def main() -> None:
     args = ap.parse_args()
     cfg = get_config("qwen3-14b").reduced()
 
-    print("dense data-parallel baseline:")
-    dense_losses, dense_mb = run(None, args.steps, cfg, "dense")
-    print("ACPD exchange (B=2of4, rho=1/64, T=10):")
     exch = exch_lib.ExchangeConfig(num_groups=4, group_size=2, sync_period=10,
-                                   rho=1 / 64, gamma=0.9)
+                                   rho=1 / 64, gamma=0.9,
+                                   compressor="topk_threshold")
+    print("dense data-parallel baseline:")
+    dense_losses, dense_mb = run(None, args.steps, cfg, "dense",
+                                 bill_groups=exch.num_groups)
+    print("ACPD exchange (B=2of4, rho=1/64, T=10, compressor=topk_threshold):")
     acpd_losses, acpd_mb = run(exch, args.steps, cfg, "acpd")
 
     k = max(1, args.steps // 10)
     print(f"\nfinal loss (mean of last {k}): "
           f"dense={np.mean(dense_losses[-k:]):.4f}  "
           f"acpd={np.mean(acpd_losses[-k:]):.4f}")
-    print(f"approx exchanged MB/step/group: dense={dense_mb:.2f} "
+    print(f"exchanged MB/step (registry-billed): dense={dense_mb:.2f} "
           f"acpd={acpd_mb:.2f}  ({dense_mb / max(acpd_mb, 1e-9):.0f}x less)")
 
 

@@ -1,0 +1,66 @@
+"""The public API surface: declarative specs + streaming sessions.
+
+Everything a caller needs lives here:
+
+* :class:`ExperimentSpec` / :class:`MethodEntry` / :class:`ProblemSpec` --
+  declarative, JSON-round-trippable experiment descriptions;
+* :class:`Session` / :class:`Experiment` and the typed event stream
+  (:class:`RoundEvent`, :class:`EvalEvent`, :class:`SyncEvent`,
+  :class:`StopEvent`) -- streaming execution with early stop;
+* the :mod:`repro.core.compress` ``Compressor`` registry (re-exported) --
+  the shared payload-compression extension point for both the simulator and
+  the transformer exchange path;
+* preset spec builders for the paper's figures (:mod:`repro.api.presets`).
+
+CLI: ``python -m repro run spec.json`` / ``python -m repro spec <preset>`` /
+``python -m repro bench [--quick] [--only ...]``.
+
+Legacy one-shot entry points (``repro.core.acpd.run_method``,
+``repro.core.engine.run_method``) remain as thin wrappers that drain a
+Session and fold the events into a ``RunResult``.
+"""
+
+from repro.api.presets import PRESETS, build_preset  # noqa: F401
+from repro.api.problems import (  # noqa: F401
+    ProblemSpec,
+    available_problems,
+    build_problem,
+    register_problem,
+)
+from repro.api.session import (  # noqa: F401
+    EvalEvent,
+    Experiment,
+    RoundEvent,
+    Session,
+    SessionEvent,
+    StopEvent,
+    SyncEvent,
+)
+from repro.api.spec import ExperimentSpec, MethodEntry  # noqa: F401
+from repro.core.compress import (  # noqa: F401
+    Compressor,
+    available_compressors,
+    get_compressor,
+    register_compressor,
+)
+
+__all__ = [
+    "Compressor",
+    "EvalEvent",
+    "Experiment",
+    "ExperimentSpec",
+    "MethodEntry",
+    "PRESETS",
+    "ProblemSpec",
+    "RoundEvent",
+    "Session",
+    "SessionEvent",
+    "StopEvent",
+    "SyncEvent",
+    "available_compressors",
+    "available_problems",
+    "build_preset",
+    "build_problem",
+    "get_compressor",
+    "register_compressor",
+]

@@ -1,0 +1,278 @@
+"""Streaming run sessions: the engine's round loop as a typed event stream.
+
+A :class:`Session` replaces one-shot execution. It owns the canonical
+priority-queue event loop (moved here from ``core/engine.py``) and yields
+typed events as the simulation advances:
+
+* :class:`RoundEvent` -- one server round applied: live sim-clock and
+  byte/time accounting;
+* :class:`SyncEvent`  -- the round was a full-K barrier (the T-periodic sync
+  for the group family, every round for the CoCoA lineage);
+* :class:`EvalEvent`  -- a duality-gap certificate (streamed per eval
+  boundary in ``eval_mode="stream"``, or emitted in one deferred batch after
+  the loop in the bit-exact ``"batched"``/``"replay"`` modes);
+* :class:`StopEvent`  -- why the session ended (``completed``,
+  ``target_gap``, or ``time_budget``).
+
+Early stop: ``target_gap`` stops once the streamed gap reaches the target
+(forces ``eval_mode="stream"``); ``time_budget`` stops once the simulated
+clock passes the budget. ``engine.run_method`` / ``acpd.run_method`` are thin
+compat wrappers that drain the stream and fold it back into a ``RunResult``
+-- the tests/test_engine.py bit-for-bit pins hold through them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Iterator
+
+from repro.core import engine, objectives
+from repro.core.acpd import MethodConfig, RunRecord, RunResult
+from repro.core.simulate import ClusterModel
+
+# ---------------------------------------------------------------------------
+# Events.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundEvent:
+    """One server round applied; accounting totals as of this round."""
+
+    iteration: int
+    sim_time: float
+    arrivals: int
+    bytes_up: int
+    bytes_down: int
+    compute_time: float
+    comm_time: float
+
+
+@dataclasses.dataclass(frozen=True)
+class SyncEvent:
+    """The round just applied was a full-K barrier."""
+
+    iteration: int
+    sim_time: float
+
+
+@dataclasses.dataclass(frozen=True)
+class EvalEvent:
+    """A duality-gap certificate at an eval boundary (mirrors RunRecord)."""
+
+    iteration: int
+    sim_time: float
+    gap: float
+    gap_server: float
+    primal: float
+    dual: float
+    bytes_up: int
+    bytes_down: int
+    compute_time: float
+    comm_time: float
+
+    def to_record(self) -> RunRecord:
+        return RunRecord(**dataclasses.asdict(self))
+
+
+@dataclasses.dataclass(frozen=True)
+class StopEvent:
+    """The session ended: ``completed`` | ``target_gap`` | ``time_budget``."""
+
+    reason: str
+    iteration: int
+    sim_time: float
+
+
+SessionEvent = RoundEvent | SyncEvent | EvalEvent | StopEvent
+
+
+# ---------------------------------------------------------------------------
+# The session.
+# ---------------------------------------------------------------------------
+
+
+class Session:
+    """A streaming run of one method through the protocol engine.
+
+    Iterate :meth:`events` (or the session itself) for live consumption, or
+    call :meth:`run` to drain and get the folded :class:`RunResult`.
+
+    ``eval_mode``:
+
+    * ``"batched"`` (default) -- gap certificates deferred to one ``lax.map``
+      dispatch after the loop; ``EvalEvent``\\ s arrive at the end.
+      Bit-exact with the reference loops (pinned).
+    * ``"replay"``  -- deferred, op-for-op eager certificates (debug oracle).
+    * ``"stream"``  -- certificates computed at each eval boundary and
+      streamed live; required for (and implied by) ``target_gap`` early stop.
+    """
+
+    def __init__(self, problem: objectives.Problem, method: MethodConfig,
+                 cluster: ClusterModel, *, num_outer: int, seed: int = 0,
+                 eval_every: int = 1, eval_mode: str = "batched",
+                 target_gap: float | None = None,
+                 time_budget: float | None = None):
+        if target_gap is not None:
+            eval_mode = "stream"  # gap early-stop needs live certificates
+        if eval_mode not in ("batched", "replay", "stream"):
+            raise ValueError(f"unknown eval_mode {eval_mode!r}")
+        # Resolves the protocol up front: an unknown MethodConfig.protocol
+        # fails HERE with the registry listing, not deep inside the run.
+        self.proto = engine.get_protocol(method.protocol)(
+            problem, method, cluster, seed=seed)
+        self.problem = problem
+        self.method = method
+        self.num_outer = num_outer
+        self.eval_every = eval_every
+        self.eval_mode = eval_mode
+        self.target_gap = target_gap
+        self.time_budget = time_budget
+        self._result: RunResult | None = None
+        self._events: Iterator[SessionEvent] | None = None
+
+    # -- streaming ---------------------------------------------------------
+
+    def events(self) -> Iterator[SessionEvent]:
+        """The event stream. Single-use; created lazily on first call."""
+        if self._events is None:
+            self._events = self._generate()
+        return self._events
+
+    def __iter__(self) -> Iterator[SessionEvent]:
+        return self.events()
+
+    def run(self) -> RunResult:
+        """Drain the stream and return the folded RunResult."""
+        for _ in self.events():
+            pass
+        return self.result()
+
+    def result(self) -> RunResult:
+        if self._result is None:
+            raise RuntimeError("session not finished; drain events() or call "
+                               "run() first")
+        return self._result
+
+    # -- the canonical loop ------------------------------------------------
+
+    def _eval_stream(self, snap) -> EvalEvent:
+        cert = objectives.gap_certificate(self.problem, snap.alpha, w=snap.w)
+        return EvalEvent(
+            iteration=snap.iteration, sim_time=snap.sim_time,
+            gap=cert["gap"], gap_server=cert["gap_server"],
+            primal=cert["primal"], dual=cert["dual"],
+            bytes_up=snap.bytes_up, bytes_down=snap.bytes_down,
+            compute_time=snap.compute_time, comm_time=snap.comm_time)
+
+    def _generate(self) -> Iterator[SessionEvent]:
+        proto = self.proto
+        queue: list[engine.Message] = []
+        for msg in proto.initial_messages():
+            heapq.heappush(queue, msg)
+
+        snaps = []  # deferred-eval snapshots ("batched"/"replay")
+        records: list[RunRecord] = []  # streamed records ("stream")
+        streaming = self.eval_mode == "stream"
+        iteration = 0
+        reason = "completed"
+
+        for r in range(proto.num_rounds(self.num_outer)):
+            need = proto.arrivals_needed(r)
+            arrived = [heapq.heappop(queue) for _ in range(need)]
+            for msg in proto.process_round(r, arrived):
+                heapq.heappush(queue, msg)
+            iteration += 1
+
+            yield RoundEvent(
+                iteration=iteration, sim_time=proto.sim_time,
+                arrivals=len(arrived), bytes_up=proto.bytes_up,
+                bytes_down=proto.bytes_down, compute_time=proto.compute_time,
+                comm_time=proto.comm_time)
+            if proto.is_sync_round(r):
+                yield SyncEvent(iteration=iteration, sim_time=proto.sim_time)
+
+            evaluated = iteration % self.eval_every == 0
+            if evaluated:
+                snap = proto.snapshot(iteration)
+                if streaming:
+                    ev = self._eval_stream(snap)
+                    records.append(ev.to_record())
+                    yield ev
+                    if (self.target_gap is not None
+                            and ev.gap <= self.target_gap):
+                        reason = "target_gap"
+                        break
+                else:
+                    snaps.append(snap)
+
+            if (self.time_budget is not None
+                    and proto.sim_time >= self.time_budget):
+                reason = "time_budget"
+                if not evaluated:
+                    # Terminal certificate so the result reflects the state
+                    # at the stop point.
+                    snap = proto.snapshot(iteration)
+                    if streaming:
+                        ev = self._eval_stream(snap)
+                        records.append(ev.to_record())
+                        yield ev
+                    else:
+                        snaps.append(snap)
+                break
+
+        if not streaming:
+            records = engine._materialize_records(snaps, self.problem,
+                                                  self.eval_mode)
+            for rec in records:
+                yield EvalEvent(**dataclasses.asdict(rec))
+        self._result = proto.finalize(records)
+        yield StopEvent(reason=reason, iteration=iteration,
+                        sim_time=proto.sim_time)
+
+
+# ---------------------------------------------------------------------------
+# Spec-level execution.
+# ---------------------------------------------------------------------------
+
+
+class Experiment:
+    """An :class:`ExperimentSpec` bound to its built problem.
+
+    Builds the dataset once; hands out one :class:`Session` per method entry.
+    """
+
+    def __init__(self, spec):
+        self.spec = spec
+        self.problem = spec.problem.build()
+        self.cluster = spec.cluster
+
+    def session(self, entry, *, eval_mode: str | None = None) -> Session:
+        spec = self.spec
+        if entry.config.exact_dual_feedback:
+            raise ValueError(
+                "exact_dual_feedback runs on the reference path (host lstsq "
+                "per round, unfusable) and cannot stream; use "
+                "repro.core.acpd.run_method")
+        if eval_mode is None:
+            eval_mode = "stream" if spec.target_gap is not None else "batched"
+        return Session(self.problem, entry.config, self.cluster,
+                       num_outer=entry.num_outer, seed=spec.seed,
+                       eval_every=spec.eval_every, eval_mode=eval_mode,
+                       target_gap=spec.target_gap,
+                       time_budget=spec.time_budget)
+
+    def run_entry(self, entry) -> RunResult:
+        if entry.config.exact_dual_feedback:
+            from repro.core.acpd import run_method
+
+            return run_method(self.problem, entry.config, self.cluster,
+                              num_outer=entry.num_outer, seed=self.spec.seed,
+                              eval_every=self.spec.eval_every)
+        return self.session(entry).run()
+
+    def run(self) -> dict[str, RunResult]:
+        """Run every method entry; keyed by ``MethodConfig.name``."""
+        return {entry.config.name: self.run_entry(entry)
+                for entry in self.spec.methods}

@@ -1,0 +1,126 @@
+"""Declarative, JSON-round-trippable experiment specs.
+
+An :class:`ExperimentSpec` is the serializable description of one complete
+experiment: a problem registry entry, a :class:`ClusterModel`, a list of
+methods (each a :class:`MethodConfig` plus its round budget), the eval/stop
+policy and the seed. ``to_json``/``from_json`` round-trip losslessly
+(``spec == ExperimentSpec.from_json(spec.to_json())``), so benchmarks,
+examples, the ``python -m repro`` CLI and future live-serving hooks all share
+one entry point -- see :class:`repro.api.session.Session` for execution.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Mapping
+
+from repro.core.acpd import MethodConfig
+from repro.core.simulate import ClusterModel
+from repro.api.problems import ProblemSpec
+
+
+def _cluster_to_dict(c: ClusterModel) -> dict[str, Any]:
+    d = dataclasses.asdict(c)
+    d["straggler_workers"] = list(c.straggler_workers)
+    return d
+
+
+def _cluster_from_dict(d: Mapping[str, Any]) -> ClusterModel:
+    kw = dict(d)
+    if "straggler_workers" in kw:
+        kw["straggler_workers"] = tuple(kw["straggler_workers"])
+    return ClusterModel(**kw)
+
+
+def _method_from_dict(d: Mapping[str, Any]) -> MethodConfig:
+    return MethodConfig(**dict(d))
+
+
+@dataclasses.dataclass(frozen=True)
+class MethodEntry:
+    """One method inside a spec: the config plus its outer-round budget."""
+
+    config: MethodConfig
+    num_outer: int
+
+    def to_dict(self) -> dict[str, Any]:
+        return {"config": dataclasses.asdict(self.config),
+                "num_outer": self.num_outer}
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "MethodEntry":
+        return cls(config=_method_from_dict(d["config"]),
+                   num_outer=int(d["num_outer"]))
+
+
+@dataclasses.dataclass(frozen=True)
+class ExperimentSpec:
+    """The single declarative description of an experiment run.
+
+    ``target_gap`` / ``time_budget`` are the early-stop policy: a session
+    streaming this spec stops once the duality gap reaches ``target_gap``
+    (evaluated every ``eval_every`` rounds) or the simulated clock passes
+    ``time_budget`` seconds, whichever comes first.
+    """
+
+    name: str
+    problem: ProblemSpec
+    cluster: ClusterModel
+    methods: tuple[MethodEntry, ...]
+    eval_every: int = 1
+    seed: int = 0
+    target_gap: float | None = None
+    time_budget: float | None = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "methods", tuple(self.methods))
+
+    def method_named(self, name: str) -> MethodEntry:
+        for entry in self.methods:
+            if entry.config.name == name:
+                return entry
+        raise KeyError(f"no method named {name!r} in spec {self.name!r}")
+
+    # -- serialization -----------------------------------------------------
+
+    def to_dict(self) -> dict[str, Any]:
+        return {
+            "name": self.name,
+            "problem": self.problem.to_dict(),
+            "cluster": _cluster_to_dict(self.cluster),
+            "methods": [m.to_dict() for m in self.methods],
+            "eval_every": self.eval_every,
+            "seed": self.seed,
+            "target_gap": self.target_gap,
+            "time_budget": self.time_budget,
+        }
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "ExperimentSpec":
+        return cls(
+            name=d["name"],
+            problem=ProblemSpec.from_dict(d["problem"]),
+            cluster=_cluster_from_dict(d["cluster"]),
+            methods=tuple(MethodEntry.from_dict(m) for m in d["methods"]),
+            eval_every=int(d.get("eval_every", 1)),
+            seed=int(d.get("seed", 0)),
+            target_gap=d.get("target_gap"),
+            time_budget=d.get("time_budget"),
+        )
+
+    def to_json(self, indent: int = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent)
+
+    @classmethod
+    def from_json(cls, text: str) -> "ExperimentSpec":
+        return cls.from_dict(json.loads(text))
+
+    @classmethod
+    def load(cls, path) -> "ExperimentSpec":
+        with open(path) as f:
+            return cls.from_dict(json.load(f))
+
+    def save(self, path) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json() + "\n")

@@ -44,8 +44,13 @@ class MethodConfig:
     rho: float = 1.0  # fraction of coordinates sent (1.0 = dense)
     gamma: float = 1.0  # server step size
     H: int = 1000  # local SDCA iterations per round
-    sigma_prime: float | None = None  # None -> gamma * B (paper) / gamma * K (sync)
+    sigma_prime: float | None = None  # None -> the protocol's default_sigma_prime
     use_exact_k: bool = True  # exact top-k (kernel semantics) vs >=threshold
+    # Optional core.compress registry entry for the upload payload. None keeps
+    # the legacy mapping (rho >= 1 -> "dense", else "topk_exact" or
+    # "topk_threshold" per use_exact_k); set e.g. "topk_q8" for quantized
+    # uploads without touching rho/use_exact_k.
+    compressor: str | None = None
     # Alg. 2 lines 10-12 exactly: put the filtered-out mass back into the DUAL
     # via dalpha_hat = lam*n*A^+ (dw o ~M), keeping w = (1/lam n) A alpha true
     # at every iterate (the property Lemma 1 needs). Requires a least-squares
@@ -59,11 +64,19 @@ class MethodConfig:
     lag_xi: float = 1.0
 
     def resolved_sigma_prime(self, K: int) -> float:
+        """sigma' when unset: delegated to the protocol registry entry.
+
+        Each :class:`repro.core.engine.Protocol` owns its default via the
+        ``default_sigma_prime`` classmethod (gamma*B for the group family,
+        gamma*K for the synchronous CoCoA lineage), so new registry entries
+        get a correct sigma' without this dataclass growing per-protocol
+        string checks.
+        """
         if self.sigma_prime is not None:
             return self.sigma_prime
-        if self.protocol == "sync":
-            return self.gamma * K
-        return self.gamma * self.B
+        from repro.core import engine  # late import: engine imports our types
+
+        return engine.get_protocol(self.protocol).default_sigma_prime(self, K)
 
 
 def acpd_config(K: int, *, B: int | None = None, T: int = 20, rho_d: int | None = None,
@@ -150,12 +163,15 @@ def run_method(
     ``exact_dual_feedback`` theory variant, whose per-round host ``lstsq``
     cannot be fused -- it stays on the reference path.
     """
+    from repro.core import engine  # late import: engine imports our types
+
+    # Validate the protocol up front: an unknown name fails here with the
+    # registry listing instead of deep inside the run.
+    engine.get_protocol(method.protocol)
     if method.exact_dual_feedback:
         return run_method_reference(problem, method, cluster,
                                     num_outer=num_outer, seed=seed,
                                     eval_every=eval_every)
-    from repro.core import engine  # late import: engine imports our types
-
     return engine.run_method(problem, method, cluster, num_outer=num_outer,
                              seed=seed, eval_every=eval_every)
 
@@ -179,8 +195,13 @@ def run_method_reference(
         return _run_sync(problem, method, cluster, num_outer=num_outer, seed=seed, eval_every=eval_every)
     if method.protocol == "group":
         return _run_group(problem, method, cluster, num_outer=num_outer, seed=seed, eval_every=eval_every)
-    raise ValueError(f"reference implementation only covers 'group'/'sync', "
-                     f"got {method.protocol!r}")
+    from repro.core import engine
+
+    raise ValueError(
+        f"reference implementation only covers 'group'/'sync', got "
+        f"{method.protocol!r}; engine registry protocols "
+        f"{engine.available_protocols()} run via repro.core.engine.run_method "
+        f"/ repro.api.Session")
 
 
 # ---------------------------------------------------------------------------

@@ -38,7 +38,6 @@ reduction; ``tests/test_engine.py`` pins bit-for-bit equality of the
 from __future__ import annotations
 
 import dataclasses
-import heapq
 from functools import partial
 from typing import Iterable
 
@@ -46,6 +45,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import compress as compress_lib
 from repro.core import filter as msg_filter
 from repro.core import objectives
 from repro.core.acpd import MethodConfig, RunRecord, RunResult
@@ -128,10 +128,11 @@ class _Snapshot:
 
 
 def _local_round(key, w_local, alpha_k, residual_k, X_k, y_k, norms_k, k, lam,
-                 n, sigma_p, gamma, *, loss, num_steps, k_keep, use_exact):
+                 n, sigma_p, gamma, *, loss, num_steps, comp):
     """Shared Alg. 2 body: solve + dual update + filter. Traced, not jitted --
     both fused worker rounds inline it so the op sequence (and therefore the
-    bit-exact trajectory) is defined in exactly one place."""
+    bit-exact trajectory) is defined in exactly one place. ``comp`` is a
+    frozen :mod:`repro.core.compress` registry object (static under jit)."""
     key, sub = jax.random.split(key)
     w_eff = w_local[k] + gamma * residual_k
     dalpha, v = solve_subproblem(
@@ -139,37 +140,30 @@ def _local_round(key, w_local, alpha_k, residual_k, X_k, y_k, norms_k, k, lam,
         loss=loss, num_steps=num_steps)
     alpha_new = alpha_k + gamma * dalpha  # Alg. 2 line 5
     dw = residual_k + v  # line 6
-    if k_keep <= 0:
-        sent, new_residual = dw, jnp.zeros_like(dw)
-    else:
-        filt = msg_filter.topk_mask_exact if use_exact else msg_filter.topk_mask
-        res = filt(dw, k_keep)
-        sent, new_residual = res.sent, res.residual
+    sent, new_residual = comp.compress(dw)
     return key, alpha_new, new_residual, dw, sent
 
 
-@partial(jax.jit, static_argnames=("loss", "num_steps", "k_keep", "use_exact"),
+@partial(jax.jit, static_argnames=("loss", "num_steps", "comp"),
          donate_argnums=(0, 2, 3))
 def _worker_round_fused(key, w_local, alpha_k, residual_k, X_k, y_k, norms_k,
-                        k, lam, n, sigma_p, gamma, *, loss, num_steps, k_keep,
-                        use_exact):
+                        k, lam, n, sigma_p, gamma, *, loss, num_steps, comp):
     """One full local round (Alg. 2) as a single dispatch.
 
-    ``k_keep == 0`` means dense (no filtering). Returns the new global PRNG
-    key, the worker's updated dual row and residual, and the filtered payload.
+    Returns the new global PRNG key, the worker's updated dual row and
+    residual, and the compressed payload.
     """
     key, alpha_new, new_residual, _, sent = _local_round(
         key, w_local, alpha_k, residual_k, X_k, y_k, norms_k, k, lam, n,
-        sigma_p, gamma, loss=loss, num_steps=num_steps, k_keep=k_keep,
-        use_exact=use_exact)
+        sigma_p, gamma, loss=loss, num_steps=num_steps, comp=comp)
     return key, alpha_new, new_residual, sent
 
 
-@partial(jax.jit, static_argnames=("loss", "num_steps", "k_keep", "use_exact"),
+@partial(jax.jit, static_argnames=("loss", "num_steps", "comp"),
          donate_argnums=(0, 2, 3))
 def _worker_round_lag(key, w_local, alpha_k, residual_k, ref_k, X_k, y_k,
                       norms_k, k, lam, n, sigma_p, gamma, xi, *, loss,
-                      num_steps, k_keep, use_exact):
+                      num_steps, comp):
     """LAG-style lazy worker round: upload only if the delta is informative.
 
     The upload is skipped when ``||F(dw)||^2 < xi * ref`` where ``ref`` is the
@@ -182,8 +176,7 @@ def _worker_round_lag(key, w_local, alpha_k, residual_k, ref_k, X_k, y_k,
     """
     key, alpha_new, new_residual, dw, sent = _local_round(
         key, w_local, alpha_k, residual_k, X_k, y_k, norms_k, k, lam, n,
-        sigma_p, gamma, loss=loss, num_steps=num_steps, k_keep=k_keep,
-        use_exact=use_exact)
+        sigma_p, gamma, loss=loss, num_steps=num_steps, comp=comp)
     send_sq = jnp.vdot(sent, sent)
     skip = send_sq < xi * ref_k
     sent = jnp.where(skip, jnp.zeros_like(sent), sent)
@@ -270,6 +263,16 @@ class Protocol:
 
     protocol_name = "abstract"
 
+    @classmethod
+    def default_sigma_prime(cls, method: MethodConfig, K: int) -> float:
+        """sigma' when ``MethodConfig.sigma_prime`` is unset.
+
+        The paper's rule for the group family: gamma * B (safe for B-of-K
+        aggregation). Protocol-owned so new registry entries supply their own
+        value instead of growing string checks in the config dataclass.
+        """
+        return method.gamma * method.B
+
     def __init__(self, problem: objectives.Problem, method: MethodConfig,
                  cluster: ClusterModel, *, seed: int):
         self.problem = problem
@@ -298,6 +301,10 @@ class Protocol:
     def arrivals_needed(self, round_index: int) -> int:
         raise NotImplementedError
 
+    def is_sync_round(self, round_index: int) -> bool:
+        """True when round ``round_index`` is a full-K barrier (SyncEvent)."""
+        return False
+
     def process_round(self, round_index: int, arrived: list[Message]) -> list[Message]:
         raise NotImplementedError
 
@@ -317,10 +324,9 @@ class GroupProtocol(Protocol):
     def __init__(self, problem, method, cluster, *, seed):
         super().__init__(problem, method, cluster, seed=seed)
         dt = problem.X.dtype
-        self.dense = method.rho >= 1.0
-        self.k_keep = 0 if self.dense else msg_filter.num_kept(self.d, method.rho)
-        self.up_bytes = (msg_filter.dense_bytes(self.d) if self.dense
-                         else msg_filter.message_bytes(self.k_keep))
+        self.comp = compress_lib.for_method(method, self.d)
+        self.dense = isinstance(self.comp, compress_lib.Dense)
+        self.up_bytes = self.comp.wire_bytes(self.d)
         self.w_server = jnp.zeros((self.d,), dt)
         self.dw_tilde = jnp.zeros((self.K, self.d), dt)
         self.w_local = jnp.zeros((self.K, self.d), dt)
@@ -345,13 +351,17 @@ class GroupProtocol(Protocol):
             return self.K
         return min(self.method.B, self.K)
 
+    def is_sync_round(self, round_index: int) -> bool:
+        T = self.method.T
+        return self.full_sync_period and round_index % T == T - 1
+
     def _launch_worker(self, k: int, start_time: float) -> Message:
         m = self.method
         self.key, alpha_new, residual_new, sent = _worker_round_fused(
             self.key, self.w_local, self.alpha[k], self.residual[k],
             self.X_k[k], self.y_k[k], self.norms_k[k], k, self.problem.lam,
             self.n, self.sigma_p, m.gamma, loss=self.problem.loss,
-            num_steps=m.H, k_keep=self.k_keep, use_exact=m.use_exact_k)
+            num_steps=m.H, comp=self.comp)
         self.alpha[k] = alpha_new
         self.residual[k] = residual_new
         duration = self.cluster.compute_time(k, m.H, self.rng)
@@ -455,8 +465,7 @@ class LagProtocol(GroupProtocol):
             self.key, self.w_local, self.alpha[k], self.residual[k],
             self.ref[k], self.X_k[k], self.y_k[k], self.norms_k[k], k,
             self.problem.lam, self.n, self.sigma_p, m.gamma, m.lag_xi,
-            loss=self.problem.loss, num_steps=m.H,
-            k_keep=self.k_keep, use_exact=m.use_exact_k)
+            loss=self.problem.loss, num_steps=m.H, comp=self.comp)
         self.alpha[k] = alpha_new
         self.residual[k] = residual_new
         return skip, (k, start_time, sent, alpha_new)
@@ -505,6 +514,11 @@ class SyncProtocol(Protocol):
     bytes split evenly between the reduce-scatter and all-gather phases).
     """
 
+    @classmethod
+    def default_sigma_prime(cls, method: MethodConfig, K: int) -> float:
+        # "Adding" aggregation over all K partitions (Ma et al. 2015).
+        return method.gamma * K
+
     def __init__(self, problem, method, cluster, *, seed):
         super().__init__(problem, method, cluster, seed=seed)
         dt = problem.X.dtype
@@ -514,6 +528,9 @@ class SyncProtocol(Protocol):
 
     def num_rounds(self, num_outer: int) -> int:
         return num_outer
+
+    def is_sync_round(self, round_index: int) -> bool:
+        return True  # every lockstep round is a K-barrier
 
     def _tokens(self):
         out = []
@@ -608,21 +625,15 @@ def run_method(
     eval_mode: str = "batched",
 ) -> RunResult:
     """Run ``method`` through the pluggable engine. Same contract as
-    :func:`repro.core.acpd.run_method` (which now delegates here)."""
-    proto = get_protocol(method.protocol)(problem, method, cluster, seed=seed)
-    queue: list[Message] = []
-    for msg in proto.initial_messages():
-        heapq.heappush(queue, msg)
+    :func:`repro.core.acpd.run_method` (which now delegates here).
 
-    snaps: list[_Snapshot] = []
-    iteration = 0
-    for r in range(proto.num_rounds(num_outer)):
-        need = proto.arrivals_needed(r)
-        arrived = [heapq.heappop(queue) for _ in range(need)]
-        for msg in proto.process_round(r, arrived):
-            heapq.heappush(queue, msg)
-        iteration += 1
-        if iteration % eval_every == 0:
-            snaps.append(proto.snapshot(iteration))
+    Thin compat wrapper: the round loop lives in
+    :class:`repro.api.session.Session`; this drains its event stream and
+    folds it back into a :class:`RunResult` (the tests/test_engine.py
+    bit-for-bit pins hold through this path).
+    """
+    from repro.api.session import Session  # late import: api imports engine
 
-    return proto.finalize(_materialize_records(snaps, problem, eval_mode))
+    session = Session(problem, method, cluster, num_outer=num_outer,
+                      seed=seed, eval_every=eval_every, eval_mode=eval_mode)
+    return session.run()

@@ -4,7 +4,7 @@ This is the beyond-paper integration (DESIGN §3): each slice of the mesh's
 ``data`` axis is one ACPD "worker group". Per train step:
 
     dw_g   = residual_g + grad_g                    (error accumulation, Alg.2 l.6)
-    F_g    = dw_g * mask(top-rho fraction of |dw_g|)   (message filter, l.7-9)
+    F_g    = compress(dw_g)                         (message filter, l.7-9)
     update = gamma * sum_g p_g F_g / B              (server update, Alg.1 l.10)
     residual_g <- p_g (dw_g - F_g) + (1-p_g) dw_g   (practical variant + skipped
                                                      groups keep accumulating)
@@ -17,10 +17,13 @@ deltas are applied when, staleness bounded by the dense sync every T steps
 With B = K, rho = 1, gamma = 1 the update is exactly the data-parallel mean
 gradient (tested), so the dense baseline is the same code path.
 
-The magnitude filter uses a two-round histogram threshold (O(n), vectorized
-over groups) -- the jnp twin of kernels/topk_filter.py; on TPU the per-leaf
-filtering runs where the gradient shards live, and only the masked sum
-crosses the ``data`` axis.
+The compression step is a :mod:`repro.core.compress` registry entry
+(``ExchangeConfig.compressor``) -- the same objects the primal-dual simulator
+resolves from ``MethodConfig``, so byte accounting is computed one way on both
+paths. The default ``topk_threshold`` uses a two-round histogram threshold
+(O(n), vectorized over groups) -- the jnp twin of kernels/topk_filter.py; on
+TPU the per-leaf filtering runs where the gradient shards live, and only the
+masked sum crosses the ``data`` axis.
 """
 
 from __future__ import annotations
@@ -32,10 +35,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-PyTree = Any
+from repro.core import compress as compress_lib
+from repro.core.compress import sparsify_leaf, threshold_for_topk  # noqa: F401 (re-export)
 
-_NUM_BUCKETS = 64
-_FLOOR = 2.0**-22
+PyTree = Any
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,9 +50,11 @@ class ExchangeConfig:
     gamma: float = 0.9  # server step scale
     refine: bool = True  # second histogram round
     min_leaf_size: int = 1024  # leaves smaller than this are sent densely
+    compressor: str = "topk_threshold"  # repro.core.compress registry entry
 
     def __post_init__(self):
         assert 1 <= self.group_size <= self.num_groups
+        compress_lib.get_compressor(self.compressor)  # early validation
 
 
 class ExchangeState(NamedTuple):
@@ -68,59 +73,7 @@ def init_state(cfg: ExchangeConfig, params: PyTree) -> ExchangeState:
     return ExchangeState(residual=res)
 
 
-# ---------------------------------------------------------------------------
-# Histogram threshold (grouped, O(n) memory).
-# ---------------------------------------------------------------------------
-
-
-def _round(mag: jax.Array, hi: jax.Array, lo: jax.Array, k: jax.Array):
-    """One histogram round on a flat |x|; returns (t_lo, t_hi) bracketing k."""
-    hi = jnp.maximum(hi, 1e-37)
-    lo = jnp.clip(lo, hi * 1e-37, hi)
-    ratio = jnp.log(lo / hi) / (_NUM_BUCKETS - 1)  # negative
-    # Bucket 0 holds the largest magnitudes.
-    idx = jnp.where(mag >= lo, jnp.log(jnp.maximum(mag, 1e-37) / hi) / ratio, _NUM_BUCKETS)
-    idx = jnp.clip(idx.astype(jnp.int32), 0, _NUM_BUCKETS)
-    counts = jnp.zeros(_NUM_BUCKETS + 1, jnp.int32).at[idx].add(1)
-    csum = jnp.cumsum(counts[:_NUM_BUCKETS])  # count(mag >= edge_j)
-    reached = csum >= k
-    j = jnp.where(jnp.any(reached), jnp.argmax(reached), _NUM_BUCKETS - 1)
-    edge = lambda i: hi * jnp.exp(ratio * i.astype(jnp.float32))
-    t_lo = edge(j + 1)  # lower edge of bucket j
-    t_hi = jnp.where(j > 0, edge(j), jnp.inf)
-    return t_lo, t_hi
-
-
-def threshold_for_topk(x: jax.Array, k: jax.Array, refine: bool = True) -> jax.Array:
-    """Approximate k-th-largest-|x| threshold via 1-2 histogram rounds.
-
-    Guarantee: #{|x| >= t} >= min(k, #{|x| >= max|x|*2^-22}) and the overshoot
-    is bounded by one refined-bucket's population (tested against exact top-k).
-    """
-    # NOTE: no reshape/flatten -- on a sharded leaf a flatten forces an
-    # all-gather of the whole tensor on every device (measured: +47 s of
-    # collective per step at 14B x 16 groups). All ops below are elementwise
-    # or full reductions, which stay sharded.
-    mag = jnp.abs(x.astype(jnp.float32))
-    hi = jnp.max(mag)
-    t_lo, t_hi = _round(mag, hi, hi * _FLOOR, k)
-    if refine:
-        t_lo, _ = _round(mag, jnp.where(jnp.isinf(t_hi), hi, t_hi), t_lo, k)
-    return t_lo
-
-
-def sparsify_leaf(dw: jax.Array, rho: float, refine: bool = True):
-    """dw (G, *shape) -> (sent, kept_mask) with ~rho fraction kept per group.
-
-    Shape-preserving (no flatten): see threshold_for_topk."""
-    G = dw.shape[0]
-    n = int(np.prod(dw.shape[1:]))
-    k = jnp.int32(max(1, int(rho * n)))
-    thresh = jax.vmap(lambda v: threshold_for_topk(v, k, refine))(dw)  # (G,)
-    tb = thresh.reshape((G,) + (1,) * (dw.ndim - 1))
-    mask = jnp.abs(dw) >= tb
-    sent = jnp.where(mask, dw, 0.0)
-    return sent, mask
+_DENSE = compress_lib.Dense()
 
 
 # ---------------------------------------------------------------------------
@@ -145,6 +98,7 @@ def exchange_sequential(cfg: ExchangeConfig, grad_fn, params, grouped_batch,
     ``exchange`` (tested for equivalence).
     """
     G, B = cfg.num_groups, cfg.group_size
+    comp = compress_lib.for_exchange(cfg)
     dense_step = jnp.mod(step, cfg.sync_period) == cfg.sync_period - 1
     p = jnp.where(dense_step, jnp.ones(G), participation(cfg, step))
     denom = jnp.maximum(jnp.sum(p), 1.0)
@@ -152,12 +106,12 @@ def exchange_sequential(cfg: ExchangeConfig, grad_fn, params, grouped_batch,
     def leaf_filter(dw):
         n = dw.size
         if cfg.rho >= 1.0 or n < cfg.min_leaf_size:
-            return dw, jnp.ones(dw.shape, bool)
-        sent, mask = sparsify_leaf(dw[None], cfg.rho, cfg.refine)
+            return dw, jnp.ones(dw.shape, bool), jnp.float32(True)
+        sent, mask = comp.compress_grouped(dw[None])
         sent, mask = sent[0], mask[0]
         sent = jnp.where(dense_step, dw, sent)
         mask = jnp.where(dense_step, jnp.ones_like(mask), mask)
-        return sent, mask
+        return sent, mask, dense_step.astype(jnp.float32)
 
     flat_res = dict(enumerate(jax.tree.leaves(state.residual)))
     treedef = jax.tree.structure(state.residual)
@@ -174,22 +128,28 @@ def exchange_sequential(cfg: ExchangeConfig, grad_fn, params, grouped_batch,
         res_g, batch_g, g_idx = inp
         g = grad_flat(params, batch_g)
         pg = p[g_idx]
-        acc_upd, acc_sent = acc
+        acc_upd, acc_sent, acc_bytes = acc
         new_res, new_acc = {}, {}
         sent_count = jnp.float32(0.0)
+        byte_count = jnp.float32(0.0)
         for i, dw_prev in res_g.items():
             dw = dw_prev + g[i].astype(jnp.float32)
-            sent, mask = leaf_filter(dw)
+            sent, mask, sent_dense = leaf_filter(dw)
             new_acc[i] = acc_upd[i] + pg * sent
             new_res[i] = jnp.where(pg > 0, dw - sent, dw)
-            sent_count += pg * jnp.sum(mask)
+            kept = jnp.sum(mask)
+            sent_count += pg * kept
+            byte_count += pg * jnp.where(
+                sent_dense > 0, _DENSE.payload_bytes(kept),
+                comp.payload_bytes(kept)).astype(jnp.float32)
         # Pin the accumulator to its sharded layout: without this the scan
         # carry (a full f32 parameter pytree) replicates on every device --
         # 59 GB at 14B, measured (§Perf).
-        return (shard_acc(new_acc), acc_sent + sent_count), new_res
+        return (shard_acc(new_acc), acc_sent + sent_count,
+                acc_bytes + byte_count), new_res
 
-    (acc_upd, sent_total), new_res_flat = jax.lax.scan(
-        body_flat, (zero_acc, jnp.float32(0.0)),
+    (acc_upd, sent_total, bytes_total), new_res_flat = jax.lax.scan(
+        body_flat, (zero_acc, jnp.float32(0.0), jnp.float32(0.0)),
         (flat_res, grouped_batch, jnp.arange(G)))
 
     update_leaves = [cfg.gamma * acc_upd[i] / denom for i in sorted(acc_upd)]
@@ -199,6 +159,7 @@ def exchange_sequential(cfg: ExchangeConfig, grad_fn, params, grouped_batch,
     total = float(sum(np.prod(v.shape) for v in jax.tree.leaves(state.residual)))
     metrics = {
         "exchange/sent_fraction": sent_total / jnp.float32(max(total, 1.0)),
+        "exchange/bytes_step": bytes_total,
         "exchange/participating": jnp.sum(p),
         "exchange/dense_step": dense_step.astype(jnp.float32),
     }
@@ -220,6 +181,7 @@ def exchange(cfg: ExchangeConfig, grads_per_group: PyTree, state: ExchangeState,
     data axis). Returns (update pytree without the G axis, new state, metrics).
     """
     G, B = cfg.num_groups, cfg.group_size
+    comp = compress_lib.for_exchange(cfg)
     dense_step = jnp.mod(step, cfg.sync_period) == cfg.sync_period - 1
     always_dense = cfg.rho >= 1.0 and B == G
     p = jnp.where(dense_step, jnp.ones(G), participation(cfg, step))
@@ -227,21 +189,28 @@ def exchange(cfg: ExchangeConfig, grads_per_group: PyTree, state: ExchangeState,
 
     sent_count = jnp.float32(0.0)
     total_count = jnp.float32(0.0)
+    byte_count = jnp.float32(0.0)
 
     def leaf_exchange(res, g):
-        nonlocal sent_count, total_count
+        nonlocal sent_count, total_count, byte_count
         dw = res + g.astype(jnp.float32)  # (G, *shape)
         n = dw[0].size
         if cfg.rho >= 1.0 or n < cfg.min_leaf_size:
             sent, mask = dw, jnp.ones_like(dw, bool)
+            leaf_dense = jnp.float32(1.0)
         else:
-            sent_sparse, mask_sparse = sparsify_leaf(dw, cfg.rho, cfg.refine)
+            sent_sparse, mask_sparse = comp.compress_grouped(dw)
             sent = jnp.where(dense_step, dw, sent_sparse)
             mask = jnp.where(dense_step, jnp.ones_like(dw, bool), mask_sparse)
+            leaf_dense = dense_step.astype(jnp.float32)
         pb = p.reshape((G,) + (1,) * (dw.ndim - 1))
         update = cfg.gamma * jnp.sum(pb * sent, axis=0) / denom
         new_res = jnp.where(pb > 0, dw - sent, dw)
-        sent_count += jnp.sum(jnp.where(pb > 0, mask, False))
+        kept = jnp.sum(jnp.where(pb > 0, mask, False), axis=tuple(range(1, dw.ndim)))
+        sent_count += jnp.sum(kept)
+        byte_count += jnp.sum(p * jnp.where(
+            leaf_dense > 0, _DENSE.payload_bytes(kept),
+            comp.payload_bytes(kept)).astype(jnp.float32))
         total_count += jnp.float32(dw.size)
         return update, new_res
 
@@ -254,6 +223,7 @@ def exchange(cfg: ExchangeConfig, grads_per_group: PyTree, state: ExchangeState,
 
     metrics = {
         "exchange/sent_fraction": sent_count / jnp.maximum(total_count, 1.0),
+        "exchange/bytes_step": byte_count,
         "exchange/participating": jnp.sum(p),
         "exchange/dense_step": dense_step.astype(jnp.float32),
         "exchange/residual_norm": jnp.sqrt(sum(

@@ -1,0 +1,235 @@
+"""The public API surface (repro/api): ExperimentSpec JSON round-trip,
+streaming Session events + early stop, compat-wrapper equivalence, early
+protocol validation, and the `python -m repro` CLI."""
+
+import dataclasses
+import json
+
+import pytest
+
+from repro import api
+from repro.core import baselines, engine
+from repro.core.acpd import run_method, run_method_reference
+from repro.core.simulate import ClusterModel
+
+K, D = 4, 512
+
+
+def _tiny_spec(**overrides):
+    """A seconds-scale spec against the session fixture problem's twin."""
+    fields = dict(
+        name="tiny",
+        problem=api.ProblemSpec("linear_synthetic",
+                                {"num_workers": K, "n_per_worker": 128,
+                                 "d": D, "nnz_per_row": 24, "seed": 7,
+                                 "lam": 1e-3}),
+        cluster=ClusterModel(num_workers=K, straggler_sigma=3.0),
+        methods=(
+            api.MethodEntry(baselines.acpd(K, D, B=2, T=5, rho_d=32,
+                                           gamma=0.5, H=64), 2),
+            api.MethodEntry(baselines.cocoa_plus(K, H=64), 6),
+        ),
+        eval_every=2,
+        seed=3,
+    )
+    fields.update(overrides)
+    return api.ExperimentSpec(**fields)
+
+
+# ---------------------------------------------------------------------------
+# Spec serialization.
+# ---------------------------------------------------------------------------
+
+
+def test_spec_json_round_trip():
+    spec = _tiny_spec(target_gap=1e-3, time_budget=12.5)
+    text = spec.to_json()
+    back = api.ExperimentSpec.from_json(text)
+    assert back == spec
+    # stable: serializing the round-tripped spec is byte-identical
+    assert back.to_json() == text
+    # every piece survives, including the nested config dataclasses
+    assert back.methods[0].config == spec.methods[0].config
+    assert back.cluster.straggler_workers == (0,)
+
+
+def test_preset_specs_round_trip():
+    for name in sorted(api.PRESETS):
+        spec = api.build_preset(name, quick=True)
+        assert api.ExperimentSpec.from_json(spec.to_json()) == spec, name
+
+
+def test_problem_registry_errors():
+    with pytest.raises(ValueError, match="unknown problem"):
+        api.ProblemSpec("nope", {}).build()
+    assert "rcv1_like" in api.available_problems()
+    assert "linear_synthetic" in api.available_problems()
+
+
+# ---------------------------------------------------------------------------
+# Session streaming.
+# ---------------------------------------------------------------------------
+
+
+def test_session_folds_to_run_method_result(small_problem):
+    """Draining a Session == the one-shot compat wrapper, record for record."""
+    m = baselines.acpd(K, D, B=2, T=5, rho_d=64, gamma=0.5, H=64)
+    cluster = ClusterModel(num_workers=K)
+    want = run_method(small_problem, m, cluster, num_outer=2, eval_every=2,
+                      seed=3)
+    session = api.Session(small_problem, m, cluster, num_outer=2,
+                          eval_every=2, seed=3)
+    events = list(session.events())
+    got = session.result()
+    assert [dataclasses.astuple(r) for r in got.records] == \
+        [dataclasses.astuple(r) for r in want.records]
+    # the EvalEvent stream carries exactly the records
+    evals = [e for e in events if isinstance(e, api.EvalEvent)]
+    assert [e.to_record() for e in evals] == got.records
+
+
+def test_session_stream_mode_matches_batched(small_problem):
+    """Live (streamed) certificates == the deferred batched ones bit-for-bit
+    (same contract tests/test_engine.py pins for replay vs batched)."""
+    m = baselines.acpd(K, D, B=2, T=5, rho_d=64, gamma=0.5, H=64)
+    cluster = ClusterModel(num_workers=K)
+    batched = api.Session(small_problem, m, cluster, num_outer=2,
+                          eval_every=2, seed=3).run()
+    streamed = api.Session(small_problem, m, cluster, num_outer=2,
+                           eval_every=2, seed=3, eval_mode="stream").run()
+    assert [dataclasses.astuple(r) for r in streamed.records] == \
+        [dataclasses.astuple(r) for r in batched.records]
+
+
+def test_session_event_shape(small_problem):
+    m = baselines.acpd(K, D, B=2, T=5, rho_d=64, gamma=0.5, H=64)
+    session = api.Session(small_problem, m, ClusterModel(num_workers=K),
+                          num_outer=2, eval_every=2, seed=0)
+    events = list(session)
+    rounds = [e for e in events if isinstance(e, api.RoundEvent)]
+    syncs = [e for e in events if isinstance(e, api.SyncEvent)]
+    stops = [e for e in events if isinstance(e, api.StopEvent)]
+    assert len(rounds) == 2 * 5  # num_outer * T
+    assert [s.iteration for s in syncs] == [5, 10]  # every T-th round
+    assert len(stops) == 1 and stops[0].reason == "completed"
+    assert isinstance(events[-1], api.StopEvent)
+    # accounting is monotone along the stream
+    ups = [e.bytes_up for e in rounds]
+    assert ups == sorted(ups) and ups[-1] > 0
+
+
+def test_session_early_stop_on_target_gap(small_problem):
+    m = baselines.acpd(K, D, B=2, T=10, rho_d=64, gamma=0.5, H=256)
+    full = api.Session(small_problem, m, ClusterModel(num_workers=K),
+                       num_outer=6, eval_every=2, seed=0).run()
+    target = full.records[len(full.records) // 2].gap  # reachable mid-run gap
+    session = api.Session(small_problem, m, ClusterModel(num_workers=K),
+                          num_outer=6, eval_every=2, seed=0,
+                          target_gap=target)
+    events = list(session)
+    stop = events[-1]
+    assert isinstance(stop, api.StopEvent) and stop.reason == "target_gap"
+    res = session.result()
+    assert res.records[-1].gap <= target
+    assert res.records[-1].iteration < full.records[-1].iteration
+
+
+def test_session_early_stop_on_time_budget(small_problem):
+    m = baselines.acpd(K, D, B=2, T=10, rho_d=64, gamma=0.5, H=64)
+    full = api.Session(small_problem, m, ClusterModel(num_workers=K),
+                       num_outer=4, eval_every=4, seed=0).run()
+    budget = full.records[-1].sim_time / 3
+    session = api.Session(small_problem, m, ClusterModel(num_workers=K),
+                          num_outer=4, eval_every=4, seed=0,
+                          time_budget=budget)
+    res = session.run()
+    assert res.records, "early-stopped run still carries a terminal record"
+    assert res.records[-1].sim_time >= budget  # stopped at the boundary
+    assert res.records[-1].iteration < full.records[-1].iteration
+
+
+def test_experiment_runs_spec(small_problem):
+    spec = _tiny_spec()
+    exp = api.Experiment(spec)
+    results = exp.run()
+    assert set(results) == {"ACPD", "CoCoA+"}
+    # spec-driven run == direct run_method with the same knobs
+    want = run_method(exp.problem, spec.methods[0].config, spec.cluster,
+                      num_outer=2, eval_every=2, seed=3)
+    got = results["ACPD"]
+    assert [dataclasses.astuple(r) for r in got.records] == \
+        [dataclasses.astuple(r) for r in want.records]
+    assert spec.method_named("CoCoA+").num_outer == 6
+    with pytest.raises(KeyError):
+        spec.method_named("nope")
+
+
+# ---------------------------------------------------------------------------
+# Early protocol validation (satellite): unknown names fail fast, listing
+# the registry.
+# ---------------------------------------------------------------------------
+
+
+def test_unknown_protocol_fails_fast_with_registry_listing(small_problem):
+    m = dataclasses.replace(baselines.acpd(K, D), protocol="nope")
+    with pytest.raises(ValueError, match=r"unknown protocol 'nope'.*group"):
+        run_method(small_problem, m, ClusterModel(num_workers=K),
+                   num_outer=1, seed=0)
+    with pytest.raises(ValueError, match=r"unknown protocol 'nope'"):
+        api.Session(small_problem, m, ClusterModel(num_workers=K),
+                    num_outer=1)
+
+
+def test_reference_error_mentions_engine_registry(small_problem):
+    m = baselines.acpd_lag(K, D)
+    with pytest.raises(ValueError, match=r"engine registry.*lag"):
+        run_method_reference(small_problem, m, ClusterModel(num_workers=K),
+                             num_outer=1, seed=0)
+
+
+def test_sigma_prime_owned_by_protocols():
+    """The sync/group defaults now come from Protocol classmethods."""
+    m = baselines.cocoa_plus(K)  # sigma_prime pinned to K explicitly
+    assert m.resolved_sigma_prime(K) == float(K)
+    group = baselines.acpd(K, D, B=2, gamma=0.5)
+    assert group.resolved_sigma_prime(K) == 0.5 * 2
+    sync = dataclasses.replace(group, protocol="sync", sigma_prime=None)
+    assert sync.resolved_sigma_prime(K) == 0.5 * K
+    assert engine.get_protocol("sync").default_sigma_prime(group, K) == 0.5 * K
+    with pytest.raises(ValueError, match="unknown protocol"):
+        dataclasses.replace(group, protocol="nope").resolved_sigma_prime(K)
+
+
+# ---------------------------------------------------------------------------
+# CLI.
+# ---------------------------------------------------------------------------
+
+
+def test_cli_spec_and_run_round_trip(tmp_path, capsys):
+    from repro.__main__ import main
+
+    spec = _tiny_spec(target_gap=5e-2)
+    spec_path = tmp_path / "tiny.json"
+    spec.save(spec_path)
+    out_path = tmp_path / "out.json"
+    rc = main(["run", str(spec_path), "--out", str(out_path)])
+    assert rc == 0
+    printed = capsys.readouterr().out
+    assert "eval" in printed and "stop" in printed
+    doc = json.loads(out_path.read_text())
+    assert doc["spec"] == spec.to_dict()
+    assert "jax_version" in doc["provenance"]
+    assert set(doc["results"]) == {"ACPD", "CoCoA+"}
+    for res in doc["results"].values():
+        assert res["records"], "each method carries its trajectory"
+
+
+def test_cli_spec_subcommand(capsys):
+    from repro.__main__ import main
+
+    rc = main(["spec", "fig3", "--quick"])
+    assert rc == 0
+    text = capsys.readouterr().out
+    spec = api.ExperimentSpec.from_json(text)
+    assert spec.name.startswith("fig3-convergence")
+    assert {e.config.protocol for e in spec.methods} == {"group", "sync"}

@@ -1,0 +1,177 @@
+"""The unified Compressor registry (core/compress.py): round-trip properties
+over duplicate-magnitude and bf16 inputs, legacy-mapping resolution, and the
+one-way byte accounting shared by the simulator (filter.py path) and the
+transformer exchange path (exchange.py)."""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import compress as cp
+from repro.core import exchange as ex
+from repro.core import filter as flt
+from repro.core.acpd import MethodConfig
+
+
+def test_registry_contents_and_errors():
+    names = cp.available_compressors()
+    for expected in ("dense", "topk_exact", "topk_threshold", "topk_q8"):
+        assert expected in names
+    with pytest.raises(ValueError, match="unknown compressor"):
+        cp.get_compressor("nope")
+    with pytest.raises(ValueError, match="unknown compressor"):
+        ex.ExchangeConfig(num_groups=2, group_size=1, compressor="nope")
+
+
+def _with_duplicates(rng, d):
+    """A vector whose magnitudes contain deliberate ties."""
+    base = rng.standard_normal(max(2, (d + 1) // 2)).astype(np.float32)
+    dup = np.concatenate([base, -base])[:d]  # |x| duplicated pairwise
+    rng.shuffle(dup)
+    return dup
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(8, 300), st.integers(1, 6), st.integers(0, 2**31 - 1))
+def test_topk_roundtrip_with_duplicate_magnitudes(d, k_div, seed):
+    """sent + residual == dw bitwise even when magnitudes tie."""
+    rng = np.random.default_rng(seed)
+    dw = jnp.asarray(_with_duplicates(rng, d))
+    k = max(1, d // k_div)
+    for comp in (cp.TopKExact(k=k), cp.TopKThreshold(k=k), cp.Dense()):
+        sent, residual = comp.compress(dw)
+        assert bool(jnp.all(sent + residual == dw)), comp
+    # exact-k keeps exactly k even under ties; threshold keeps >= k
+    sent, _ = cp.TopKExact(k=k).compress(dw)
+    assert int(jnp.sum(sent != 0)) <= k  # zeros in dw may reduce the nnz
+    sent_t, _ = cp.TopKThreshold(k=k).compress(dw)
+    mag = jnp.abs(dw)
+    c_k = jnp.sort(mag)[-k]
+    assert bool(jnp.all((sent_t != 0) == ((mag >= c_k) & (dw != 0))))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(16, 256), st.integers(0, 2**31 - 1))
+def test_topk_roundtrip_bf16(d, seed):
+    """bf16 payloads: masking is exact, so conservation holds bitwise."""
+    rng = np.random.default_rng(seed)
+    dw = jnp.asarray(rng.standard_normal(d), jnp.bfloat16)
+    k = max(1, d // 4)
+    for comp in (cp.TopKExact(k=k), cp.Dense()):
+        sent, residual = comp.compress(dw)
+        assert sent.dtype == jnp.bfloat16
+        assert bool(jnp.all(sent + residual == dw)), comp
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(32, 400), st.integers(0, 2**31 - 1))
+def test_quantized_error_feedback(d, seed):
+    """topk_q8: dequantized payload within half a quant step of the exact
+    top-k payload; the quantization error lands in the residual (lossless
+    over time via error feedback)."""
+    rng = np.random.default_rng(seed)
+    dw = jnp.asarray(rng.standard_normal(d).astype(np.float32))
+    k = max(1, d // 8)
+    comp = cp.QuantizedTopK(k=k)
+    sent, residual = comp.compress(dw)
+    exact = flt.topk_mask_exact(dw, k)
+    # conservation: nothing is lost, only delayed (up to fp rounding of the
+    # dequantized payload)
+    np.testing.assert_allclose(np.asarray(sent + residual), np.asarray(dw),
+                               rtol=1e-6, atol=1e-6)
+    scale = float(jnp.max(jnp.abs(exact.sent))) / 127.0
+    err = np.abs(np.asarray(sent) - np.asarray(exact.sent))
+    assert err.max() <= 0.5 * scale + 1e-7
+    # the payload is strictly smaller on the wire than plain top-k
+    assert comp.wire_bytes(d) < cp.TopKExact(k=k).wire_bytes(d)
+
+
+def test_wire_bytes_match_filter_module():
+    """The registry's byte formulas ARE filter.py's Table-I accounting."""
+    d, k = 47_236, 1000
+    assert cp.TopKExact(k=k).wire_bytes(d) == flt.message_bytes(k)
+    assert cp.TopKThreshold(k=k).wire_bytes(d) == flt.message_bytes(k)
+    assert cp.Dense().wire_bytes(d) == flt.dense_bytes(d)
+    assert cp.QuantizedTopK(k=k).wire_bytes(d) == k * 5 + 4
+
+
+def test_for_method_reproduces_legacy_mapping():
+    d = 1024
+    dense = cp.for_method(MethodConfig(name="m", rho=1.0), d)
+    assert isinstance(dense, cp.Dense)
+    exact = cp.for_method(MethodConfig(name="m", rho=0.1), d)
+    assert isinstance(exact, cp.TopKExact)
+    assert exact.k == flt.num_kept(d, 0.1)
+    thresh = cp.for_method(MethodConfig(name="m", rho=0.1, use_exact_k=False), d)
+    assert isinstance(thresh, cp.TopKThreshold)
+    q8 = cp.for_method(MethodConfig(name="m", rho=0.1, compressor="topk_q8"), d)
+    assert isinstance(q8, cp.QuantizedTopK)
+    assert q8.k == flt.num_kept(d, 0.1)
+
+
+def test_for_exchange_respects_refine():
+    """ExchangeConfig.refine reaches every histogram-based compressor."""
+    for name in ("topk_threshold", "topk_q8"):
+        cfg = ex.ExchangeConfig(num_groups=2, group_size=1, rho=0.05,
+                                refine=False, compressor=name)
+        assert cp.for_exchange(cfg).refine is False, name
+
+
+def test_exchange_and_simulator_byte_accounting_agree(small_problem):
+    """Acceptance pin: filter.py-path (engine) and exchange.py-path bytes go
+    through the SAME registry objects and agree exactly."""
+    from repro.core import engine
+    from repro.core.simulate import ClusterModel
+
+    d = small_problem.d
+    rho = 32 / d
+    k = flt.num_kept(d, rho)
+
+    # Simulator side: the group protocol bills comp.wire_bytes per upload.
+    m = MethodConfig(name="ACPD", protocol="group", B=2, T=5, rho=rho, H=8)
+    proto = engine.get_protocol("group")(
+        small_problem, m, ClusterModel(num_workers=small_problem.num_workers),
+        seed=0)
+    assert proto.up_bytes == proto.comp.wire_bytes(d) == flt.message_bytes(k)
+
+    # Exchange side: one step with the exact-k compressor sends exactly k
+    # entries per participating group -- billed with the same formula.
+    G, B = 4, 2
+    n_leaf = 512
+    cfg = ex.ExchangeConfig(num_groups=G, group_size=B, sync_period=1000,
+                            rho=k / n_leaf, min_leaf_size=8,
+                            compressor="topk_exact")
+    comp_ex = cp.for_exchange(cfg)
+    grads = {"p0": jnp.asarray(
+        np.random.default_rng(0).standard_normal((G, n_leaf)), jnp.float32)}
+    state = ex.init_state(cfg, {"p0": jnp.zeros(n_leaf)})
+    _, _, metrics = ex.exchange(cfg, grads, state, jnp.int32(0))
+    expected = B * int(comp_ex.payload_bytes(k))
+    assert int(metrics["exchange/bytes_step"]) == expected
+    # ...and that per-message cost equals the simulator's wire bytes for the
+    # same (d, k): ONE formula across both paths.
+    assert int(comp_ex.payload_bytes(k)) == flt.message_bytes(k) \
+        == cp.TopKExact(k=k).wire_bytes(n_leaf)
+
+
+def test_quantized_compressor_runs_in_engine(small_problem):
+    """MethodConfig.compressor='topk_q8': converges and uploads fewer bytes
+    than the 8-bytes-per-entry top-k run (same k)."""
+    from repro.core.acpd import run_method
+    from repro.core.simulate import ClusterModel
+
+    K, d = small_problem.num_workers, small_problem.d
+    cluster = ClusterModel(num_workers=K)
+    base = MethodConfig(name="topk", protocol="group", B=2, T=10, rho=64 / d,
+                        gamma=0.5, H=256)
+    q8 = dataclasses.replace(base, name="q8", compressor="topk_q8")
+    res_b = run_method(small_problem, base, cluster, num_outer=4,
+                       eval_every=4, seed=2)
+    res_q = run_method(small_problem, q8, cluster, num_outer=4,
+                       eval_every=4, seed=2)
+    assert res_q.records[-1].bytes_up < res_b.records[-1].bytes_up
+    gaps = [r.gap for r in res_q.records]
+    assert gaps[-1] < gaps[0] / 5, gaps
