@@ -4,12 +4,18 @@
 
 PY ?= python
 
-.PHONY: check test bench-quick bench
+.PHONY: check test docs-check bench-quick bench
 
-check: test bench-quick
+check: test docs-check bench-quick
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
+
+# Offline markdown link-check + JSON round-trip of every shipped preset
+# (the CI docs job runs exactly this target).
+docs-check:
+	$(PY) scripts/check_links.py README.md ROADMAP.md docs
+	PYTHONPATH=src $(PY) scripts/check_specs.py
 
 bench-quick:
 	PYTHONPATH=src $(PY) -m benchmarks.run --quick

@@ -28,10 +28,12 @@ def main(argv: list[str] | None = None) -> None:
 
     from benchmarks import (bench_engine, bench_fig3_convergence,
                             bench_fig4a_rho, bench_fig4b_scaling,
-                            bench_fig5_realenv, bench_table1, roofline)
+                            bench_fig5_realenv, bench_straggler_zoo,
+                            bench_table1, roofline)
 
     mods = [bench_table1, bench_fig3_convergence, bench_fig4a_rho,
-            bench_fig4b_scaling, bench_fig5_realenv, bench_engine, roofline]
+            bench_fig4b_scaling, bench_fig5_realenv, bench_straggler_zoo,
+            bench_engine, roofline]
     if args.only:
         mods = [m for m in mods if args.only in m.__name__]
         if not mods:

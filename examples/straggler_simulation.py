@@ -27,6 +27,8 @@ def sweep_spec(sigma: float) -> api.ExperimentSpec:
                                              H=H), 40),
         api.MethodEntry(baselines.acpd_lag(K, D, B=2, T=10, rho_d=64,
                                            gamma=0.5, H=H), 12),
+        api.MethodEntry(baselines.acpd_adaptive(K, D, T=10, rho_d=64,
+                                                gamma=0.5, H=H), 12),
     )
     return api.ExperimentSpec(
         name=f"straggler-sweep-sigma{sigma:g}",
@@ -41,8 +43,12 @@ def sweep_spec(sigma: float) -> api.ExperimentSpec:
 def main() -> None:
     print(f"protocol registry: {', '.join(engine.available_protocols())}")
     print(f"compressor registry: {', '.join(api.available_compressors())}")
+    print(f"delay registry: {', '.join(api.available_delays())} "
+          f"(sweep the full protocol x delay grid with the zoo-* presets / "
+          f"benchmarks/bench_straggler_zoo.py)")
     print(f"{'sigma':>6s} {'CoCoA+':>9s} {'ACPD':>9s} {'ACPD B=K':>9s} "
-          f"{'ACPD rho=1':>10s} {'async':>9s} {'LAG':>9s} {'speedup':>8s}")
+          f"{'ACPD rho=1':>10s} {'async':>9s} {'LAG':>9s} {'adaptB':>9s} "
+          f"{'speedup':>8s}")
     for sigma in (1.0, 2.0, 5.0, 10.0):
         spec = sweep_spec(sigma)
         results = api.Experiment(spec).run()
@@ -52,12 +58,14 @@ def main() -> None:
         sp = f"{t_c / t_a:7.2f}x" if (t_c and t_a) else "     n/a"
         print(f"{sigma:6.1f} {fmt(t_c)} {fmt(t_a)} {fmt(t['ACPD-B=K'])} "
               f"{fmt(t['ACPD-rho=1']):>10s} {fmt(t['ACPD-async'])} "
-              f"{fmt(t['ACPD-LAG'])} {sp}")
+              f"{fmt(t['ACPD-LAG'])} {fmt(t['ACPD-adaptiveB'])} {sp}")
     print("\nExpected: ACPD's speedup over CoCoA+ grows with sigma (the "
           "group-wise server never waits for the straggler between syncs); "
           "B=K (full barrier) is slowest. The async protocol (B=1, no "
           "barrier) is immune to the straggler but pays more rounds per unit "
-          "progress; LAG tracks ACPD's time while uploading fewer bytes. "
+          "progress; LAG tracks ACPD's time while uploading fewer bytes; "
+          "adaptive-B learns a straggler-excluding group size on its own and "
+          "tracks hand-tuned ACPD. "
           "Note: at this small d the DENSE group-wise ablation (rho=1) is "
           "fastest -- sparsity costs extra rounds while communication is "
           "cheap, the paper's own observation (2); the sparsity payoff "

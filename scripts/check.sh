@@ -1,7 +1,14 @@
 #!/usr/bin/env bash
-# Tier-1 tests + smoke-scale benchmarks, one command (same as `make check`).
+# Tier-1 tests + docs checks + smoke-scale benchmarks, one command.
+# Delegates to `make check` (the single source of truth for the recipe);
+# the inline fallback below exists only for environments without make.
 set -euo pipefail
 cd "$(dirname "$0")/.."
+if command -v make >/dev/null 2>&1; then
+    exec make check
+fi
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python -m pytest -x -q
+python scripts/check_links.py README.md ROADMAP.md docs
+python scripts/check_specs.py
 python -m benchmarks.run --quick

@@ -1,0 +1,109 @@
+#!/usr/bin/env python
+"""Offline markdown link checker for README/ROADMAP/docs.
+
+Checks every ``[text](target)`` in the given markdown files (or all ``*.md``
+under given directories):
+
+* relative file targets must exist (relative to the containing file);
+* ``#fragment`` targets (own-file or ``file.md#fragment``) must match a
+  heading in the target file, using GitHub's slugification;
+* ``http(s)``/``mailto`` targets are skipped (the container is offline) --
+  only their syntax is accepted.
+
+Exit code 0 when every link resolves; 1 otherwise, listing each failure as
+``file:line: message``. No dependencies beyond the stdlib, so the CI docs
+job and tests/test_docs.py share it.
+
+Usage: python scripts/check_links.py README.md ROADMAP.md docs/
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+# [text](target) -- ignores images' leading "!" (same target rules apply)
+_LINK = re.compile(r"\[[^\]\[]*\]\(([^)\s]+)\)")
+_HEADING = re.compile(r"^#{1,6}\s+(.*)$")
+_FENCE = re.compile(r"^\s*(```|~~~)")
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: lowercase, drop punctuation, spaces -> dashes."""
+    text = re.sub(r"[*_`]", "", heading.strip().lower())
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def headings_of(path: pathlib.Path) -> set[str]:
+    slugs: set[str] = set()
+    in_fence = False
+    for line in path.read_text().splitlines():
+        if _FENCE.match(line):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        m = _HEADING.match(line)
+        if m:
+            slugs.add(github_slug(m.group(1)))
+    return slugs
+
+
+def iter_links(path: pathlib.Path):
+    """Yield (lineno, target) for every markdown link outside code fences."""
+    in_fence = False
+    for lineno, line in enumerate(path.read_text().splitlines(), start=1):
+        if _FENCE.match(line):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        for m in _LINK.finditer(line):
+            yield lineno, m.group(1)
+
+
+def check_file(path: pathlib.Path) -> list[str]:
+    errors: list[str] = []
+    for lineno, target in iter_links(path):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        base, _, fragment = target.partition("#")
+        dest = path if not base else (path.parent / base).resolve()
+        if not dest.exists():
+            errors.append(f"{path}:{lineno}: broken link target {target!r}")
+            continue
+        if fragment and dest.suffix == ".md":
+            if github_slug(fragment) not in headings_of(dest):
+                errors.append(
+                    f"{path}:{lineno}: no heading {fragment!r} in {dest}")
+    return errors
+
+
+def collect(args: list[str]) -> list[pathlib.Path]:
+    files: list[pathlib.Path] = []
+    for a in args:
+        p = pathlib.Path(a)
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.md")))
+        else:
+            files.append(p)
+    return files
+
+
+def main(argv: list[str]) -> int:
+    files = collect(argv or ["README.md", "ROADMAP.md", "docs"])
+    missing = [f for f in files if not f.exists()]
+    errors = [f"{f}: file not found" for f in missing]
+    for f in files:
+        if f.exists():
+            errors.extend(check_file(f))
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"# link-check: {len(files)} file(s), {len(errors)} error(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -1,0 +1,50 @@
+#!/usr/bin/env python
+"""JSON round-trip every shipped preset spec (the CI docs-job half that
+needs the package).
+
+For each entry in ``repro.api.PRESETS`` (both quick and full scale):
+build the spec, serialize with ``to_json``, parse back with ``from_json``,
+and require equality -- the same contract ``python -m repro spec <preset> |
+python -m repro run`` relies on. Also re-validates that every method's
+registry names (protocol / compressor / local solver) and the cluster's
+delay model resolve.
+
+Run from the repo root: PYTHONPATH=src python scripts/check_specs.py
+"""
+
+from __future__ import annotations
+
+import sys
+
+
+def main() -> int:
+    from repro import api
+    from repro.core import compress, delays, engine, solvers
+
+    failures = []
+    count = 0
+    for name in sorted(api.PRESETS):
+        for quick in (False, True):
+            spec = api.build_preset(name, **({"quick": True} if quick else {}))
+            count += 1
+            back = api.ExperimentSpec.from_json(spec.to_json())
+            if back != spec:
+                failures.append(f"{spec.name}: JSON round-trip not lossless")
+                continue
+            try:
+                delays.get_delay(spec.cluster.delay_model)
+                for entry in spec.methods:
+                    engine.get_protocol(entry.config.protocol)
+                    solvers.get_solver(entry.config.local_solver)
+                    if entry.config.compressor is not None:
+                        compress.get_compressor(entry.config.compressor)
+            except ValueError as e:
+                failures.append(f"{spec.name}: {e}")
+    for f in failures:
+        print(f, file=sys.stderr)
+    print(f"# spec round-trip: {count} spec(s), {len(failures)} failure(s)")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

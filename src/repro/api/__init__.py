@@ -10,7 +10,10 @@ Everything a caller needs lives here:
 * the :mod:`repro.core.compress` ``Compressor`` registry (re-exported) --
   the shared payload-compression extension point for both the simulator and
   the transformer exchange path;
-* preset spec builders for the paper's figures (:mod:`repro.api.presets`).
+* the :mod:`repro.core.delays` ``DelayModel`` registry (re-exported) -- the
+  pluggable worker-delay axis (``ClusterModel.delay_model``);
+* preset spec builders for the paper's figures plus the straggler-zoo
+  family (:mod:`repro.api.presets`).
 
 CLI: ``python -m repro run spec.json`` / ``python -m repro spec <preset>`` /
 ``python -m repro bench [--quick] [--only ...]``.
@@ -43,9 +46,21 @@ from repro.core.compress import (  # noqa: F401
     get_compressor,
     register_compressor,
 )
+from repro.core.delays import (  # noqa: F401
+    DelayModel,
+    available_delays,
+    get_delay,
+    register_delay,
+)
+from repro.core.solvers import (  # noqa: F401
+    available_solvers,
+    get_solver,
+    register_solver,
+)
 
 __all__ = [
     "Compressor",
+    "DelayModel",
     "EvalEvent",
     "Experiment",
     "ExperimentSpec",
@@ -58,9 +73,15 @@ __all__ = [
     "StopEvent",
     "SyncEvent",
     "available_compressors",
+    "available_delays",
     "available_problems",
+    "available_solvers",
     "build_preset",
     "build_problem",
     "get_compressor",
+    "get_delay",
+    "get_solver",
     "register_compressor",
+    "register_delay",
+    "register_solver",
 ]

@@ -25,8 +25,12 @@ def rcv1_spec(K: int = 4, seed: int = 7, d: int = 2048,
                                      "n_per_worker": n_per_worker})
 
 
-def cluster_model(K: int, sigma: float = 1.0, jitter: float = 0.0) -> ClusterModel:
-    return ClusterModel(num_workers=K, straggler_sigma=sigma, jitter=jitter)
+def cluster_model(K: int, sigma: float = 1.0, jitter: float = 0.0,
+                  delay: str = "constant",
+                  delay_params: dict | None = None) -> ClusterModel:
+    return ClusterModel(num_workers=K, straggler_sigma=sigma, jitter=jitter,
+                        delay_model=delay,
+                        delay_params=tuple((delay_params or {}).items()))
 
 
 def fig3(sigma: float = 10.0, quick: bool = False,
@@ -144,6 +148,62 @@ def quickstart(quick: bool = False,
         methods=methods, eval_every=4, seed=0, target_gap=target_gap)
 
 
+# -- the straggler-zoo preset family ----------------------------------------
+#
+# One spec per delay model, each running the full protocol zoo against it:
+# the "straggler-agnostic" claim as a stress grid instead of a single
+# hard-coded delay shape.  benchmarks/bench_straggler_zoo.py sweeps the whole
+# family into a protocol x delay JSON grid.
+
+ZOO_DELAYS: dict[str, dict] = {
+    "constant": {},
+    "shifted_exponential": {"tail_mean": 1.0},
+    "pareto": {"shape": 1.8, "scale": 0.5},
+    "markov": {"p_slow": 0.1, "p_recover": 0.25, "slow_factor": 8.0},
+    "bandwidth_coupled": {"link_slowdown": 20.0},
+}
+
+
+def straggler_zoo(delay: str = "pareto", quick: bool = False,
+                  target_gap: float | None = None) -> ExperimentSpec:
+    """Protocol zoo vs one delay model: every server discipline in the
+    registry against the named straggler behavior.
+
+    ``bandwidth_coupled`` zeroes the compute slowdown (the straggler is a
+    slow LINK, so the payload-byte coupling with the compressor is the only
+    handicap); every other model keeps the paper's sigma=5 compute straggler.
+    """
+    if delay not in ZOO_DELAYS:
+        raise ValueError(
+            f"unknown zoo delay {delay!r}; available: {tuple(sorted(ZOO_DELAYS))}")
+    K = 4
+    d = 512 if quick else 2048
+    H = 64 if quick else 256
+    sigma = 1.0 if delay == "bandwidth_coupled" else 5.0
+    methods = (
+        MethodEntry(baselines.cocoa_plus(K, H=H), 10 if quick else 60),
+        MethodEntry(baselines.acpd(K, d, B=2, T=10, rho_d=64, gamma=0.5, H=H),
+                    3 if quick else 12),
+        MethodEntry(baselines.acpd_adaptive(K, d, T=10, rho_d=64, gamma=0.5,
+                                            H=H, quantile=0.5),
+                    3 if quick else 12),
+        MethodEntry(baselines.acpd_lag(K, d, B=2, T=10, rho_d=64, gamma=0.5,
+                                       H=H), 3 if quick else 12),
+        MethodEntry(baselines.acpd_async(K, d, T=10, rho_d=64, gamma=0.5,
+                                         H=H), 10 if quick else 40),
+        MethodEntry(baselines.cocoa_v1(K, H=H), 10 if quick else 60),
+        MethodEntry(baselines.cocoa_plus_solver(K, H=H,
+                                                local_solver="accelerated"),
+                    10 if quick else 60),
+    )
+    return ExperimentSpec(
+        name=f"zoo-{delay}{'-quick' if quick else ''}",
+        problem=rcv1_spec(K=K, d=d),
+        cluster=cluster_model(K, sigma=sigma, delay=delay,
+                              delay_params=ZOO_DELAYS[delay]),
+        methods=methods, eval_every=2, seed=0, target_gap=target_gap)
+
+
 PRESETS = {
     "fig3": fig3,
     "fig4a": fig4a,
@@ -154,6 +214,11 @@ PRESETS = {
 # fig4b takes a required K; expose the paper's K values as named presets.
 for _K in (2, 4, 8):
     PRESETS[f"fig4b-K{_K}"] = (lambda K: lambda quick=False: fig4b(K, quick))(_K)
+# The straggler-zoo family: one preset per registered zoo delay model.
+for _delay in sorted(ZOO_DELAYS):
+    PRESETS[f"zoo-{_delay}"] = (
+        lambda dl: lambda quick=False, target_gap=None: straggler_zoo(
+            dl, quick=quick, target_gap=target_gap))(_delay)
 
 
 def build_preset(name: str, **kwargs) -> ExperimentSpec:

@@ -28,6 +28,8 @@ import heapq
 from typing import Iterator
 
 from repro.core import engine, objectives
+from repro.core import compress as compress_lib
+from repro.core import solvers as solvers_lib
 from repro.core.acpd import MethodConfig, RunRecord, RunResult
 from repro.core.simulate import ClusterModel
 
@@ -118,8 +120,15 @@ class Session:
             eval_mode = "stream"  # gap early-stop needs live certificates
         if eval_mode not in ("batched", "replay", "stream"):
             raise ValueError(f"unknown eval_mode {eval_mode!r}")
-        # Resolves the protocol up front: an unknown MethodConfig.protocol
-        # fails HERE with the registry listing, not deep inside the run.
+        # Resolve names the run might otherwise never (or only late) check:
+        # the sync protocols ignore the compressor at run time and only the
+        # CoCoA lineage resolves the local solver.  Protocol and delay-model
+        # names are covered by the construction below itself (Protocol
+        # __init__ calls cluster.make_delay()), all with the same
+        # registry-listing ValueError.
+        if method.compressor is not None:
+            compress_lib.get_compressor(method.compressor)
+        solvers_lib.get_solver(method.local_solver)
         self.proto = engine.get_protocol(method.protocol)(
             problem, method, cluster, seed=seed)
         self.problem = problem

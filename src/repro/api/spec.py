@@ -23,6 +23,9 @@ from repro.api.problems import ProblemSpec
 def _cluster_to_dict(c: ClusterModel) -> dict[str, Any]:
     d = dataclasses.asdict(c)
     d["straggler_workers"] = list(c.straggler_workers)
+    # Normalized (name, value) pairs -> a plain JSON object; ClusterModel's
+    # __post_init__ re-normalizes on the way back in.
+    d["delay_params"] = dict(c.delay_params)
     return d
 
 

@@ -58,10 +58,26 @@ class MethodConfig:
     # primal residual instead (our default, exact_dual_feedback=False).
     exact_dual_feedback: bool = False
     # LAG-style lazy aggregation (protocol="lag"): a worker skips its upload
-    # when ||F(dw)||^2 < lag_xi * ||its last catch-up reply||^2, i.e. when its
-    # contribution is negligible next to how much the global model is already
-    # moving without it (see engine.LagProtocol).
+    # when ||F(dw)||^2 < (lag_xi / lag_window) * sum of its last ``lag_window``
+    # catch-up-reply squared norms -- the paper-faithful D-round window of
+    # global model movement (Chen et al., arXiv:1805.09965, LAG-WK rule);
+    # lag_window=1 is the legacy single-reply test (see engine.LagProtocol).
     lag_xi: float = 1.0
+    lag_window: int = 10
+    # CoCoA-lineage protocols (protocol="cocoa"/"cocoa_plus"): which
+    # repro.core.solvers registry entry solves the local subproblem
+    # ("sdca", "importance", "accelerated").  The group family always runs
+    # SDCA (the paper's Alg. 2).
+    local_solver: str = "sdca"
+    # Adaptive group sizing (protocol="adaptive_b"): B_t = the number of
+    # workers whose EWMA round latency falls at or below the
+    # ``adaptive_quantile`` quantile of all workers' EWMAs (floored at
+    # ``b_min``, capped at K); ``adaptive_ewma`` is the EWMA step.  ``B``
+    # only seeds the first rounds, before one latency sample per worker
+    # exists (see engine.AdaptiveBProtocol).
+    adaptive_quantile: float = 0.5
+    adaptive_ewma: float = 0.25
+    b_min: int = 1
 
     def resolved_sigma_prime(self, K: int) -> float:
         """sigma' when unset: delegated to the protocol registry entry.

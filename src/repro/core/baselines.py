@@ -66,12 +66,40 @@ def acpd_async(K: int, d: int, *, T: int = 20, rho_d: int = 1000,
 
 def acpd_lag(K: int, d: int, *, B: int | None = None, T: int = 20,
              rho_d: int = 1000, gamma: float = 0.5, H: int = 1000,
-             lag_xi: float = 1.0) -> MethodConfig:
+             lag_xi: float = 1.0, lag_window: int = 10) -> MethodConfig:
     """LAG-style lazy uploads on top of the group protocol (engine.LagProtocol)."""
     B = B if B is not None else max(1, K // 2)
     return MethodConfig(name="ACPD-LAG", protocol="lag", B=B, T=T,
                         rho=min(1.0, rho_d / d), gamma=gamma, H=H,
-                        lag_xi=lag_xi)
+                        lag_xi=lag_xi, lag_window=lag_window)
+
+
+def cocoa_v1(K: int, H: int = 1000, local_solver: str = "sdca") -> MethodConfig:
+    """CoCoA with averaging aggregation (gamma=1/K, sigma'=1) on the
+    pluggable-solver ``cocoa`` protocol (engine.CocoaProtocol)."""
+    return MethodConfig(name=f"CoCoA[{local_solver}]", protocol="cocoa",
+                        B=K, rho=1.0, gamma=1.0 / K, H=H,
+                        local_solver=local_solver)
+
+
+def cocoa_plus_solver(K: int, H: int = 1000, gamma: float = 1.0,
+                      local_solver: str = "sdca") -> MethodConfig:
+    """CoCoA+ adding aggregation (sigma'=gamma*K) with a registry-chosen
+    local solver (engine.CocoaPlusProtocol)."""
+    return MethodConfig(name=f"CoCoA+[{local_solver}]", protocol="cocoa_plus",
+                        B=K, rho=1.0, gamma=gamma, H=H,
+                        local_solver=local_solver)
+
+
+def acpd_adaptive(K: int, d: int, *, T: int = 20, rho_d: int = 1000,
+                  gamma: float = 0.5, H: int = 1000, quantile: float = 0.5,
+                  b_min: int = 1) -> MethodConfig:
+    """Adaptive group sizing: B learned from observed arrival latencies
+    (engine.AdaptiveBProtocol); B seeds the pre-observation rounds only."""
+    return MethodConfig(name="ACPD-adaptiveB", protocol="adaptive_b",
+                        B=max(1, K // 2), T=T, rho=min(1.0, rho_d / d),
+                        gamma=gamma, H=H, adaptive_quantile=quantile,
+                        b_min=b_min)
 
 
 ALL_PRESETS = {
@@ -83,4 +111,7 @@ ALL_PRESETS = {
     "acpd_dense": acpd_dense,
     "acpd_async": acpd_async,
     "acpd_lag": acpd_lag,
+    "cocoa_v1": cocoa_v1,
+    "cocoa_plus_solver": cocoa_plus_solver,
+    "acpd_adaptive": acpd_adaptive,
 }

@@ -14,7 +14,16 @@ supplies the three rules the paper's Algorithm 1 fixes ad hoc:
 
 Protocols are registry entries (:func:`register_protocol`), so new server
 disciplines -- e.g. LAG-style lazy aggregation (Chen et al., arXiv:1805.09965)
--- are ~50-line configs instead of forks of the loop.
+-- are ~50-line configs instead of forks of the loop.  Shipped entries:
+``group``/``sync`` (the paper's disciplines, bit-for-bit pinned), ``async``,
+``lag`` (D-window lazy uploads), ``cocoa``/``cocoa_plus`` (CoCoA lineage,
+arXiv:1409.1458, pluggable :mod:`repro.core.solvers` local solver) and
+``adaptive_b`` (group size learned from arrival quantiles).  Worker timing is
+itself pluggable: protocols draw compute/message delays from the
+:mod:`repro.core.delays` registry via ``ClusterModel.delay_model``, so every
+protocol x delay x compressor scenario is one declarative spec.  The
+extension walkthrough lives in ``docs/extending-protocols.md``; the contract
+every subclass implements is documented on :class:`Protocol`.
 
 Performance contract vs the reference loops in :mod:`repro.core.acpd`:
 
@@ -37,7 +46,9 @@ reduction; ``tests/test_engine.py`` pins bit-for-bit equality of the
 
 from __future__ import annotations
 
+import collections
 import dataclasses
+import math
 from functools import partial
 from typing import Iterable
 
@@ -232,6 +243,25 @@ def _sync_round_fused(key, w, alpha, X, y, norms_sq, lam, n, sigma_p, gamma, *,
     return key, w, alpha
 
 
+# Like _sync_round_fused but with the local solver as a static argument: the
+# CoCoA lineage runs any repro.core.solvers registry entry, vmapped over the
+# worker axis, in one donated dispatch.
+@partial(jax.jit, static_argnames=("loss", "num_steps", "solver"),
+         donate_argnums=(0,))
+def _cocoa_round_fused(key, w, alpha, X, y, norms_sq, lam, n, sigma_p, gamma,
+                       *, loss, num_steps, solver):
+    K = X.shape[0]
+    key, sub = jax.random.split(key)
+    keys = jax.random.split(sub, K)
+    w_all = jnp.broadcast_to(w, (K, w.shape[0]))
+    fn = partial(solver, loss=loss, num_steps=num_steps)
+    dalpha, v = jax.vmap(fn, in_axes=(0, 0, 0, 0, 0, None, None, None, 0))(
+        w_all, alpha, X, y, norms_sq, lam, n, sigma_p, keys)
+    alpha = alpha + gamma * dalpha
+    w = w + gamma * jnp.sum(v, axis=0)
+    return key, w, alpha
+
+
 @partial(jax.jit, static_argnames=("loss",))
 def _eval_batched(ws, alphas, X, y, lam, *, loss):
     """All deferred gap certificates in one dispatch.
@@ -259,7 +289,72 @@ def _eval_batched(ws, alphas, X, y, lam, *, loss):
 
 
 class Protocol:
-    """Arrival + aggregation + reply rules driving the engine's event loop."""
+    """Arrival + aggregation + reply rules driving the engine's event loop.
+
+    A *protocol* is one server discipline: it decides how many worker
+    messages a round waits for, how arrived payloads enter the server state,
+    and what (and when) each worker hears back.  Subclass, decorate with
+    :func:`register_protocol`, and the entry becomes constructible from any
+    ``MethodConfig.protocol`` string -- inheriting engine fusion, deferred
+    gap evaluation, the streaming :class:`repro.api.session.Session` loop,
+    and the bit-for-bit regression harness (tests/test_engine.py) for free.
+    ``docs/extending-protocols.md`` is the worked walkthrough.
+
+    **Classmethod contract** (consulted before an instance exists):
+
+    ``default_sigma_prime(method, K)``
+        The subproblem safety parameter sigma' used when
+        ``MethodConfig.sigma_prime`` is ``None``.  sigma' scales the
+        quadratic penalty of the local subproblem (Eq. 7-8) and must upper
+        bound the aggregation overlap: gamma * B for B-of-K group
+        aggregation (the paper's rule), gamma * K for "adding" CoCoA+
+        aggregation, 1 for "averaging" CoCoA aggregation.  Protocol-owned so
+        registry entries supply a *correct* default instead of growing
+        string checks in the config dataclass -- an unsafe sigma' diverges,
+        an over-conservative one merely converges slowly.
+
+    **Instance hooks, in the order the Session loop calls them:**
+
+    ``num_rounds(num_outer)``
+        Total server rounds for a ``num_outer`` budget (``num_outer * T``
+        for the T-periodic group family, ``num_outer`` for lockstep rounds).
+
+    ``initial_messages()``
+        Launch every worker's first local round; returns the Messages that
+        seed the arrival queue.  Each Message's ``arrival`` is the simulated
+        time the server would receive it.
+
+    ``arrivals_needed(round_index)``
+        How many queued messages round ``round_index`` waits for -- the
+        *arrival rule* (B, K, 1, or anything state-dependent; it is re-read
+        every round, so adaptive disciplines just return fresh state).
+
+    ``is_sync_round(round_index)``
+        True when the round is a full-K barrier; the Session emits a
+        :class:`repro.api.session.SyncEvent` after processing it.
+
+    ``process_round(round_index, arrived)``
+        The *aggregation + reply* rules: fold the arrived payloads into
+        server state, bill reply bytes/time, advance ``self.sim_time``, and
+        return the next wave of in-flight Messages (usually one relaunch per
+        arrived worker).  Accounting invariant: ``bytes_up``/``bytes_down``/
+        ``compute_time``/``comm_time`` are cumulative totals and
+        ``sim_time`` is monotone.
+
+    ``snapshot(iteration)``
+        Capture (device arrays allowed, no host sync required) whatever a
+        deferred duality-gap evaluation needs -- called at eval boundaries.
+
+    ``finalize(records)``
+        Fold the finished run into a :class:`RunResult`.
+
+    Timing comes from ``self.delay`` -- a fresh
+    :class:`repro.core.delays.DelayModel` per run (so stateful models like
+    ``markov`` never leak across runs), resolved from
+    ``ClusterModel.delay_model``.  Host randomness comes from ``self.rng``
+    and device randomness from ``self.key``; both are seeded from the run's
+    single ``seed`` so a (spec, seed) pair reproduces the trajectory.
+    """
 
     protocol_name = "abstract"
 
@@ -278,6 +373,7 @@ class Protocol:
         self.problem = problem
         self.method = method
         self.cluster = cluster
+        self.delay = cluster.make_delay()  # fresh per run; may be stateful
         self.K, self.n_k, self.d = problem.X.shape
         self.n = self.K * self.n_k
         self.sigma_p = method.resolved_sigma_prime(self.K)
@@ -290,7 +386,7 @@ class Protocol:
         self.sim_time = 0.0
         self.seq = 0
 
-    # --- hooks the engine loop calls -------------------------------------
+    # --- hooks the engine loop calls (contract in the class docstring) ----
 
     def num_rounds(self, num_outer: int) -> int:
         raise NotImplementedError
@@ -364,8 +460,8 @@ class GroupProtocol(Protocol):
             num_steps=m.H, comp=self.comp)
         self.alpha[k] = alpha_new
         self.residual[k] = residual_new
-        duration = self.cluster.compute_time(k, m.H, self.rng)
-        up_time = self.cluster.p2p_time(self.up_bytes)
+        duration = self.delay.compute_time(k, m.H, self.rng)
+        up_time = self.delay.p2p_time(self.up_bytes, k)
         self.compute_time += duration
         self.comm_time += up_time
         self.bytes_up += self.up_bytes
@@ -389,12 +485,12 @@ class GroupProtocol(Protocol):
         nnz_host = None if self.dense else np.asarray(reply_nnz)
         return server_time, nnz_host
 
-    def _account_reply(self, j, server_time, nnz_host) -> float:
+    def _account_reply(self, j, worker, server_time, nnz_host) -> float:
         """Bill the catch-up reply; returns the worker's next start time."""
         rbytes = (msg_filter.dense_bytes(self.d) if self.dense
                   else msg_filter.message_bytes(int(nnz_host[j])))
         self.bytes_down += rbytes
-        down_time = self.cluster.p2p_time(rbytes)
+        down_time = self.delay.p2p_time(rbytes, worker)
         self.comm_time += down_time
         return server_time + down_time
 
@@ -404,7 +500,7 @@ class GroupProtocol(Protocol):
         # reference's float accumulation order exactly (down, up, down, up).
         out = []
         for j, m in enumerate(arrived):
-            start = self._account_reply(j, server_time, nnz_host)
+            start = self._account_reply(j, m.worker, server_time, nnz_host)
             out.append(self._launch_worker(m.worker, start))
         self.sim_time = server_time
         return out
@@ -444,26 +540,62 @@ class AsyncProtocol(GroupProtocol):
 class LagProtocol(GroupProtocol):
     """Group protocol + LAG-style lazy uploads (arXiv:1805.09965 adapted).
 
-    Workers whose filtered delta carries little mass relative to their last
-    catch-up reply (their freshest view of global model movement) send an
-    8-byte heartbeat instead of the payload and keep the mass in the
-    residual. The server treats heartbeats as arrivals (the worker is alive
-    and gets its catch-up reply) but applies nothing for them.
+    LAG's worker-side rule (LAG-WK) reuses the previous gradient -- i.e.
+    uploads nothing -- when the new gradient differs from the last
+    communicated one by less than a windowed average of recent global model
+    movement: ``||grad change||^2 <= (xi / D) * sum_{d'=1..D}
+    ||theta_{t+1-d'} - theta_{t-d'}||^2``.  Two translations to this
+    delta-coded primal-dual setting:
+
+    * the upload *is already a delta* (``F(dw)``: the change since the
+      worker's last applied contribution), so "gradient unchanged -> reuse"
+      becomes "delta negligible -> send nothing"; the skipped mass stays in
+      the error-feedback residual, making laziness lossless, only late;
+    * the worker's freshest view of global model movement is its stream of
+      catch-up replies (``dw_tilde``: exactly the model change it missed),
+      so the RHS window averages the squared norms of its last
+      ``lag_window`` replies -- the paper's D-round window (D=10 in their
+      experiments), replacing the cruder single-last-reply test this
+      protocol used previously (``lag_window=1`` restores it).
+
+    A skipping worker sends an 8-byte heartbeat instead of the payload.  The
+    server treats heartbeats as arrivals (the worker is alive and gets its
+    catch-up reply) but applies nothing for them.  Since replies shrink as
+    the system converges, the test stays calibrated: all-quiet -> replies
+    ~ 0 -> uploads resume, no starvation.
     """
 
     HEARTBEAT_BYTES = 8
 
     def __init__(self, problem, method, cluster, *, seed):
+        if method.lag_window < 1:
+            raise ValueError(
+                f"lag_window must be >= 1, got {method.lag_window}")
         super().__init__(problem, method, cluster, seed=seed)
-        # ||last catch-up reply||^2 per worker; 0 => first round always uploads.
-        self.ref = [jnp.zeros((), problem.X.dtype) for _ in range(self.K)]
+        # Rolling window of catch-up-reply squared norms per worker (device
+        # scalars); empty window => ref 0 => the first rounds always upload.
+        self._ref_hist = [
+            collections.deque(maxlen=method.lag_window) for _ in range(self.K)]
+        self._zero = jnp.zeros((), problem.X.dtype)
+
+    def _ref(self, k: int):
+        """Windowed mean of worker k's recent reply energy (device scalar).
+
+        Summed afresh over the (<= lag_window) window: an incremental
+        running sum in f32 accumulates catastrophic cancellation once reply
+        norms decay orders of magnitude below the popped early entries.
+        """
+        hist = self._ref_hist[k]
+        if not hist:
+            return self._zero
+        return jnp.sum(jnp.stack(tuple(hist))) / len(hist)
 
     def _launch_lag(self, k: int, start_time: float):
         """Fused round; returns (device skip flag, message-parts tuple)."""
         m = self.method
         self.key, alpha_new, residual_new, sent, skip = _worker_round_lag(
             self.key, self.w_local, self.alpha[k], self.residual[k],
-            self.ref[k], self.X_k[k], self.y_k[k], self.norms_k[k], k,
+            self._ref(k), self.X_k[k], self.y_k[k], self.norms_k[k], k,
             self.problem.lam, self.n, self.sigma_p, m.gamma, m.lag_xi,
             loss=self.problem.loss, num_steps=m.H, comp=self.comp)
         self.alpha[k] = alpha_new
@@ -473,8 +605,8 @@ class LagProtocol(GroupProtocol):
     def _finish_launch(self, skipped: bool, parts) -> Message:
         k, start_time, sent, alpha_new = parts
         nbytes = self.HEARTBEAT_BYTES if skipped else self.up_bytes
-        duration = self.cluster.compute_time(k, self.method.H, self.rng)
-        up_time = self.cluster.p2p_time(nbytes)
+        duration = self.delay.compute_time(k, self.method.H, self.rng)
+        up_time = self.delay.p2p_time(nbytes, k)
         self.compute_time += duration
         self.comm_time += up_time
         self.bytes_up += nbytes
@@ -496,11 +628,12 @@ class LagProtocol(GroupProtocol):
         server_time, nnz_host = self._apply_server(arrived)
         starts = []
         for j, m in enumerate(arrived):
-            # Refresh the laziness reference from this round's reply (device
-            # slice, no host sync).
-            self.ref[m.worker] = self._last_reply_sq[j]
-            starts.append((m.worker,
-                           self._account_reply(j, server_time, nnz_host)))
+            # Slide this round's reply energy into the worker's window
+            # (a device slice, no host sync; maxlen evicts the oldest).
+            k = m.worker
+            self._ref_hist[k].append(self._last_reply_sq[j])
+            starts.append((k, self._account_reply(j, k, server_time,
+                                                  nnz_host)))
         self.sim_time = server_time
         return self._relaunch_batched(starts)
 
@@ -545,15 +678,21 @@ class SyncProtocol(Protocol):
     def arrivals_needed(self, round_index: int) -> int:
         return self.K
 
-    def process_round(self, round_index, arrived):
+    def _round_update(self):
+        """One fused lockstep update; CoCoA-lineage subclasses override to
+        swap the local solver while inheriting timing/byte accounting."""
         m = self.method
         self.key, self.w, self.alpha = _sync_round_fused(
             self.key, self.w, self.alpha, self.problem.X, self.problem.y,
             self.norms_sq, self.problem.lam, self.n, self.sigma_p, m.gamma,
             loss=self.problem.loss, num_steps=m.H)
-        step_compute = max(self.cluster.compute_time(k, m.H, self.rng)
+
+    def process_round(self, round_index, arrived):
+        m = self.method
+        self._round_update()
+        step_compute = max(self.delay.compute_time(k, m.H, self.rng)
                            for k in range(self.K))
-        step_comm = self.cluster.allreduce_time(self.d)
+        step_comm = self.delay.allreduce_time(self.d)
         self.sim_time += step_compute + step_comm
         self.compute_time += step_compute
         self.comm_time += step_comm
@@ -570,6 +709,149 @@ class SyncProtocol(Protocol):
     def finalize(self, records):
         return RunResult(self.method, records, np.asarray(self.w),
                          np.asarray(self.alpha))
+
+
+@register_protocol("cocoa")
+class CocoaProtocol(SyncProtocol):
+    """CoCoA v1 (Jaggi et al., arXiv:1409.1458): synchronous rounds,
+    "averaging" aggregation, pluggable local solver.
+
+    The CoCoA framework's point is that ANY local subproblem solver reaching
+    a Theta-approximate solution plugs into the same aggregation; here the
+    solver comes from the :mod:`repro.core.solvers` registry via
+    ``MethodConfig.local_solver`` (``sdca`` | ``importance`` |
+    ``accelerated``) instead of being hard-wired SDCA.  ``gamma`` is the
+    aggregation parameter: CoCoA's averaging uses ``gamma = 1/K`` (the
+    :func:`repro.core.baselines.cocoa_v1` preset), for which ``sigma' = 1``
+    is the safe subproblem scaling.  Timing/byte accounting is inherited
+    from the lockstep ``sync`` discipline (MPI-style ring allreduce).
+    """
+
+    @classmethod
+    def default_sigma_prime(cls, method: MethodConfig, K: int) -> float:
+        # "Averaging" aggregation (Jaggi et al. 2014): safe for gamma <= 1/K.
+        return 1.0
+
+    def __init__(self, problem, method, cluster, *, seed):
+        # Averaging is only safe for gamma <= 1/K (sigma'=1 does not damp a
+        # larger aggregate; it visibly diverges).  Only the "cocoa" entry
+        # enforces this -- CocoaPlusProtocol inherits with its own sigma'.
+        # An explicit MethodConfig.sigma_prime overrides at the user's risk.
+        K = problem.X.shape[0]
+        if (self.protocol_name == "cocoa" and method.sigma_prime is None
+                and method.gamma > 1.0 / K + 1e-9):
+            raise ValueError(
+                f"protocol 'cocoa' uses averaging aggregation (sigma'=1), "
+                f"which is only safe for gamma <= 1/K; got gamma="
+                f"{method.gamma} with K={K}. Use baselines.cocoa_v1, "
+                f"protocol='cocoa_plus' for adding aggregation, or set "
+                f"sigma_prime explicitly.")
+        super().__init__(problem, method, cluster, seed=seed)
+        from repro.core import solvers as solvers_lib
+
+        self.solver = solvers_lib.get_solver(method.local_solver)
+
+    def _round_update(self):
+        m = self.method
+        self.key, self.w, self.alpha = _cocoa_round_fused(
+            self.key, self.w, self.alpha, self.problem.X, self.problem.y,
+            self.norms_sq, self.problem.lam, self.n, self.sigma_p, m.gamma,
+            loss=self.problem.loss, num_steps=m.H, solver=self.solver)
+
+
+@register_protocol("cocoa_plus")
+class CocoaPlusProtocol(CocoaProtocol):
+    """CoCoA+ (Ma et al. 2015): "adding" aggregation, pluggable local solver.
+
+    Same lockstep round as :class:`CocoaProtocol` but with the adding
+    aggregation's safe subproblem scaling ``sigma' = gamma * K`` (gamma = 1
+    recovers the paper's CoCoA+ baseline, which the hard-wired ``sync``
+    protocol pins bit-for-bit; this entry exists for the pluggable-solver
+    axis).
+    """
+
+    @classmethod
+    def default_sigma_prime(cls, method: MethodConfig, K: int) -> float:
+        return method.gamma * K
+
+
+@register_protocol("adaptive_b")
+class AdaptiveBProtocol(GroupProtocol):
+    """Group protocol with the group size B adapted to observed arrivals.
+
+    The paper fixes B ahead of time, but the right B depends on delay
+    behavior the operator rarely knows (how many workers are persistently
+    late?).  This discipline learns it online: it keeps an EWMA of each
+    worker's round latency (launch -> arrival, exactly what a real server
+    observes) and waits each round for the workers in the fast
+    ``adaptive_quantile`` of that latency distribution::
+
+        B_t = clip(#{k : ewma_k <= quantile_q(ewma)}, b_min, ceil(q * K))
+
+    The upper clip matters: ``ceil(q * K)`` is the aggregation size
+    ``default_sigma_prime`` covers, and under tied latencies (a homogeneous
+    cluster) the raw count alone reaches K and out-runs sigma' -- which
+    diverges, not errors.  Heavy-tailed or bursty delay models (``pareto``,
+    ``markov``) shrink B_t automatically while the tail is hot and relax it
+    when stragglers recover; under homogeneous delays it settles at
+    ``ceil(q * K)``.  The
+    T-periodic full barrier is kept, so the staleness bound (Assumption 3)
+    still holds.  ``MethodConfig.B`` only seeds the first rounds, before one
+    latency sample per worker exists.
+
+    This class is also the worked example of ``docs/extending-protocols.md``.
+    """
+
+    @classmethod
+    def default_sigma_prime(cls, method: MethodConfig, K: int) -> float:
+        # sigma' must cover the aggregation size the discipline targets:
+        # about quantile * K arrivals per round (the paper's gamma * B rule
+        # with the adapted B's expected value).
+        target_b = max(method.b_min, math.ceil(method.adaptive_quantile * K))
+        return method.gamma * target_b
+
+    def __init__(self, problem, method, cluster, *, seed):
+        if not 0.0 < method.adaptive_quantile <= 1.0:
+            raise ValueError(
+                f"adaptive_quantile must be in (0, 1], got "
+                f"{method.adaptive_quantile}")
+        if not 0.0 < method.adaptive_ewma <= 1.0:
+            raise ValueError(
+                f"adaptive_ewma must be in (0, 1], got {method.adaptive_ewma}")
+        super().__init__(problem, method, cluster, seed=seed)
+        self._latency = np.full(self.K, np.nan)  # EWMA round latency
+        # The adapted B lives in [b_min, ceil(q*K)]: the upper end is the
+        # aggregation size the default sigma' covers (see classmethod above).
+        self._b_lo = max(1, method.b_min)
+        self._b_hi = min(self.K, max(self._b_lo,
+                                     math.ceil(method.adaptive_quantile
+                                               * self.K)))
+        self._B = int(np.clip(method.B, self._b_lo, self._b_hi))
+
+    @property
+    def current_b(self) -> int:
+        """The group size the next non-barrier round will wait for."""
+        return self._B
+
+    def arrivals_needed(self, round_index: int) -> int:
+        T = self.method.T
+        if round_index % T == T - 1:
+            return self.K  # the staleness-bounding full barrier stays
+        return self._B
+
+    def _launch_worker(self, k, start_time):
+        msg = super()._launch_worker(k, start_time)
+        latency = msg.arrival - start_time
+        beta = self.method.adaptive_ewma
+        if np.isnan(self._latency[k]):
+            self._latency[k] = latency
+        else:
+            self._latency[k] = (1.0 - beta) * self._latency[k] + beta * latency
+        if not np.isnan(self._latency).any():
+            cut = np.quantile(self._latency, self.method.adaptive_quantile)
+            self._B = int(np.clip(int(np.sum(self._latency <= cut)),
+                                  self._b_lo, self._b_hi))
+        return msg
 
 
 # ---------------------------------------------------------------------------

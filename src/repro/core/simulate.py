@@ -18,14 +18,27 @@ claims (speedup of ACPD over CoCoA+ at a given duality gap).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
+from typing import Mapping
 
 import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)
 class ClusterModel:
-    """Timing model for K workers + a server."""
+    """Timing model for K workers + a server.
+
+    ``delay_model`` names an entry in the :mod:`repro.core.delays` registry
+    (``constant`` reproduces the historical behavior bit-for-bit);
+    ``delay_params`` are that model's keyword arguments, normalized to a
+    sorted tuple of ``(name, value)`` pairs so the dataclass stays hashable
+    and JSON specs round-trip to equal objects.  Protocol engines call
+    :meth:`make_delay` for a FRESH model per run (required for stateful
+    models like ``markov``); the ``compute_time``/``p2p_time`` methods below
+    delegate to one lazily-cached instance for back-compat callers (the
+    reference loops in :mod:`repro.core.acpd`).
+    """
 
     num_workers: int
     unit_time: float = 1e-5  # seconds per local SDCA iteration on a normal worker
@@ -34,6 +47,16 @@ class ClusterModel:
     jitter: float = 0.0  # lognormal sd of multiplicative compute noise
     latency: float = 1e-3  # per-message latency (seconds)
     bandwidth: float = 1.25e8  # bytes/sec (~1 Gb Ethernet, t2.medium-ish)
+    delay_model: str = "constant"  # repro.core.delays registry entry
+    delay_params: tuple = ()  # model kwargs as (name, value) pairs (or a dict)
+
+    def __post_init__(self):
+        params = self.delay_params
+        if isinstance(params, Mapping):
+            params = params.items()
+        object.__setattr__(
+            self, "delay_params",
+            tuple(sorted((str(k), v) for k, v in params)))
 
     def sigmas(self) -> np.ndarray:
         s = np.ones(self.num_workers)
@@ -42,14 +65,44 @@ class ClusterModel:
                 s[k] = self.straggler_sigma
         return s
 
+    def make_delay(self):
+        """A fresh :class:`repro.core.delays.DelayModel` for one run."""
+        from repro.core import delays
+
+        return delays.get_delay(self.delay_model)(
+            self, **dict(self.delay_params))
+
+    @functools.cached_property
+    def _delay(self):
+        """Lazily-cached model backing the legacy method API below.
+
+        Stateless models only: a cached stateful model (``markov``) would
+        silently leak chain state across runs sharing this ClusterModel, so
+        it is refused here -- callers needing one go through
+        :meth:`make_delay` per run (the engine protocols do; the reference
+        loops in :mod:`repro.core.acpd` support stateless models only).
+        """
+        model = self.make_delay()
+        if model.stateful:
+            raise ValueError(
+                f"delay model {self.delay_model!r} is stateful; the legacy "
+                f"ClusterModel.compute_time/p2p_time delegation would share "
+                f"its state across runs. Use ClusterModel.make_delay() per "
+                f"run (engine protocols do this automatically).")
+        if model.worker_aware:
+            raise ValueError(
+                f"delay model {self.delay_model!r} times messages per "
+                f"worker; the legacy ClusterModel.p2p_time signature cannot "
+                f"carry the worker index and would silently time every "
+                f"worker on the fast link. Use ClusterModel.make_delay() "
+                f"(engine protocols do this automatically).")
+        return model
+
     def compute_time(self, k: int, H: int, rng: np.random.Generator) -> float:
-        base = H * self.unit_time * self.sigmas()[k]
-        if self.jitter > 0.0:
-            base *= float(rng.lognormal(0.0, self.jitter))
-        return base
+        return self._delay.compute_time(k, H, rng)
 
     def p2p_time(self, num_bytes: int) -> float:
-        return self.latency + num_bytes / self.bandwidth
+        return self._delay.p2p_time(num_bytes)
 
     def allreduce_time(self, d: int, value_bytes: int = 4) -> float:
         K = self.num_workers

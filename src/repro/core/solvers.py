@@ -24,7 +24,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.objectives import LossName
-from repro.core.sdca import LocalSolveResult, solve_subproblem_indices
+from repro.core.sdca import (LocalSolveResult, solve_subproblem,
+                             solve_subproblem_indices)
 
 
 @partial(jax.jit, static_argnames=("loss", "num_steps"))
@@ -90,3 +91,54 @@ def solve_subproblem_accelerated(
     init = (jnp.zeros_like(alpha), jnp.zeros_like(alpha), jnp.zeros_like(w_eff))
     (_, dalpha, v), _ = jax.lax.scan(round_body, init, keys)
     return LocalSolveResult(dalpha, v)
+
+
+# ---------------------------------------------------------------------------
+# Local-solver registry.
+#
+# The CoCoA-lineage protocols in repro.core.engine (protocol="cocoa" /
+# "cocoa_plus") draw their per-worker subproblem solver from here via
+# ``MethodConfig.local_solver`` instead of hard-wiring SDCA, which is exactly
+# the freedom the CoCoA framework (Jaggi et al., arXiv:1409.1458) advertises:
+# any local solver achieving a Theta-approximate subproblem solution plugs
+# into the same aggregation.  Every entry shares one signature:
+#
+#     solver(w_eff, alpha, X, y, norms_sq, lam, n_global, sigma_prime, key,
+#            *, loss, num_steps) -> LocalSolveResult
+#
+# so protocols can vmap an entry across the worker axis unchanged.
+# ---------------------------------------------------------------------------
+
+_SOLVERS = {}
+
+
+def register_solver(name: str):
+    """Decorator (usable as a plain call too): add a local solver under
+    ``name`` -- same extension pattern as the protocol/compressor/delay
+    registries."""
+
+    def deco(fn):
+        _SOLVERS[name] = fn
+        return fn
+
+    return deco
+
+
+register_solver("sdca")(solve_subproblem)
+register_solver("importance")(solve_subproblem_importance)
+register_solver("accelerated")(solve_subproblem_accelerated)
+
+
+def available_solvers() -> tuple[str, ...]:
+    return tuple(sorted(_SOLVERS))
+
+
+def get_solver(name: str):
+    """Resolve a ``MethodConfig.local_solver`` name; ValueError lists the
+    registry on a miss (same error contract as protocols/compressors)."""
+    try:
+        return _SOLVERS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown local solver {name!r}; available: {available_solvers()}"
+        ) from None

@@ -1,0 +1,255 @@
+"""Delay-model registry: distribution-shape sanity (seeded), legacy
+equivalence of the default ``constant`` model, byte-coupled billing
+agreement with the compressor formula, and spec threading."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import compress as compress_lib
+from repro.core import delays
+from repro.core.simulate import ClusterModel
+
+K = 4
+
+
+def _cluster(**kw):
+    return ClusterModel(num_workers=K, **kw)
+
+
+def _samples(model, n, *, k=1, H=100, seed=0):
+    rng = np.random.default_rng(seed)
+    return np.asarray([model.compute_time(k, H, rng) for _ in range(n)])
+
+
+# ---------------------------------------------------------------------------
+# Registry mechanics.
+# ---------------------------------------------------------------------------
+
+
+def test_registry_contents_and_errors():
+    names = delays.available_delays()
+    for expected in ("constant", "shifted_exponential", "pareto", "markov",
+                     "bandwidth_coupled"):
+        assert expected in names
+    with pytest.raises(ValueError, match="unknown delay model"):
+        delays.get_delay("nope")
+    with pytest.raises(ValueError, match="unknown delay model"):
+        _cluster(delay_model="nope").make_delay()
+
+
+def test_bad_params_fail_at_construction():
+    with pytest.raises(TypeError):
+        _cluster(delay_model="pareto",
+                 delay_params={"not_a_param": 1.0}).make_delay()
+    with pytest.raises(ValueError, match="shape"):
+        _cluster(delay_model="pareto", delay_params={"shape": -1}).make_delay()
+    with pytest.raises(ValueError, match="p_slow"):
+        _cluster(delay_model="markov", delay_params={"p_slow": 2}).make_delay()
+    with pytest.raises(ValueError, match="slow_factor"):
+        _cluster(delay_model="markov",
+                 delay_params={"slow_factor": -8.0}).make_delay()
+
+
+def test_delay_params_normalize_and_hash():
+    a = _cluster(delay_model="pareto", delay_params={"shape": 2.0, "scale": 0.5})
+    b = _cluster(delay_model="pareto",
+                 delay_params=(("scale", 0.5), ("shape", 2.0)))
+    assert a == b
+    assert hash(a) == hash(b)  # stays usable as a dict key / static arg
+
+
+# ---------------------------------------------------------------------------
+# The constant model IS the legacy ClusterModel behavior.
+# ---------------------------------------------------------------------------
+
+
+def test_constant_matches_legacy_formula():
+    c = _cluster(straggler_sigma=3.0, unit_time=2e-5)
+    rng = np.random.default_rng(0)
+    assert c.compute_time(0, 100, rng) == 100 * 2e-5 * 3.0  # straggler
+    assert c.compute_time(1, 100, rng) == 100 * 2e-5  # normal worker
+    assert c.p2p_time(1000) == c.latency + 1000 / c.bandwidth
+
+
+def test_constant_jitter_draw_order_matches_legacy():
+    """With jitter, the model must consume exactly one lognormal per call
+    (the bit-for-bit engine pins depend on the host-RNG draw order)."""
+    c = _cluster(jitter=0.4)
+    got = _samples(c.make_delay(), 5, seed=9)
+    rng = np.random.default_rng(9)
+    want = np.asarray(
+        [100 * c.unit_time * float(rng.lognormal(0.0, 0.4)) for _ in range(5)])
+    np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# Distribution shapes (seeded quantile checks).
+# ---------------------------------------------------------------------------
+
+
+def test_shifted_exponential_floor_and_mean():
+    c = _cluster(delay_model="shifted_exponential",
+                 delay_params={"tail_mean": 0.5})
+    base = 100 * c.unit_time
+    s = _samples(c.make_delay(), 4000)
+    assert s.min() >= base  # the shift: never faster than the base
+    np.testing.assert_allclose(s.mean(), base * 1.5, rtol=0.1)
+
+
+def test_pareto_tail_heavier_than_exponential():
+    """Matched medians, then compare tail ratios: the q99/q50 ratio of the
+    Pareto model must dominate the shifted-exponential's."""
+    pareto = _cluster(delay_model="pareto",
+                      delay_params={"shape": 1.5, "scale": 0.5}).make_delay()
+    expo = _cluster(delay_model="shifted_exponential",
+                    delay_params={"tail_mean": 0.5}).make_delay()
+    sp, se = _samples(pareto, 4000), _samples(expo, 4000)
+    ratio_p = np.quantile(sp, 0.99) / np.quantile(sp, 0.5)
+    ratio_e = np.quantile(se, 0.99) / np.quantile(se, 0.5)
+    assert ratio_p > ratio_e, (ratio_p, ratio_e)
+
+
+def test_markov_burstiness_and_stationary_fraction():
+    p_slow, p_recover, factor = 0.1, 0.25, 8.0
+    c = _cluster(delay_model="markov",
+                 delay_params={"p_slow": p_slow, "p_recover": p_recover,
+                               "slow_factor": factor})
+    model = c.make_delay()
+    s = _samples(model, 20000)
+    base = 100 * c.unit_time
+    slow = s > 2 * base  # only two levels exist: base and factor*base
+    np.testing.assert_array_equal(np.unique(np.round(s / base, 6)),
+                                  [1.0, factor])
+    # Stationary slow fraction p_slow/(p_slow+p_recover) = 2/7.
+    np.testing.assert_allclose(slow.mean(), p_slow / (p_slow + p_recover),
+                               atol=0.03)
+    # Burstiness: mean run length of slow stretches ~ 1/p_recover, far above
+    # the ~1 an iid coin with the same rate would give.
+    runs, cur = [], 0
+    for flag in slow:
+        if flag:
+            cur += 1
+        elif cur:
+            runs.append(cur)
+            cur = 0
+    np.testing.assert_allclose(np.mean(runs), 1.0 / p_recover, rtol=0.25)
+
+
+def test_markov_state_is_per_run():
+    """make_delay() must hand out FRESH chain state: two runs with the same
+    rng seed must see identical trajectories."""
+    c = _cluster(delay_model="markov")
+    a = _samples(c.make_delay(), 200, seed=3)
+    b = _samples(c.make_delay(), 200, seed=3)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_stateful_model_refused_on_legacy_delegation_path():
+    """ClusterModel.compute_time caches ONE model instance, which would
+    silently share markov chain state across runs -- it must refuse loudly
+    instead (the engine path via make_delay keeps working)."""
+    c = _cluster(delay_model="markov")
+    rng = np.random.default_rng(0)
+    with pytest.raises(ValueError, match="stateful"):
+        c.compute_time(0, 100, rng)
+    c.make_delay().compute_time(0, 100, rng)  # per-run path unaffected
+
+
+def test_worker_aware_model_refused_on_legacy_delegation_path():
+    """The legacy p2p_time signature cannot carry the worker index, so a
+    per-link model must be refused loudly rather than silently timing every
+    worker on the fast link."""
+    c = _cluster(delay_model="bandwidth_coupled")
+    with pytest.raises(ValueError, match="per.*worker|worker"):
+        c.p2p_time(1000)
+    assert c.make_delay().p2p_time(1000, 0) > c.make_delay().p2p_time(1000, 1)
+
+
+# ---------------------------------------------------------------------------
+# Bandwidth-coupled: delay billed on the compressor's own byte formula.
+# ---------------------------------------------------------------------------
+
+
+def test_bandwidth_coupled_link_slowdown():
+    c = _cluster(delay_model="bandwidth_coupled",
+                 delay_params={"link_slowdown": 20.0})
+    model = c.make_delay()
+    nbytes = 4096
+    # Worker 0 is the straggler (ClusterModel.straggler_workers default).
+    assert model.p2p_time(nbytes, 0) == c.latency + nbytes * 20.0 / c.bandwidth
+    assert model.p2p_time(nbytes, 1) == c.latency + nbytes / c.bandwidth
+    assert model.p2p_time(nbytes) == c.latency + nbytes / c.bandwidth
+    # Compute stays the constant model's.
+    rng = np.random.default_rng(0)
+    assert model.compute_time(1, 100, rng) == 100 * c.unit_time
+
+
+@pytest.mark.parametrize("name,kwargs", [
+    ("dense", dict(rho=1.0)),
+    ("topk_exact", dict(k=37, rho=0.1)),
+    ("topk_q8", dict(k=37, rho=0.1)),
+])
+def test_bandwidth_coupled_agrees_with_compressor_billing(name, kwargs):
+    """The bytes the delay model charges time for ARE the bytes the shared
+    compressor formula bills -- the same payload_bytes() the transformer
+    exchange path sums into exchange/bytes_step (tests/test_compressors.py
+    pins that equivalence)."""
+    comp = compress_lib.get_compressor(name)(**kwargs)
+    c = _cluster(delay_model="bandwidth_coupled",
+                 delay_params={"link_slowdown": 8.0})
+    model = c.make_delay()
+    d = 370
+    wire = comp.wire_bytes(d)
+    assert wire == int(comp.payload_bytes(comp.k if comp.k else d))
+    assert model.p2p_time(wire, 0) == c.latency + wire * 8.0 / c.bandwidth
+
+
+def test_bandwidth_coupled_rewards_sparsity_end_to_end():
+    """Through the engine: with a slow link, sparser payloads must cut the
+    straggler's upload time (comm_time), dense ones must pay full freight."""
+    from repro.core import baselines, engine
+    from repro.data.synthetic import LinearDatasetSpec, make_linear_problem
+
+    prob = make_linear_problem(
+        LinearDatasetSpec(num_workers=K, n_per_worker=48, d=256,
+                          nnz_per_row=16, seed=7), lam=1e-3)
+    c = _cluster(straggler_sigma=1.0, delay_model="bandwidth_coupled",
+                 delay_params={"link_slowdown": 50.0})
+    sparse = baselines.acpd(K, 256, B=2, T=4, rho_d=16, gamma=0.5, H=16)
+    dense = baselines.acpd_dense(K, B=2, T=4, gamma=0.5, H=16)
+    r_sparse = engine.run_method(prob, sparse, c, num_outer=1, seed=0)
+    r_dense = engine.run_method(prob, dense, c, num_outer=1, seed=0)
+    assert r_sparse.records[-1].comm_time < r_dense.records[-1].comm_time
+
+
+# ---------------------------------------------------------------------------
+# Spec threading.
+# ---------------------------------------------------------------------------
+
+
+def test_cluster_delay_fields_round_trip_through_spec():
+    from repro.api.spec import _cluster_from_dict, _cluster_to_dict
+
+    c = _cluster(delay_model="markov",
+                 delay_params={"p_slow": 0.2, "slow_factor": 4.0})
+    d = _cluster_to_dict(c)
+    assert d["delay_model"] == "markov"
+    assert d["delay_params"] == {"p_slow": 0.2, "slow_factor": 4.0}
+    assert _cluster_from_dict(d) == c
+    # Old spec JSONs without the fields keep working (defaults).
+    legacy = {k: v for k, v in d.items()
+              if k not in ("delay_model", "delay_params")}
+    back = _cluster_from_dict(legacy)
+    assert back.delay_model == "constant" and back.delay_params == ()
+
+
+def test_zoo_presets_round_trip():
+    from repro import api
+    from repro.api.presets import ZOO_DELAYS
+
+    for delay in ZOO_DELAYS:
+        spec = api.build_preset(f"zoo-{delay}", quick=True)
+        assert api.ExperimentSpec.from_json(spec.to_json()) == spec
+        assert spec.cluster.delay_model == delay

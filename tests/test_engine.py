@@ -117,18 +117,27 @@ def test_async_protocol_converges(small_problem):
     assert res.records[-1].iteration == 8 * 10
 
 
-def test_lag_protocol_converges_and_saves_upload_bytes(small_problem):
+@pytest.mark.parametrize("window,gap_tol", [(1, 1e-3), (10, 1e-2)],
+                         ids=["window1", "window10"])
+def test_lag_protocol_converges_and_saves_upload_bytes(small_problem, window,
+                                                       gap_tol):
     """Lazy uploads must cut bytes_up vs the plain group protocol without
-    giving up convergence (mass is preserved by the residual)."""
+    giving up convergence (mass is preserved by the residual).
+
+    ``lag_window=1`` is the legacy single-reply test with its original
+    thresholds; the paper-faithful D=10 window skips more aggressively
+    (early large replies hold the laziness reference up), buying more byte
+    savings at a looser same-budget gap.
+    """
     cluster = ClusterModel(num_workers=K)
     group = baselines.acpd(K, D, B=2, T=10, rho_d=64, gamma=0.5, H=256)
     lag = baselines.acpd_lag(K, D, B=2, T=10, rho_d=64, gamma=0.5, H=256,
-                             lag_xi=1.0)
+                             lag_xi=1.0, lag_window=window)
     res_g = run_method(small_problem, group, cluster, num_outer=8,
                        eval_every=4, seed=2)
     res_l = run_method(small_problem, lag, cluster, num_outer=8,
                        eval_every=4, seed=2)
-    assert res_l.records[-1].gap < 1e-3, res_l.records[-1].gap
+    assert res_l.records[-1].gap < gap_tol, res_l.records[-1].gap
     # Strictly fewer upload bytes == heartbeats actually happened (both runs
     # launch the same number of worker rounds; a full upload costs 512 bytes
     # here, a heartbeat 8).

@@ -1,0 +1,271 @@
+"""The protocol zoo: CoCoA-lineage entries (pluggable local solvers),
+adaptive-B group sizing, the windowed LAG rule, sigma' defaults, the
+protocol x delay smoke grid driven by specs, and the unified
+unknown-registry-name error path."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import baselines, engine, solvers
+from repro.core.acpd import MethodConfig
+from repro.core.simulate import ClusterModel
+
+K, D = 4, 512
+
+
+def _spec(methods, *, sigma=1.0, delay="constant", delay_params=None,
+          eval_every=2, d=D):
+    return api.ExperimentSpec(
+        name="zoo-test",
+        problem=api.ProblemSpec("rcv1_like",
+                                {"K": K, "d": d, "n_per_worker": 96}),
+        cluster=api.presets.cluster_model(K, sigma=sigma, delay=delay,
+                                          delay_params=delay_params or {}),
+        methods=tuple(methods), eval_every=eval_every, seed=0)
+
+
+# ---------------------------------------------------------------------------
+# Registries and sigma' defaults.
+# ---------------------------------------------------------------------------
+
+
+def test_new_protocols_registered():
+    names = engine.available_protocols()
+    for expected in ("cocoa", "cocoa_plus", "adaptive_b"):
+        assert expected in names
+
+
+def test_solver_registry_contents_and_errors():
+    assert solvers.available_solvers() == ("accelerated", "importance", "sdca")
+    with pytest.raises(ValueError, match="unknown local solver"):
+        solvers.get_solver("newton")
+
+
+def test_sigma_prime_defaults_per_protocol():
+    m = baselines.cocoa_v1(K)  # gamma = 1/K, averaging
+    assert m.resolved_sigma_prime(K) == 1.0
+    m = baselines.cocoa_plus_solver(K, gamma=1.0)  # adding
+    assert m.resolved_sigma_prime(K) == float(K)
+    m = baselines.acpd_adaptive(K, D, quantile=0.5)  # targets ~K/2 arrivals
+    assert m.resolved_sigma_prime(K) == m.gamma * 2
+    m = baselines.acpd_adaptive(K, D, quantile=1.0)
+    assert m.resolved_sigma_prime(K) == m.gamma * K
+
+
+# ---------------------------------------------------------------------------
+# CoCoA lineage: pluggable local solvers.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("solver", ["sdca", "importance", "accelerated"])
+@pytest.mark.parametrize("builder", [baselines.cocoa_v1,
+                                     baselines.cocoa_plus_solver],
+                         ids=["cocoa", "cocoa_plus"])
+def test_cocoa_lineage_converges_with_every_solver(small_problem, builder,
+                                                   solver):
+    m = builder(K, H=192, local_solver=solver)
+    res = engine.run_method(small_problem, m, ClusterModel(num_workers=K),
+                            num_outer=10, eval_every=1, seed=1)
+    gaps = [r.gap for r in res.records]
+    assert gaps[-1] < gaps[0] / 5, gaps
+    assert np.isfinite(res.w).all()
+
+
+def test_cocoa_plus_sdca_matches_sync_protocol_updates(small_problem):
+    """With the default SDCA solver and gamma=1, the cocoa_plus entry solves
+    the same subproblems as the pinned 'sync' protocol -- same sigma', same
+    key schedule -- so the trajectories must agree to float tolerance (the
+    only difference is vmapping through a registry indirection)."""
+    sync = baselines.cocoa_plus(K, H=96)  # protocol="sync"
+    plug = baselines.cocoa_plus_solver(K, H=96)  # protocol="cocoa_plus"
+    cluster = ClusterModel(num_workers=K)
+    a = engine.run_method(small_problem, sync, cluster, num_outer=6,
+                          eval_every=3, seed=2)
+    b = engine.run_method(small_problem, plug, cluster, num_outer=6,
+                          eval_every=3, seed=2)
+    np.testing.assert_allclose(a.w, b.w, rtol=1e-5, atol=1e-7)
+    assert a.records[-1].sim_time == b.records[-1].sim_time
+
+
+def test_cocoa_rejects_unsafe_gamma(small_problem):
+    """Averaging with sigma'=1 is only safe for gamma <= 1/K; the
+    MethodConfig default gamma=1.0 used to diverge silently."""
+    m = MethodConfig(name="bad", protocol="cocoa")  # default gamma = 1.0
+    with pytest.raises(ValueError, match="gamma <= 1/K"):
+        api.Session(small_problem, m, ClusterModel(num_workers=K), num_outer=1)
+    # An explicit sigma_prime takes responsibility and is allowed through.
+    ok = dataclasses.replace(m, sigma_prime=float(K))
+    api.Session(small_problem, ok, ClusterModel(num_workers=K), num_outer=1)
+
+
+def test_unknown_solver_fails_at_session_construction(small_problem):
+    m = dataclasses.replace(baselines.cocoa_v1(K), local_solver="newton")
+    with pytest.raises(ValueError, match="unknown local solver"):
+        api.Session(small_problem, m, ClusterModel(num_workers=K), num_outer=1)
+
+
+# ---------------------------------------------------------------------------
+# Adaptive-B group sizing.
+# ---------------------------------------------------------------------------
+
+
+def test_adaptive_b_excludes_persistent_straggler(small_problem):
+    """With one sigma=20 straggler and quantile=0.5, the learned B must drop
+    below K (the server stops waiting for the tail) while convergence and
+    the T-periodic full barrier are kept."""
+    m = baselines.acpd_adaptive(K, D, T=6, rho_d=64, gamma=0.5, H=96,
+                                quantile=0.5)
+    session = api.Session(small_problem, m,
+                          ClusterModel(num_workers=K, straggler_sigma=20.0),
+                          num_outer=3, seed=0)
+    res = session.run()
+    assert session.proto.current_b < K
+    assert session.proto.current_b >= 1
+    gaps = [r.gap for r in res.records]
+    assert gaps[-1] < gaps[0] / 5, gaps
+    # Barrier rounds still wait for everyone.
+    assert session.proto.arrivals_needed(5) == K
+
+
+def test_adaptive_b_respects_b_min(small_problem):
+    m = baselines.acpd_adaptive(K, D, T=5, rho_d=64, gamma=0.5, H=32,
+                                quantile=0.25, b_min=3)
+    session = api.Session(small_problem, m,
+                          ClusterModel(num_workers=K, straggler_sigma=10.0),
+                          num_outer=2, seed=0)
+    session.run()
+    assert session.proto.current_b >= 3
+
+
+def test_adaptive_b_capped_under_tied_latencies(small_problem):
+    """Homogeneous cluster: every EWMA ties, so the raw quantile count hits
+    K -- more aggregation than the default sigma' covers, which used to
+    diverge silently.  B_t must stay capped at ceil(q*K) and the run stay
+    bounded even with an aggressive gamma."""
+    m = dataclasses.replace(
+        baselines.acpd_adaptive(K, D, T=5, rho_d=64, H=64, quantile=0.25),
+        gamma=1.0)
+    session = api.Session(small_problem, m,
+                          ClusterModel(num_workers=K, straggler_sigma=1.0),
+                          num_outer=3, seed=0)
+    res = session.run()
+    assert session.proto.current_b == 1  # ceil(0.25 * 4)
+    assert all(np.isfinite(r.gap) for r in res.records)
+    gaps = [r.gap for r in res.records]
+    assert gaps[-1] < gaps[0], gaps  # converging, not exploding
+
+
+def test_adaptive_b_validates_params(small_problem):
+    bad_q = dataclasses.replace(baselines.acpd_adaptive(K, D),
+                                adaptive_quantile=1.5)
+    with pytest.raises(ValueError, match="adaptive_quantile"):
+        api.Session(small_problem, bad_q, ClusterModel(num_workers=K),
+                    num_outer=1)
+    bad_ewma = dataclasses.replace(baselines.acpd_adaptive(K, D),
+                                   adaptive_ewma=0.0)
+    with pytest.raises(ValueError, match="adaptive_ewma"):
+        api.Session(small_problem, bad_ewma, ClusterModel(num_workers=K),
+                    num_outer=1)
+
+
+# ---------------------------------------------------------------------------
+# Windowed LAG.
+# ---------------------------------------------------------------------------
+
+
+def test_lag_window_validation(small_problem):
+    m = dataclasses.replace(baselines.acpd_lag(K, D), lag_window=0)
+    with pytest.raises(ValueError, match="lag_window"):
+        api.Session(small_problem, m, ClusterModel(num_workers=K), num_outer=1)
+
+
+def test_lag_window_changes_skipping(small_problem):
+    """The D-round window holds the laziness reference up longer than the
+    single-reply rule, so it must skip at least as many uploads (here:
+    strictly fewer bytes up) while still converging."""
+    cluster = ClusterModel(num_workers=K)
+    runs = {}
+    for window in (1, 10):
+        m = baselines.acpd_lag(K, D, B=2, T=8, rho_d=64, gamma=0.5, H=192,
+                               lag_xi=1.0, lag_window=window)
+        runs[window] = engine.run_method(small_problem, m, cluster,
+                                         num_outer=6, eval_every=6, seed=2)
+    assert runs[10].records[-1].bytes_up < runs[1].records[-1].bytes_up
+    for window, res in runs.items():
+        gaps = [r.gap for r in res.records]
+        assert gaps[-1] < gaps[0] / 2, (window, gaps)
+
+
+# ---------------------------------------------------------------------------
+# Protocol x delay smoke grid, straight from declarative specs.
+# ---------------------------------------------------------------------------
+
+_GRID_METHODS = {
+    "group": lambda: baselines.acpd(K, 256, B=2, T=4, rho_d=32, gamma=0.5,
+                                    H=16),
+    "adaptive_b": lambda: baselines.acpd_adaptive(K, 256, T=4, rho_d=32,
+                                                  gamma=0.5, H=16),
+    "lag": lambda: baselines.acpd_lag(K, 256, B=2, T=4, rho_d=32, gamma=0.5,
+                                      H=16),
+    "async": lambda: baselines.acpd_async(K, 256, T=4, rho_d=32, gamma=0.5,
+                                          H=16),
+    "sync": lambda: baselines.cocoa_plus(K, H=16),
+    "cocoa": lambda: baselines.cocoa_v1(K, H=16),
+    "cocoa_plus": lambda: baselines.cocoa_plus_solver(K, H=16),
+}
+
+_GRID_DELAYS = {
+    "constant": {},
+    "shifted_exponential": {"tail_mean": 1.0},
+    "pareto": {"shape": 1.8, "scale": 0.5},
+    "markov": {"p_slow": 0.2, "p_recover": 0.3, "slow_factor": 6.0},
+    "bandwidth_coupled": {"link_slowdown": 25.0},
+}
+
+
+@pytest.mark.parametrize("delay", sorted(_GRID_DELAYS))
+@pytest.mark.parametrize("protocol", sorted(_GRID_METHODS))
+def test_protocol_delay_smoke_grid(protocol, delay):
+    """Every registry protocol must run against every delay model from a
+    JSON-round-tripped spec: finite records, monotone sim clock, positive
+    accounting."""
+    method = _GRID_METHODS[protocol]()
+    assert method.protocol == protocol
+    spec = _spec([api.MethodEntry(method, 2)], sigma=4.0, delay=delay,
+                 delay_params=_GRID_DELAYS[delay], d=256)
+    spec = api.ExperimentSpec.from_json(spec.to_json())  # exercise the wire
+    res = api.Experiment(spec).run()[method.name]
+    assert res.records, "no eval records"
+    times = [r.sim_time for r in res.records]
+    assert all(np.isfinite(r.gap) for r in res.records)
+    assert times == sorted(times)
+    assert times[-1] > 0
+    assert res.records[-1].bytes_up > 0
+
+
+# ---------------------------------------------------------------------------
+# Unified unknown-registry-name error path.
+# ---------------------------------------------------------------------------
+
+
+def test_unknown_protocol_and_compressor_same_error_path(small_problem):
+    """Both axes must fail at Session construction with that registry's
+    listing -- including the sync protocols, which IGNORE the compressor at
+    run time and used to let the typo through silently."""
+    cluster = ClusterModel(num_workers=K)
+    bad_proto = dataclasses.replace(baselines.acpd(K, D), protocol="nope")
+    with pytest.raises(ValueError, match="unknown protocol.*available"):
+        api.Session(small_problem, bad_proto, cluster, num_outer=1)
+
+    for base in (baselines.acpd(K, D), baselines.cocoa_plus(K)):
+        bad_comp = dataclasses.replace(base, compressor="nope")
+        with pytest.raises(ValueError, match="unknown compressor.*available"):
+            api.Session(small_problem, bad_comp, cluster, num_outer=1)
+
+    bad_delay = ClusterModel(num_workers=K, delay_model="nope")
+    with pytest.raises(ValueError, match="unknown delay model.*available"):
+        api.Session(small_problem, baselines.acpd(K, D), bad_delay,
+                    num_outer=1)
