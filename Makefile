@@ -4,7 +4,7 @@
 
 PY ?= python
 
-.PHONY: check test docs-check bench-quick bench
+.PHONY: check test docs-check bench-quick bench-engine-quick bench
 
 check: test docs-check bench-quick
 
@@ -19,6 +19,11 @@ docs-check:
 
 bench-quick:
 	PYTHONPATH=src $(PY) -m benchmarks.run --quick
+
+# Engine/executor microbenchmark only, at smoke scale: the CI "bench" job's
+# it-still-runs gate (no perf thresholds enforced -- numbers are informative).
+bench-engine-quick:
+	PYTHONPATH=src $(PY) -m benchmarks.run --quick --only engine
 
 bench:
 	PYTHONPATH=src $(PY) -m benchmarks.run

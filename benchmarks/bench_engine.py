@@ -1,17 +1,23 @@
-"""Engine microbenchmark: the fused protocol engine vs the reference loops.
+"""Engine microbenchmark: reference loops vs event engine vs scan executor.
 
-Measures, at the ISSUE-1 acceptance point (K=16 workers), per simulated round:
+Three comparisons:
 
-* wall-clock of ``engine.run_method`` vs ``acpd.run_method_reference``
-  (identical trajectories -- pinned bit-for-bit by tests/test_engine.py);
-* host-issued eager device dispatches, counted by wrapping JAX's
-  ``apply_primitive`` (every un-jitted op the host Python loop issues).
-  Jit-compiled calls bypass this counter on both sides, so the eager count
-  isolates exactly the overhead the engine removes: per-message ``.at[]``
-  updates, slicing, and the blocking ``int(nnz(...))`` pulls.
+1. The PR-1 acceptance point (kept): ``engine.run_method`` vs
+   ``acpd.run_method_reference`` at K=16 -- wall clock + eager dispatches
+   (identical trajectories, pinned bit-for-bit by tests/test_engine.py).
 
-The acceptance bar is >= 3x fewer dispatches or >= 2x wall-clock per round;
-both are emitted and recorded to experiments/bench/engine_microbench.json.
+2. Executor scaling (ISSUE-4): the event executor vs the scan-fused
+   whole-run executor for a sync K=16 run, across three regimes --
+   ``overhead`` (per-round device work ~0: isolates executor cost, the
+   regime where the zoo grids live), ``zoo_cell`` (a straggler-zoo-sized
+   cell) and ``compute_bound`` (large local solves: both executors converge
+   to the math's cost; recorded so the artifact shows the honest
+   asymptote).  Dispatches are counted as compiled-function executions (the
+   module-level jitted entry points both executors flow through) plus eager
+   applies.  Results go to ``experiments/bench/executor_scaling.json``.
+
+3. The vmapped sweep runner: N seeds of the zoo-cell run as one compiled
+   ``api.run_lockstep_sweep`` call vs N sequential event sessions.
 """
 
 from __future__ import annotations
@@ -48,7 +54,49 @@ def _count_eager_dispatches(fn):
     return out, calls[0]
 
 
-def main(quick: bool = False) -> None:
+# The module-level jitted entry points every executor path flows through;
+# wrapping them counts compiled executions (the C++ pjit fast path bypasses
+# python-level primitive hooks, so this is the reliable count).
+_JIT_SITES = (
+    ("repro.core.engine", ("_sync_round_fused", "_cocoa_round_fused",
+                           "_worker_rounds_fused", "_worker_rounds_lag_fused",
+                           "_server_apply_fused", "_lag_window_append",
+                           "_eval_batched")),
+    ("repro.core.executor", ("_lockstep_scan", "_lag_scan")),
+    ("repro.api.sweep", ("_sweep_scan",)),
+)
+
+
+def _count_device_dispatches(fn):
+    """(result, total dispatches): compiled jit-entry executions + eager."""
+    import importlib
+
+    counts = [0]
+    restore = []
+    for mod_name, names in _JIT_SITES:
+        mod = importlib.import_module(mod_name)
+        for name in names:
+            orig = getattr(mod, name)
+
+            def wrap(orig):
+                def counting(*a, **k):
+                    counts[0] += 1
+                    return orig(*a, **k)
+
+                return counting
+
+            setattr(mod, name, wrap(orig))
+            restore.append((mod, name, orig))
+    try:
+        out, eager = _count_eager_dispatches(fn)
+    finally:
+        for mod, name, orig in restore:
+            setattr(mod, name, orig)
+    return out, counts[0] + max(eager, 0)
+
+
+def _legacy_section(quick: bool, results: dict) -> None:
+    """Reference loops vs event engine (the PR-1 acceptance numbers)."""
     K = 4 if quick else 16
     d = 1024 if quick else 4096
     outer = 1 if quick else 2
@@ -59,11 +107,10 @@ def main(quick: bool = False) -> None:
     cl = cluster(K)
     rounds = outer * T
 
-    results = {}
     for label, fn in (("reference", run_method_reference),
                       ("engine", engine.run_method)):
         # Warm-up at the MEASURED shape (the engine's deferred eval compiles
-        # per snapshot count, so a smaller warm-up would leave a compile
+        # per snapshot bucket, so a smaller warm-up could leave a compile
         # inside the timed region).
         fn(prob, m, cl, num_outer=outer, eval_every=2, seed=0)
         t0 = time.perf_counter()
@@ -83,7 +130,121 @@ def main(quick: bool = False) -> None:
         results["dispatch_ratio"] = ratio
     results["wallclock_speedup"] = speedup
     results["K"] = K
+
+
+# (d, n_per_worker, H, num_outer) per regime; quick shrinks uniformly.
+_EXECUTOR_REGIMES = {
+    "overhead": dict(d=256, n_per_worker=16, H=1, outer=2000),
+    "zoo_cell": dict(d=512, n_per_worker=32, H=16, outer=400),
+    "compute_bound": dict(d=2048, n_per_worker=64, H=64, outer=100),
+}
+
+
+def _regime_spec(regime: str, K: int, cfg: dict, outer: int, H: int):
+    """The regime's run as a declarative spec (dump provenance)."""
+    from repro import api
+    from repro.api.presets import rcv1_spec
+
+    return api.ExperimentSpec(
+        name=f"executor-scaling-{regime}-K{K}",
+        problem=rcv1_spec(K=K, d=cfg["d"],
+                          n_per_worker=cfg["n_per_worker"]),
+        cluster=cluster(K),
+        methods=(api.MethodEntry(baselines.cocoa_plus(K, H=H), outer),),
+        eval_every=max(1, outer // 4), seed=0)
+
+
+def _executor_section(quick: bool, specs: list) -> dict:
+    """Event vs scan executor for sync K=16 runs (ISSUE-4 acceptance)."""
+    from repro import api
+
+    K = 4 if quick else 16
+    out = {"K": K, "regimes": {}}
+    for regime, cfg in _EXECUTOR_REGIMES.items():
+        d, npw, H, outer = (cfg["d"], cfg["n_per_worker"], cfg["H"],
+                            cfg["outer"])
+        if quick:
+            outer = max(10, outer // 20)
+        specs.append(_regime_spec(regime, K, cfg, outer, H))
+        prob = rcv1_like(K=K, d=d, n_per_worker=npw, seed=7)
+        m = baselines.cocoa_plus(K, H=H)
+        cl = cluster(K)
+        row = dict(cfg, outer=outer)
+        for exe in ("event", "scan"):
+            def run(exe=exe):
+                return api.Session(prob, m, cl, num_outer=outer,
+                                   eval_every=max(1, outer // 4),
+                                   executor=exe).run()
+
+            run()  # warm: compile outside the timed region
+            # Wall clock on an UNinstrumented run (the dispatch-count
+            # wrappers add per-dispatch overhead that would inflate the
+            # O(rounds) event side), then count dispatches separately.
+            t0 = time.perf_counter()
+            run()
+            dt = time.perf_counter() - t0
+            _, dispatches = _count_device_dispatches(run)
+            row[exe] = {"wall_s": dt, "device_dispatches": dispatches}
+            emit(f"executor/{regime}/{exe}/us_per_round",
+                 dt * 1e6 / outer, dispatches)
+        row["wallclock_speedup"] = (row["event"]["wall_s"]
+                                    / row["scan"]["wall_s"])
+        row["dispatch_ratio"] = (row["event"]["device_dispatches"]
+                                 / max(1, row["scan"]["device_dispatches"]))
+        emit(f"executor/{regime}/K{K}/speedup", 0.0,
+             round(row["wallclock_speedup"], 2))
+        emit(f"executor/{regime}/K{K}/dispatch_ratio", 0.0,
+             round(row["dispatch_ratio"], 2))
+        out["regimes"][regime] = row
+    return out
+
+
+def _sweep_section(quick: bool) -> dict:
+    """N-seed sweep: one vmapped compiled call vs N event sessions."""
+    from repro import api
+
+    K = 4 if quick else 16
+    seeds = tuple(range(2 if quick else 8))
+    cfg = _EXECUTOR_REGIMES["zoo_cell"]
+    outer = max(10, cfg["outer"] // 20) if quick else cfg["outer"]
+    prob = rcv1_like(K=K, d=cfg["d"], n_per_worker=cfg["n_per_worker"],
+                     seed=7)
+    m = baselines.cocoa_plus(K, H=cfg["H"])
+    cl = cluster(K)
+    ev = max(1, outer // 4)
+
+    def sequential():
+        return [api.Session(prob, m, cl, num_outer=outer, eval_every=ev,
+                            seed=s, executor="event").run() for s in seeds]
+
+    def swept():
+        return api.run_lockstep_sweep(prob, m, cl, num_outer=outer,
+                                      seeds=seeds, eval_every=ev)
+
+    sequential(), swept()  # warm both paths
+    t0 = time.perf_counter()
+    sequential()
+    t_seq = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    swept()
+    t_sweep = time.perf_counter() - t0
+    speedup = t_seq / t_sweep
+    emit(f"sweep/K{K}/seeds{len(seeds)}/speedup", t_sweep * 1e6,
+         round(speedup, 2))
+    return {"K": K, "seeds": len(seeds), "outer": outer,
+            "sequential_wall_s": t_seq, "vmapped_wall_s": t_sweep,
+            "wallclock_speedup": speedup}
+
+
+def main(quick: bool = False) -> None:
+    results: dict = {}
+    _legacy_section(quick, results)
     dump("engine_microbench", results, seed=0)
+
+    specs: list = []
+    scaling = {"executor": _executor_section(quick, specs),
+               "sweep": _sweep_section(quick)}
+    dump("executor_scaling", scaling, specs=specs, seed=0)
 
 
 if __name__ == "__main__":

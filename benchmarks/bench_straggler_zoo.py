@@ -21,8 +21,25 @@ bandwidth-coupled column rewards sparse payloads specifically.
 
 from __future__ import annotations
 
-from benchmarks.common import dump, emit, timed
+from benchmarks.common import dump, emit, run_cell, timed
 from repro.api.presets import ZOO_DELAYS, straggler_zoo
+
+
+def _run_cell(exp, entry, delay):
+    session = exp.session(entry)  # executor="auto": scan where eligible
+    _, us = timed(session.run)
+    res = session.result()
+    last = res.records[-1]
+    return us, {
+        "protocol": entry.config.protocol,
+        "delay_model": delay,
+        "executor": session.executor,
+        "gap": last.gap,
+        "sim_time": last.sim_time,
+        "bytes_up": last.bytes_up,
+        "bytes_down": last.bytes_down,
+        "rounds": last.iteration,
+    }
 
 
 def main(quick: bool = False) -> None:
@@ -30,28 +47,22 @@ def main(quick: bool = False) -> None:
 
     grid: dict[str, dict[str, dict]] = {}
     specs = []
+    errors: list[dict] = []
     for delay in sorted(ZOO_DELAYS):
         spec = straggler_zoo(delay, quick=quick)
         specs.append(spec)
         exp = api.Experiment(spec)
         for entry in spec.methods:
-            session = exp.session(entry)
-            _, us = timed(session.run)
-            res = session.result()
-            last = res.records[-1]
-            cell = {
-                "protocol": entry.config.protocol,
-                "delay_model": delay,
-                "gap": last.gap,
-                "sim_time": last.sim_time,
-                "bytes_up": last.bytes_up,
-                "bytes_down": last.bytes_down,
-                "rounds": last.iteration,
-            }
+            # A raising cell is recorded in the dump, not silently dropped.
+            out = run_cell(errors, f"{entry.config.name}@{delay}",
+                           _run_cell, exp, entry, delay)
+            if out is None:
+                continue
+            us, cell = out
             grid.setdefault(entry.config.name, {})[delay] = cell
             emit(f"zoo/{entry.config.name}@{delay}", us,
-                 f"gap={last.gap:.3e}@t={last.sim_time:.4f}s")
-    dump("straggler_zoo", grid, specs=specs)
+                 f"gap={cell['gap']:.3e}@t={cell['sim_time']:.4f}s")
+    dump("straggler_zoo", grid, specs=specs, errors=errors)
 
 
 if __name__ == "__main__":

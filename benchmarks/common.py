@@ -8,6 +8,12 @@ experiments/bench/ for EXPERIMENTS.md; every payload is stamped with
 provenance (the ExperimentSpec JSON that produced it, the seed, and
 ``jax.__version__``) so bench trajectories are reproducible from the file
 alone (``python -m repro run`` accepts the embedded spec).
+
+Failure policy: a raising grid cell must not silently truncate the dump.
+Benchmarks wrap per-cell work in :func:`run_cell`, which records the failing
+cell + exception into the payload's ``errors`` list (written by
+:func:`dump`) and keeps the rest of the grid running; the driver
+(benchmarks/run.py) does the same per benchmark module.
 """
 
 from __future__ import annotations
@@ -15,6 +21,7 @@ from __future__ import annotations
 import json
 import pathlib
 import time
+import traceback
 from typing import Callable
 
 from repro.api.problems import rcv1_like as _rcv1_like_builder
@@ -28,11 +35,14 @@ def emit(name: str, us_per_call: float, derived) -> None:
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
 
 
-def dump(name: str, payload, *, specs=None, seed=None) -> None:
+def dump(name: str, payload, *, specs=None, seed=None, errors=None) -> None:
     """Write a bench payload with reproducibility provenance.
 
     ``specs``: the ExperimentSpec(s) the trajectories came from (single spec
     or a list); ``seed``: the driving seed when no spec applies.
+    ``errors``: failed-cell records from :func:`run_cell` -- written into the
+    document (as ``errors``) so a raising cell leaves a visible trace in the
+    artifact instead of a silently missing row.
     """
     import jax
 
@@ -46,7 +56,29 @@ def dump(name: str, payload, *, specs=None, seed=None) -> None:
         provenance["seed"] = seed
     OUT_DIR.mkdir(parents=True, exist_ok=True)
     doc = {"provenance": provenance, "data": payload}
+    if errors is not None:
+        doc["errors"] = list(errors)
     (OUT_DIR / f"{name}.json").write_text(json.dumps(doc, indent=1))
+
+
+def run_cell(errors: list, cell: str, fn: Callable, *args, **kw):
+    """Run one grid cell, recording (not raising) its failure.
+
+    On an exception: appends ``{"cell", "error", "traceback"}`` to
+    ``errors``, emits an ``error/<cell>`` CSV row so the live output shows
+    the hole, and returns ``None`` (callers skip the row).  Pass ``errors``
+    on to :func:`dump` so the artifact carries the record.
+    """
+    try:
+        return fn(*args, **kw)
+    except Exception as e:  # noqa: BLE001 - the point is to record, not mask
+        errors.append({
+            "cell": cell,
+            "error": f"{type(e).__name__}: {e}",
+            "traceback": traceback.format_exc(limit=10),
+        })
+        emit(f"error/{cell}", 0.0, type(e).__name__)
+        return None
 
 
 def rcv1_like(K: int = 4, seed: int = 7, d: int = 2048, n_per_worker: int = 192):

@@ -29,7 +29,7 @@ def main(argv: list[str] | None = None) -> None:
     from benchmarks import (bench_engine, bench_fig3_convergence,
                             bench_fig4a_rho, bench_fig4b_scaling,
                             bench_fig5_realenv, bench_straggler_zoo,
-                            bench_table1, roofline)
+                            bench_table1, common, roofline)
 
     mods = [bench_table1, bench_fig3_convergence, bench_fig4a_rho,
             bench_fig4b_scaling, bench_fig5_realenv, bench_straggler_zoo,
@@ -43,9 +43,21 @@ def main(argv: list[str] | None = None) -> None:
 
     print("name,us_per_call,derived")
     t0 = time.time()
+    failures: list[dict] = []
     for mod in mods:
-        mod.main(quick=args.quick)
-    print(f"# all benchmarks done in {time.time() - t0:.1f}s", file=sys.stderr)
+        # A raising benchmark must not silently truncate the suite: record
+        # the failure (CSV row + JSON artifact) and keep going.
+        common.run_cell(failures, mod.__name__, mod.main, quick=args.quick)
+    failure_file = common.OUT_DIR / "bench_failures.json"
+    if failures:
+        common.dump("bench_failures", {"failed_modules": failures})
+    elif failure_file.exists():
+        failure_file.unlink()  # clean run: drop the stale failure record
+    print(f"# all benchmarks done in {time.time() - t0:.1f}s"
+          + (f" ({len(failures)} FAILED)" if failures else ""),
+          file=sys.stderr)
+    if failures:
+        sys.exit(1)
 
 
 if __name__ == '__main__':

@@ -6,7 +6,12 @@ Everything a caller needs lives here:
   declarative, JSON-round-trippable experiment descriptions;
 * :class:`Session` / :class:`Experiment` and the typed event stream
   (:class:`RoundEvent`, :class:`EvalEvent`, :class:`SyncEvent`,
-  :class:`StopEvent`) -- streaming execution with early stop;
+  :class:`StopEvent`) -- streaming execution with early stop, on either
+  execution backend (``executor="auto"|"event"|"scan"`` -- the scan-fused
+  whole-run executor is bit-identical to the event loop, see
+  docs/performance.md);
+* :func:`run_lockstep_sweep` / :func:`sweep_spec` -- whole seed x gamma
+  grids of a lockstep method as ONE compiled computation;
 * the :mod:`repro.core.compress` ``Compressor`` registry (re-exported) --
   the shared payload-compression extension point for both the simulator and
   the transformer exchange path;
@@ -40,6 +45,11 @@ from repro.api.session import (  # noqa: F401
     SyncEvent,
 )
 from repro.api.spec import ExperimentSpec, MethodEntry  # noqa: F401
+from repro.api.sweep import (  # noqa: F401
+    SweepVariant,
+    run_lockstep_sweep,
+    sweep_spec,
+)
 from repro.core.compress import (  # noqa: F401
     Compressor,
     available_compressors,
@@ -71,6 +81,7 @@ __all__ = [
     "Session",
     "SessionEvent",
     "StopEvent",
+    "SweepVariant",
     "SyncEvent",
     "available_compressors",
     "available_delays",
@@ -84,4 +95,6 @@ __all__ = [
     "register_compressor",
     "register_delay",
     "register_solver",
+    "run_lockstep_sweep",
+    "sweep_spec",
 ]

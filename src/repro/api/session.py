@@ -29,6 +29,7 @@ from typing import Iterator
 
 from repro.core import engine, objectives
 from repro.core import compress as compress_lib
+from repro.core import executor as executor_lib
 from repro.core import solvers as solvers_lib
 from repro.core.acpd import MethodConfig, RunRecord, RunResult
 from repro.core.simulate import ClusterModel
@@ -109,17 +110,33 @@ class Session:
     * ``"replay"``  -- deferred, op-for-op eager certificates (debug oracle).
     * ``"stream"``  -- certificates computed at each eval boundary and
       streamed live; required for (and implied by) ``target_gap`` early stop.
+
+    ``executor``:
+
+    * ``"auto"`` (default) -- the scan-fused whole-run backend
+      (:mod:`repro.core.executor`) whenever the run qualifies (lockstep
+      protocols always; ``lag`` when the delay stream is pre-sampleable; no
+      early stop), the event queue otherwise.  Both backends produce
+      bit-identical ``RunResult`` streams, so "auto" is a pure speed axis.
+    * ``"event"`` -- force the per-round priority-queue loop.
+    * ``"scan"``  -- force whole-run compilation; raises ``ValueError`` with
+      the reason when the run cannot scan (docs/performance.md has the
+      support matrix).
     """
 
     def __init__(self, problem: objectives.Problem, method: MethodConfig,
                  cluster: ClusterModel, *, num_outer: int, seed: int = 0,
                  eval_every: int = 1, eval_mode: str = "batched",
                  target_gap: float | None = None,
-                 time_budget: float | None = None):
+                 time_budget: float | None = None,
+                 executor: str = "auto"):
         if target_gap is not None:
             eval_mode = "stream"  # gap early-stop needs live certificates
         if eval_mode not in ("batched", "replay", "stream"):
             raise ValueError(f"unknown eval_mode {eval_mode!r}")
+        if executor not in ("auto", "event", "scan"):
+            raise ValueError(f"unknown executor {executor!r}; expected "
+                             f"'auto', 'event' or 'scan'")
         # Resolve names the run might otherwise never (or only late) check:
         # the sync protocols ignore the compressor at run time and only the
         # CoCoA lineage resolves the local solver.  Protocol and delay-model
@@ -129,10 +146,23 @@ class Session:
         if method.compressor is not None:
             compress_lib.get_compressor(method.compressor)
         solvers_lib.get_solver(method.local_solver)
+        # The protocol instance is constructed for BOTH executors: its
+        # __init__ carries the per-protocol validation (cocoa's gamma bound,
+        # lag_window >= 1, async's B=1) and the event loop's state; the scan
+        # backend re-derives its own state from the same (spec, seed).
         self.proto = engine.get_protocol(method.protocol)(
             problem, method, cluster, seed=seed)
+        ok, why = executor_lib.scan_supported(
+            method, cluster, eval_mode=eval_mode, target_gap=target_gap,
+            time_budget=time_budget)
+        if executor == "scan" and not ok:
+            raise ValueError(f"executor='scan' cannot run this spec: {why}")
+        self.executor = "scan" if (executor == "scan"
+                                   or (executor == "auto" and ok)) else "event"
         self.problem = problem
         self.method = method
+        self.cluster = cluster
+        self.seed = seed
         self.num_outer = num_outer
         self.eval_every = eval_every
         self.eval_mode = eval_mode
@@ -176,6 +206,9 @@ class Session:
             compute_time=snap.compute_time, comm_time=snap.comm_time)
 
     def _generate(self) -> Iterator[SessionEvent]:
+        if self.executor == "scan":
+            yield from self._generate_scan()
+            return
         proto = self.proto
         queue: list[engine.Message] = []
         for msg in proto.initial_messages():
@@ -240,6 +273,32 @@ class Session:
         yield StopEvent(reason=reason, iteration=iteration,
                         sim_time=proto.sim_time)
 
+    def _generate_scan(self) -> Iterator[SessionEvent]:
+        """The scan backend's stream: the run executes as one compiled
+        computation up front, then the identical event sequence is replayed
+        from its per-round accounting."""
+        run = executor_lib.run_scan(self.problem, self.method, self.cluster,
+                                    num_outer=self.num_outer, seed=self.seed,
+                                    eval_every=self.eval_every,
+                                    norms_sq=self.proto.norms_sq)
+        iteration = 0
+        for acct in run.rounds:
+            iteration += 1
+            yield RoundEvent(
+                iteration=iteration, sim_time=acct.sim_time,
+                arrivals=acct.arrivals, bytes_up=acct.bytes_up,
+                bytes_down=acct.bytes_down, compute_time=acct.compute_time,
+                comm_time=acct.comm_time)
+            if acct.is_sync:
+                yield SyncEvent(iteration=iteration, sim_time=acct.sim_time)
+        records = run.materialize_records(self.problem, self.eval_mode)
+        for rec in records:
+            yield EvalEvent(**dataclasses.asdict(rec))
+        self._result = run.finalize(records)
+        yield StopEvent(reason="completed", iteration=iteration,
+                        sim_time=run.rounds[-1].sim_time if run.rounds
+                        else 0.0)
+
 
 # ---------------------------------------------------------------------------
 # Spec-level execution.
@@ -257,7 +316,8 @@ class Experiment:
         self.problem = spec.problem.build()
         self.cluster = spec.cluster
 
-    def session(self, entry, *, eval_mode: str | None = None) -> Session:
+    def session(self, entry, *, eval_mode: str | None = None,
+                executor: str | None = None) -> Session:
         spec = self.spec
         if entry.config.exact_dual_feedback:
             raise ValueError(
@@ -270,7 +330,9 @@ class Experiment:
                        num_outer=entry.num_outer, seed=spec.seed,
                        eval_every=spec.eval_every, eval_mode=eval_mode,
                        target_gap=spec.target_gap,
-                       time_budget=spec.time_budget)
+                       time_budget=spec.time_budget,
+                       executor=spec.executor if executor is None
+                       else executor)
 
     def run_entry(self, entry) -> RunResult:
         if entry.config.exact_dual_feedback:

@@ -65,6 +65,13 @@ class ExperimentSpec:
     streaming this spec stops once the duality gap reaches ``target_gap``
     (evaluated every ``eval_every`` rounds) or the simulated clock passes
     ``time_budget`` seconds, whichever comes first.
+
+    ``executor`` picks the execution backend per method run: ``"auto"``
+    (default) compiles whole runs to one ``lax.scan`` when the protocol and
+    stop policy allow it and falls back to the event queue otherwise;
+    ``"event"`` / ``"scan"`` force a backend (see docs/performance.md).
+    Both backends produce bit-identical results, so the field is a pure
+    speed axis and old spec JSONs (without it) keep their meaning.
     """
 
     name: str
@@ -75,6 +82,7 @@ class ExperimentSpec:
     seed: int = 0
     target_gap: float | None = None
     time_budget: float | None = None
+    executor: str = "auto"
 
     def __post_init__(self):
         object.__setattr__(self, "methods", tuple(self.methods))
@@ -97,6 +105,7 @@ class ExperimentSpec:
             "seed": self.seed,
             "target_gap": self.target_gap,
             "time_budget": self.time_budget,
+            "executor": self.executor,
         }
 
     @classmethod
@@ -110,6 +119,7 @@ class ExperimentSpec:
             seed=int(d.get("seed", 0)),
             target_gap=d.get("target_gap"),
             time_budget=d.get("time_budget"),
+            executor=d.get("executor", "auto"),
         )
 
     def to_json(self, indent: int = 2) -> str:

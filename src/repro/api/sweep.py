@@ -1,0 +1,172 @@
+"""Batched sweep runner: many independent lockstep runs, ONE compiled call.
+
+Bench grids sweep seeds, server step sizes (gamma) and sparsity levels over
+the *same spec shape* -- identical dataset, protocol, round budget.  Running
+them as separate sessions pays one compile + one dispatch chain per cell.
+This module batches every variant of a lockstep run (``sync`` / ``cocoa`` /
+``cocoa_plus``) into a single compiled computation built on
+:func:`repro.core.executor.lockstep_run_traced`:
+
+* ``batch="vmap"`` (default) -- variants are vmapped: one XLA computation
+  whose inner ops are batched across the sweep axis.  Fastest, but batched
+  reductions reorder floats, so trajectories are NOT bit-identical to
+  single-run executions (they are still deterministic for a fixed sweep).
+* ``batch="map"``  -- variants run through ``lax.map``: still one compile
+  and one dispatch for the whole sweep, but each variant keeps the
+  unbatched op shapes -- bit-identical to ``Session(executor="scan")`` (and
+  therefore to the event engine), pinned by tests/test_executor.py.
+
+Timing/byte accounting is host-side per seed
+(:func:`repro.core.executor.lockstep_accounts` -- gamma does not move the
+simulated clock, so variants sharing a seed share the accounting), and the
+deferred gap certificates of ALL variants evaluate in one bucketed
+``lax.map`` dispatch.
+
+The group-family protocols (data-dependent arrival control flow) cannot
+batch this way; sweep them with one :class:`repro.api.Session` per cell.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import engine, executor, objectives
+from repro.core.acpd import MethodConfig, RunRecord, RunResult
+from repro.core.simulate import ClusterModel
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepVariant:
+    """One cell of the sweep: the varied parameters plus its RunResult."""
+
+    seed: int
+    gamma: float
+    result: RunResult
+
+
+@partial(jax.jit,
+         static_argnames=("loss", "num_steps", "solver", "length", "batch"))
+def _sweep_scan(keys, X, y, norms_sq, lam, n, sigma_ps, gammas, *, loss,
+                num_steps, solver, length, batch):
+    """All sweep variants in one compiled computation."""
+    executor.STATS["sweep_traces"] += 1  # trace-time side effect
+    run = partial(executor.lockstep_run_traced, loss=loss,
+                  num_steps=num_steps, solver=solver, length=length)
+    if batch == "vmap":
+        return jax.vmap(
+            lambda key, sp, g: run(key, X, y, norms_sq, lam, n, sp, g)
+        )(keys, sigma_ps, gammas)
+    return jax.lax.map(
+        lambda args: run(args[0], X, y, norms_sq, lam, n, args[1], args[2]),
+        (keys, sigma_ps, gammas))
+
+
+def run_lockstep_sweep(
+    problem: objectives.Problem,
+    method: MethodConfig,
+    cluster: ClusterModel,
+    *,
+    num_outer: int,
+    seeds=(0,),
+    gammas=None,
+    eval_every: int = 1,
+    batch: str = "vmap",
+) -> list[SweepVariant]:
+    """Run the cross product ``seeds x gammas`` of a lockstep method as one
+    compiled computation; returns one :class:`SweepVariant` per cell.
+
+    ``gammas=None`` keeps the method's own gamma (a pure seed sweep).  When
+    a gamma variant is swept and ``method.sigma_prime`` is unset, each
+    variant gets its protocol's safe default sigma' for THAT gamma (the same
+    resolution a single run would do).
+    """
+    if method.protocol not in executor.LOCKSTEP_PROTOCOLS:
+        raise ValueError(
+            f"sweep batching needs a lockstep protocol "
+            f"{executor.LOCKSTEP_PROTOCOLS}, got {method.protocol!r}; run "
+            f"group-family methods one Session per cell")
+    if batch not in ("vmap", "map"):
+        raise ValueError(f"unknown batch mode {batch!r}; 'vmap' or 'map'")
+    if num_outer <= 0:
+        raise ValueError(f"num_outer must be >= 1, got {num_outer}")
+    gammas = [method.gamma] if gammas is None else list(gammas)
+    seeds = list(seeds)
+    K, n_k, d = problem.X.shape
+
+    cells = [(s, g) for s in seeds for g in gammas]
+    methods = [dataclasses.replace(method, gamma=g) for _, g in cells]
+    sigma_ps = np.asarray([m.resolved_sigma_prime(K) for m in methods])
+    keys = jax.vmap(jax.random.key)(jnp.asarray([s for s, _ in cells]))
+    norms_sq = jnp.sum(problem.X * problem.X, axis=-1)
+
+    executor.STATS["sweep_calls"] += 1
+    w, alpha, ws, alphas = _sweep_scan(
+        keys, problem.X, problem.y, norms_sq, problem.lam, K * n_k,
+        jnp.asarray(sigma_ps, problem.X.dtype),
+        jnp.asarray([g for _, g in cells], problem.X.dtype),
+        loss=problem.loss, num_steps=method.H,
+        solver=executor.lockstep_solver(method), length=num_outer,
+        batch=batch)
+
+    # Gamma does not move the simulated clock: accounting is per seed.
+    accounts = {s: executor.lockstep_accounts(method, cluster, d,
+                                              num_rounds=num_outer, seed=s)
+                for s in seeds}
+    evals = executor._eval_indices(num_outer, eval_every)
+    # Every variant's certificates in one bucketed lax.map dispatch: rows
+    # stay unbatched, so per-variant values match single-run evaluation.
+    # (eval_every > num_outer => no boundaries => empty records, like a
+    # Session with the same parameters.)
+    V, S = len(cells), len(evals)
+    idx = jnp.asarray(evals, jnp.int32)
+    ws_eval = ws[:, idx].reshape((V * S, d))
+    alphas_eval = alphas[:, idx].reshape((V * S, K, n_k))
+    p, dv, gap, gap_srv = engine._eval_bucketed(
+        ws_eval, alphas_eval, problem.X, problem.y, problem.lam,
+        loss=problem.loss)
+    p = np.asarray(p, np.float64).reshape(V, S)
+    dv = np.asarray(dv, np.float64).reshape(V, S)
+    gap = np.asarray(gap, np.float64).reshape(V, S)
+    gap_srv = np.asarray(gap_srv, np.float64).reshape(V, S)
+
+    out = []
+    for v, ((seed, gamma), m) in enumerate(zip(cells, methods)):
+        rounds = accounts[seed]
+        records = [
+            RunRecord(iteration=r + 1, sim_time=rounds[r].sim_time,
+                      gap=float(gap[v, i]), gap_server=float(gap_srv[v, i]),
+                      primal=float(p[v, i]), dual=float(dv[v, i]),
+                      bytes_up=rounds[r].bytes_up,
+                      bytes_down=rounds[r].bytes_down,
+                      compute_time=rounds[r].compute_time,
+                      comm_time=rounds[r].comm_time)
+            for i, r in enumerate(evals)
+        ]
+        out.append(SweepVariant(seed, gamma, RunResult(
+            m, records, np.asarray(w[v]), np.asarray(alpha[v]))))
+    return out
+
+
+def sweep_spec(spec, method_name: str, *, seeds=None, gammas=None,
+               batch: str = "vmap") -> list[SweepVariant]:
+    """Spec-level convenience: sweep one method entry of an
+    :class:`repro.api.ExperimentSpec` (its eval cadence, its problem, its
+    seed -- ``seeds`` defaults to ``(spec.seed,)`` so the no-axes call
+    reproduces exactly the run the spec declares)."""
+    if spec.target_gap is not None or spec.time_budget is not None:
+        raise ValueError(
+            "sweep batching compiles whole runs and cannot early-stop; "
+            "this spec sets target_gap/time_budget -- run it per-cell via "
+            "Experiment/Session instead")
+    entry = spec.method_named(method_name)
+    problem = spec.problem.build()
+    return run_lockstep_sweep(problem, entry.config, spec.cluster,
+                              num_outer=entry.num_outer,
+                              seeds=(spec.seed,) if seeds is None else seeds,
+                              gammas=gammas, eval_every=spec.eval_every,
+                              batch=batch)

@@ -42,6 +42,42 @@ Registry entries:
   sparser or quantized payload (see :mod:`repro.core.compress`) directly
   shrinks the straggler's delay.
 
+Sampling interfaces: the per-call ``compute_time`` above serves the event
+executor's one-draw-per-launch discipline.  Two batched forms sit on top of
+it.  A single ``sample_round`` call is bit-equal to K sequential
+``compute_time`` calls in worker order, so every *pinned* trajectory
+(``constant``, with or without jitter -- the only model the reference
+oracle in :mod:`repro.core.acpd` covers) is unmoved.  For ``vector_sampled``
+models the group-family event loop's CONSUMPTION changed with this
+interface: one size-K draw per server round indexed by worker id, replacing
+per-relaunch scalars in arrival order -- group/lag trajectories under
+``shifted_exponential``/``pareto`` intentionally moved (this is what makes
+the stream pre-sampleable for the scan executor; the two executors remain
+bit-identical to each other):
+
+* ``sample_round(H, rng)``       -- one round's compute times for ALL K
+  workers as a single vector.  The default implementation loops
+  ``compute_time(k, ...)`` in worker order; ``shifted_exponential`` and
+  ``pareto`` override it with ONE vectorized numpy draw of size K (bit-equal
+  to K scalar draws under ``np.random.Generator``, which the tests pin) --
+  the event executor uses this to replace per-message scalar draws.
+* ``sample_stream(num_rounds, H, rng, lockstep=...)`` -- the whole run's
+  compute times as a ``(num_rounds, K)`` matrix, pre-sampled so the
+  scan-fused executor (:mod:`repro.core.executor`) can move the entire round
+  loop on device.  With ``lockstep=True`` (synchronous protocols, which
+  consume exactly one K-vector per round) every model can stream.  With
+  ``lockstep=False`` (group-family rounds, which index the round's vector by
+  worker id) a model may return ``None`` when its draws cannot be
+  pre-assigned to ``(round, worker)`` cells without changing the event
+  executor's stream -- ``markov`` (per-call chain advance) and ``constant``
+  with jitter (per-launch draw order is pinned bit-for-bit against the
+  reference loops) do so, and the executor falls back to the event queue.
+
+``vector_sampled`` marks models whose event-executor draws are per-round
+K-vectors indexed by worker id (the group-family vectorization above);
+``link_factors()`` exposes per-worker link slowdowns so in-graph executors
+can reproduce ``p2p_time`` arithmetic exactly.
+
 Statefulness: most models are stateless given the run's host RNG, but
 ``markov`` keeps per-worker chain state.  The engine therefore builds a FRESH
 model per run via :meth:`ClusterModel.make_delay` (every
@@ -121,6 +157,12 @@ class DelayModel:
     # worker index, so the delegation refuses these too rather than silently
     # timing every worker on the fast link.
     worker_aware = False
+    # True once the model's event-executor draws are per-round K-vectors
+    # indexed by worker id (vectorized ``sample_round``); the group-family
+    # event loop then draws ONE vector per server round instead of one
+    # scalar per relaunched worker, and the scan executor can pre-sample the
+    # identical (round, worker) stream.
+    vector_sampled = False
 
     def __init__(self, cluster):
         self.cluster = cluster
@@ -130,6 +172,10 @@ class DelayModel:
         # Same expression (and therefore the same floats) as the seed's
         # ClusterModel.compute_time.
         return H * self.cluster.unit_time * self._sigmas[k]
+
+    def base_compute_vector(self, H: int) -> np.ndarray:
+        """``base_compute`` for all K workers; same floats elementwise."""
+        return H * self.cluster.unit_time * self._sigmas
 
     # -- the three timing hooks -------------------------------------------
 
@@ -141,6 +187,47 @@ class DelayModel:
 
     def allreduce_time(self, d: int, value_bytes: int = 4) -> float:
         return self.cluster.allreduce_time(d, value_bytes)
+
+    # -- batched sampling (module docstring: "Sampling interfaces") --------
+
+    def sample_round(self, H: int, rng: np.random.Generator) -> np.ndarray:
+        """One round's compute times for all K workers, worker order.
+
+        Default: K sequential ``compute_time`` calls -- byte-identical RNG
+        stream to the per-call form.  Vectorized overrides must keep that
+        stream (one size-K draw == K scalar draws under numpy Generators).
+        """
+        return np.asarray([self.compute_time(k, H, rng)
+                           for k in range(self.cluster.num_workers)])
+
+    def sample_stream(self, num_rounds: int, H: int,
+                      rng: np.random.Generator, *,
+                      lockstep: bool = False) -> np.ndarray | None:
+        """Pre-sample the whole run: ``(num_rounds, K)`` compute times.
+
+        ``lockstep=True``: the consumer burns exactly one K-vector per round
+        in worker order (synchronous protocols) -- always available, any
+        model, same stream as the event executor.  ``lockstep=False``: the
+        consumer indexes cell ``(round, worker)`` on demand (group-family
+        rounds); only available when that assignment reproduces the event
+        executor's stream -- i.e. the model is ``vector_sampled`` or fully
+        deterministic -- otherwise ``None`` (caller falls back to events).
+        """
+        if not lockstep and not (self.vector_sampled or self.deterministic):
+            return None
+        return np.stack([self.sample_round(H, rng)
+                         for _ in range(num_rounds)])
+
+    @property
+    def deterministic(self) -> bool:
+        """True when ``compute_time`` never touches the RNG."""
+        return False
+
+    def link_factors(self) -> np.ndarray:
+        """Per-worker link slowdown factors f_k such that
+        ``p2p_time(nbytes, k) == latency + nbytes * f_k / bandwidth`` --
+        the exact arithmetic in-graph executors replicate."""
+        return np.ones(self.cluster.num_workers)
 
 
 @register_delay("constant")
@@ -155,6 +242,12 @@ class ConstantDelay(DelayModel):
             base *= float(rng.lognormal(0.0, self.cluster.jitter))
         return base
 
+    @property
+    def deterministic(self):
+        # Jitter-free constant delays never consume the RNG, so the whole
+        # stream is pre-sampleable for any consumption order.
+        return self.cluster.jitter == 0.0
+
 
 @register_delay("shifted_exponential")
 class ShiftedExponentialDelay(DelayModel):
@@ -165,6 +258,8 @@ class ShiftedExponentialDelay(DelayModel):
     tail_mean)`` and no sample is ever faster than ``base``.
     """
 
+    vector_sampled = True
+
     def __init__(self, cluster, *, tail_mean: float = 0.5):
         super().__init__(cluster)
         if tail_mean < 0:
@@ -174,6 +269,14 @@ class ShiftedExponentialDelay(DelayModel):
     def compute_time(self, k, H, rng):
         base = self.base_compute(k, H)
         return base * (1.0 + float(rng.exponential(self.tail_mean)))
+
+    def sample_round(self, H, rng):
+        # One size-K draw; numpy Generators make it bit-equal to K scalar
+        # draws (pinned by tests/test_delays.py), so per-call and per-round
+        # consumers see the same stream.
+        K = self.cluster.num_workers
+        return self.base_compute_vector(H) * (
+            1.0 + rng.exponential(self.tail_mean, size=K))
 
 
 @register_delay("pareto")
@@ -186,6 +289,8 @@ class ParetoDelay(DelayModel):
     extreme stragglers occur at polynomial (not exponential) rarity.
     """
 
+    vector_sampled = True
+
     def __init__(self, cluster, *, shape: float = 2.5, scale: float = 0.25):
         super().__init__(cluster)
         if shape <= 0 or scale < 0:
@@ -197,6 +302,11 @@ class ParetoDelay(DelayModel):
     def compute_time(self, k, H, rng):
         base = self.base_compute(k, H)
         return base * (1.0 + self.scale * float(rng.pareto(self.shape)))
+
+    def sample_round(self, H, rng):
+        K = self.cluster.num_workers
+        return self.base_compute_vector(H) * (
+            1.0 + self.scale * rng.pareto(self.shape, size=K))
 
 
 @register_delay("markov")
@@ -268,6 +378,9 @@ class BandwidthCoupledDelay(ConstantDelay):
     def p2p_time(self, nbytes, k=None):
         factor = 1.0 if k is None else self._slow[k]
         return self.cluster.latency + nbytes * factor / self.cluster.bandwidth
+
+    def link_factors(self):
+        return self._slow.copy()
 
     def allreduce_time(self, d, value_bytes=4):
         # A ring all-reduce moves at the pace of its slowest link.

@@ -27,26 +27,42 @@ every subclass implements is documented on :class:`Protocol`.
 
 Performance contract vs the reference loops in :mod:`repro.core.acpd`:
 
-* each worker round is ONE donated, jitted dispatch (SDCA solve + dual update
-  + top-k filter + residual update fused; the PRNG split happens inside);
+* a whole GROUP of worker rounds is ONE donated, jitted dispatch
+  (:func:`_worker_rounds_fused` scans the arrived workers with the same
+  unbatched per-worker ops and sequential PRNG split chain, so a B-message
+  relaunch costs one dispatch instead of B);
 * each server round is ONE jitted dispatch (aggregation + catch-up replies +
   reply ``nnz`` computed in-graph) followed by a single scalar pull for the
   byte accounting -- the reference does a blocking ``int(nnz(...))`` per
   message;
+* host-side delay sampling is vectorized: delay models flagged
+  ``vector_sampled`` draw ONE size-K numpy vector per round
+  (:meth:`repro.core.delays.DelayModel.sample_round`) instead of per-message
+  scalars.  The pinned trajectories (``constant`` delay, the only model the
+  reference oracle covers) are unmoved; group-family trajectories under the
+  stochastic vectorized models moved with the consumption change (see the
+  :mod:`repro.core.delays` docstring) -- both executors stay bit-identical
+  to each other;
 * duality-gap evaluation is deferred: snapshots of ``(w, alpha)`` device
   arrays are collected during simulation and evaluated afterwards (one
-  ``lax.map`` dispatch by default -- NOT vmap, which would break bit-exactness;
-  see ``_eval_batched`` -- or op-for-op identical to the reference with
-  ``eval_mode="replay"``).
+  ``lax.map`` dispatch, padded to power-of-two snapshot buckets so sweeps
+  with different round budgets reuse one compile -- NOT vmap, which would
+  break bit-exactness; see ``_eval_batched``/``_eval_bucketed`` -- or
+  op-for-op identical to the reference with ``eval_mode="replay"``).
 
-``benchmarks/bench_engine.py`` measures the resulting dispatch/wall-clock
-reduction; ``tests/test_engine.py`` pins bit-for-bit equality of the
-``group``/``sync`` trajectories against the reference implementation.
+This module is the per-round EVENT backend.  Runs without host-adaptive
+control flow can skip per-round dispatch entirely: the scan-fused executor
+(:mod:`repro.core.executor`, ``Session(executor="scan"|"auto")``) compiles
+an entire run into one ``lax.scan`` and reproduces this engine bit-for-bit
+(docs/performance.md).  ``benchmarks/bench_engine.py`` measures the
+dispatch/wall-clock reductions of both layers; ``tests/test_engine.py`` pins
+bit-for-bit equality of the ``group``/``sync`` trajectories against the
+reference implementation and ``tests/test_executor.py`` pins the executors
+against each other across the zoo grid.
 """
 
 from __future__ import annotations
 
-import collections
 import dataclasses
 import math
 from functools import partial
@@ -60,7 +76,7 @@ from repro.core import compress as compress_lib
 from repro.core import filter as msg_filter
 from repro.core import objectives
 from repro.core.acpd import MethodConfig, RunRecord, RunResult
-from repro.core.sdca import solve_subproblem, solve_subproblem_all
+from repro.core.sdca import solve_subproblem
 from repro.core.simulate import ClusterModel
 
 # ---------------------------------------------------------------------------
@@ -157,42 +173,96 @@ def _local_round(key, w_local, alpha_k, residual_k, X_k, y_k, norms_k, k, lam,
 
 @partial(jax.jit, static_argnames=("loss", "num_steps", "comp"),
          donate_argnums=(0, 2, 3))
-def _worker_round_fused(key, w_local, alpha_k, residual_k, X_k, y_k, norms_k,
-                        k, lam, n, sigma_p, gamma, *, loss, num_steps, comp):
-    """One full local round (Alg. 2) as a single dispatch.
+def _worker_rounds_fused(key, w_local, alpha, residual, X, y, norms_sq, idxs,
+                         lam, n, sigma_p, gamma, *, loss, num_steps, comp):
+    """A whole group of local rounds (Alg. 2) as ONE donated dispatch.
 
-    Returns the new global PRNG key, the worker's updated dual row and
-    residual, and the compressed payload.
+    ``idxs`` holds the relaunched workers in arrival order.  The body scans
+    over them with the same unbatched per-worker ops (and the same
+    sequential global-key split chain) the former one-dispatch-per-worker
+    path used, so trajectories stay bit-identical while a B-message relaunch
+    costs one dispatch instead of B.  ``alpha``/``residual`` are the stacked
+    (K, n_k)/(K, d) worker states; returns them updated plus the per-message
+    dual snapshots and compressed payloads, stacked in arrival order.
     """
-    key, alpha_new, new_residual, _, sent = _local_round(
-        key, w_local, alpha_k, residual_k, X_k, y_k, norms_k, k, lam, n,
-        sigma_p, gamma, loss=loss, num_steps=num_steps, comp=comp)
-    return key, alpha_new, new_residual, sent
+
+    def body(carry, k):
+        key, alpha, residual = carry
+        key, alpha_k, res_k, _, sent = _local_round(
+            key, w_local, alpha[k], residual[k], X[k], y[k], norms_sq[k], k,
+            lam, n, sigma_p, gamma, loss=loss, num_steps=num_steps, comp=comp)
+        carry = (key, alpha.at[k].set(alpha_k), residual.at[k].set(res_k))
+        return carry, (alpha_k, sent)
+
+    (key, alpha, residual), (alpha_rows, sents) = jax.lax.scan(
+        body, (key, alpha, residual), idxs)
+    return key, alpha, residual, alpha_rows, sents
+
+
+def _lag_reference(ref_buf_k, ref_len_k, xi):
+    """LAG's laziness reference for one worker: the windowed mean of its
+    recent catch-up-reply energies, scaled by xi.  Zero-padded fixed-width
+    buffer (index < len masks the live entries) so the event and scan
+    executors evaluate the identical expression."""
+    W = ref_buf_k.shape[0]
+    live = jnp.arange(W) < ref_len_k
+    total = jnp.sum(jnp.where(live, ref_buf_k, 0.0))
+    return xi * total / jnp.maximum(ref_len_k, 1)
+
+
+@partial(jax.jit, donate_argnums=(0, 1))
+def _lag_window_append(ref_buf, ref_len, idxs, reply_sq):
+    """Slide this round's reply energies into the arrived workers' windows.
+
+    Fixed-width (K, lag_window) rolling buffers: append at ``len`` while
+    filling, shift-left-and-append once full (the deque-with-maxlen
+    semantics, expressed as ops both executors share).
+    """
+    W = ref_buf.shape[1]
+    rows = ref_buf[idxs]
+    lens = ref_len[idxs]
+    full = (lens >= W)[:, None]
+    shifted = jnp.where(full, jnp.roll(rows, -1, axis=1), rows)
+    pos = jnp.minimum(lens, W - 1)
+    new_rows = shifted.at[jnp.arange(idxs.shape[0]), pos].set(reply_sq)
+    ref_buf = ref_buf.at[idxs].set(new_rows)
+    ref_len = ref_len.at[idxs].set(jnp.minimum(lens + 1, W))
+    return ref_buf, ref_len
 
 
 @partial(jax.jit, static_argnames=("loss", "num_steps", "comp"),
          donate_argnums=(0, 2, 3))
-def _worker_round_lag(key, w_local, alpha_k, residual_k, ref_k, X_k, y_k,
-                      norms_k, k, lam, n, sigma_p, gamma, xi, *, loss,
-                      num_steps, comp):
-    """LAG-style lazy worker round: upload only if the delta is informative.
+def _worker_rounds_lag_fused(key, w_local, alpha, residual, ref_buf, ref_len,
+                             X, y, norms_sq, idxs, lam, n, sigma_p, gamma, xi,
+                             *, loss, num_steps, comp):
+    """LAG-style lazy group relaunch: one dispatch for the whole group.
 
-    The upload is skipped when ``||F(dw)||^2 < xi * ref`` where ``ref`` is the
-    squared norm of the worker's last catch-up reply -- its freshest view of
-    how much the global model is already moving without it (the primal-dual
-    analogue of LAG's gradient-change-vs-model-movement test). Skipped mass
-    stays in the residual: error feedback makes laziness lossless, only late,
-    and since replies shrink as the system converges the test stays calibrated
+    Per worker, the upload is skipped when ``||F(dw)||^2 < xi * ref`` where
+    ``ref`` is the windowed mean of the worker's recent catch-up-reply
+    energies -- its freshest view of how much the global model is already
+    moving without it (the primal-dual analogue of LAG's
+    gradient-change-vs-model-movement test). Skipped mass stays in the
+    residual: error feedback makes laziness lossless, only late, and since
+    replies shrink as the system converges the test stays calibrated
     (all-quiet -> replies ~ 0 -> uploads resume, no starvation).
     """
-    key, alpha_new, new_residual, dw, sent = _local_round(
-        key, w_local, alpha_k, residual_k, X_k, y_k, norms_k, k, lam, n,
-        sigma_p, gamma, loss=loss, num_steps=num_steps, comp=comp)
-    send_sq = jnp.vdot(sent, sent)
-    skip = send_sq < xi * ref_k
-    sent = jnp.where(skip, jnp.zeros_like(sent), sent)
-    new_residual = jnp.where(skip, dw, new_residual)
-    return key, alpha_new, new_residual, sent, skip
+
+    def body(carry, k):
+        key, alpha, residual = carry
+        ref_k = _lag_reference(ref_buf[k], ref_len[k], xi)
+        key, alpha_k, res_k, dw, sent = _local_round(
+            key, w_local, alpha[k], residual[k], X[k], y[k], norms_sq[k], k,
+            lam, n, sigma_p, gamma, loss=loss, num_steps=num_steps, comp=comp)
+        send_sq = jnp.vdot(sent, sent)
+        skip = send_sq < ref_k
+        sent = jnp.where(skip, jnp.zeros_like(sent), sent)
+        res_k = jnp.where(skip, dw, res_k)
+        carry = (key, alpha.at[k].set(alpha_k), residual.at[k].set(res_k))
+        return carry, (alpha_k, sent, skip)
+
+    (key, alpha, residual), (alpha_rows, sents, skips) = jax.lax.scan(
+        body, (key, alpha, residual), idxs)
+    return key, alpha, residual, alpha_rows, sents, skips
 
 
 # Only dw_tilde/w_local are donated: w_server and alpha_applied may be held
@@ -226,30 +296,16 @@ def _server_apply_fused(w_server, dw_tilde, w_local, alpha_applied, idxs,
     return w_server, dw_tilde, w_local, alpha_applied, reply_nnz, reply_sq
 
 
-# Only the key is donated: w/alpha may be held by deferred eval snapshots.
-@partial(jax.jit, static_argnames=("loss", "num_steps"), donate_argnums=(0,))
-def _sync_round_fused(key, w, alpha, X, y, norms_sq, lam, n, sigma_p, gamma, *,
-                      loss, num_steps):
-    """One lockstep CoCoA-family round (all K subproblems + aggregation)."""
-    K = X.shape[0]
-    key, sub = jax.random.split(key)
-    keys = jax.random.split(sub, K)
-    w_all = jnp.broadcast_to(w, (K, w.shape[0]))
-    dalpha, v = solve_subproblem_all(
-        w_all, alpha, X, y, norms_sq, lam, n, sigma_p, keys,
-        loss=loss, num_steps=num_steps)
-    alpha = alpha + gamma * dalpha
-    w = w + gamma * jnp.sum(v, axis=0)
-    return key, w, alpha
+def _lockstep_round(key, w, alpha, X, y, norms_sq, lam, n, sigma_p, gamma, *,
+                    loss, num_steps, solver):
+    """Shared lockstep round body: all K subproblems vmapped + aggregation.
 
-
-# Like _sync_round_fused but with the local solver as a static argument: the
-# CoCoA lineage runs any repro.core.solvers registry entry, vmapped over the
-# worker axis, in one donated dispatch.
-@partial(jax.jit, static_argnames=("loss", "num_steps", "solver"),
-         donate_argnums=(0,))
-def _cocoa_round_fused(key, w, alpha, X, y, norms_sq, lam, n, sigma_p, gamma,
-                       *, loss, num_steps, solver):
+    Traced, not jitted -- the per-round fused dispatches below AND the
+    scan-fused whole-run executor (:mod:`repro.core.executor`) inline it, so
+    the op sequence (and therefore the bit-exact trajectory) is defined in
+    exactly one place.  ``solver`` is a :mod:`repro.core.solvers` entry
+    (``solve_subproblem`` for the hard-wired ``sync`` discipline).
+    """
     K = X.shape[0]
     key, sub = jax.random.split(key)
     keys = jax.random.split(sub, K)
@@ -260,6 +316,28 @@ def _cocoa_round_fused(key, w, alpha, X, y, norms_sq, lam, n, sigma_p, gamma,
     alpha = alpha + gamma * dalpha
     w = w + gamma * jnp.sum(v, axis=0)
     return key, w, alpha
+
+
+# Only the key is donated: w/alpha may be held by deferred eval snapshots.
+@partial(jax.jit, static_argnames=("loss", "num_steps"), donate_argnums=(0,))
+def _sync_round_fused(key, w, alpha, X, y, norms_sq, lam, n, sigma_p, gamma, *,
+                      loss, num_steps):
+    """One lockstep CoCoA-family round (all K subproblems + aggregation)."""
+    return _lockstep_round(key, w, alpha, X, y, norms_sq, lam, n, sigma_p,
+                           gamma, loss=loss, num_steps=num_steps,
+                           solver=solve_subproblem)
+
+
+# Like _sync_round_fused but with the local solver as a static argument: the
+# CoCoA lineage runs any repro.core.solvers registry entry, vmapped over the
+# worker axis, in one donated dispatch.
+@partial(jax.jit, static_argnames=("loss", "num_steps", "solver"),
+         donate_argnums=(0,))
+def _cocoa_round_fused(key, w, alpha, X, y, norms_sq, lam, n, sigma_p, gamma,
+                       *, loss, num_steps, solver):
+    return _lockstep_round(key, w, alpha, X, y, norms_sq, lam, n, sigma_p,
+                           gamma, loss=loss, num_steps=num_steps,
+                           solver=solver)
 
 
 @partial(jax.jit, static_argnames=("loss",))
@@ -281,6 +359,35 @@ def _eval_batched(ws, alphas, X, y, lam, *, loss):
         return p, dv, p - dv, p_srv - dv
 
     return jax.lax.map(one, (ws, alphas))
+
+
+def _bucket_size(count: int) -> int:
+    """Next power of two >= count: the static snapshot-batch sizes
+    ``_eval_batched`` compiles for."""
+    return 1 << max(0, count - 1).bit_length()
+
+
+def _eval_bucketed(ws, alphas, X, y, lam, *, loss):
+    """``_eval_batched`` padded to power-of-two snapshot counts.
+
+    Deferred-gap evaluation used to retrace whenever the snapshot count
+    changed across runs (every distinct ``num_outer`` x ``eval_every``
+    combination in a sweep paid a fresh compile).  Padding the batch with
+    copies of the last snapshot pins the traced shape to log-many buckets;
+    ``lax.map`` evaluates rows independently, so the first ``count`` rows
+    are bit-identical to the unpadded call (pinned by tests).
+    """
+    count = ws.shape[0]
+    if count == 0:
+        empty = jnp.zeros((0,), ws.dtype)
+        return empty, empty, empty, empty
+    pad = _bucket_size(count) - count
+    if pad:
+        ws = jnp.concatenate([ws, jnp.broadcast_to(ws[-1], (pad,) + ws.shape[1:])])
+        alphas = jnp.concatenate(
+            [alphas, jnp.broadcast_to(alphas[-1], (pad,) + alphas.shape[1:])])
+    p, dv, gap, gap_srv = _eval_batched(ws, alphas, X, y, lam, loss=loss)
+    return p[:count], dv[:count], gap[:count], gap_srv[:count]
 
 
 # ---------------------------------------------------------------------------
@@ -427,19 +534,18 @@ class GroupProtocol(Protocol):
         self.dw_tilde = jnp.zeros((self.K, self.d), dt)
         self.w_local = jnp.zeros((self.K, self.d), dt)
         self.alpha_applied = jnp.zeros((self.K, self.n_k), dt)
-        self.alpha = [jnp.zeros((self.n_k,), dt) for _ in range(self.K)]
-        self.residual = [jnp.zeros((self.d,), dt) for _ in range(self.K)]
-        # Per-worker constants, sliced once (the reference re-slices per round).
-        self.X_k = [problem.X[k] for k in range(self.K)]
-        self.y_k = [problem.y[k] for k in range(self.K)]
-        norms_sq = jnp.sum(problem.X * problem.X, axis=-1)
-        self.norms_k = [norms_sq[k] for k in range(self.K)]
+        # Stacked worker state: the fused group relaunch updates rows
+        # in-graph (the former per-worker array lists forced one dispatch
+        # per relaunched worker).
+        self.alpha = jnp.zeros((self.K, self.n_k), dt)
+        self.residual = jnp.zeros((self.K, self.d), dt)
+        self.norms_sq = jnp.sum(problem.X * problem.X, axis=-1)
 
     def num_rounds(self, num_outer: int) -> int:
         return num_outer * self.method.T
 
     def initial_messages(self):
-        return [self._launch_worker(k, 0.0) for k in range(self.K)]
+        return self._launch_workers([(k, 0.0) for k in range(self.K)])
 
     def arrivals_needed(self, round_index: int) -> int:
         T = self.method.T
@@ -451,23 +557,67 @@ class GroupProtocol(Protocol):
         T = self.method.T
         return self.full_sync_period and round_index % T == T - 1
 
-    def _launch_worker(self, k: int, start_time: float) -> Message:
+    # -- the fused group relaunch -----------------------------------------
+
+    def _round_payloads(self, idxs):
+        """Run the group's local rounds; returns stacked (alpha_rows, sents,
+        skip flags or None).  Subclasses (LAG) override to add laziness."""
+        (self.key, self.alpha, self.residual, alpha_rows,
+         sents) = _worker_rounds_fused(
+            self.key, self.w_local, self.alpha, self.residual,
+            self.problem.X, self.problem.y, self.norms_sq, idxs,
+            self.problem.lam, self.n, self.sigma_p, self.method.gamma,
+            loss=self.problem.loss, num_steps=self.method.H, comp=self.comp)
+        return alpha_rows, sents, None
+
+    def _message_bytes(self, skipped: bool) -> int:
+        return self.up_bytes
+
+    def _launch_workers(self, starts, pre_account=None):
+        """Launch local rounds for ``starts = [(worker, start_time), ...]``
+        (arrival order) as ONE fused dispatch, then do the host-side
+        accounting per worker.
+
+        ``pre_account``: optional per-worker ``(rbytes, down_time)`` reply
+        billing, applied immediately before each worker's own launch
+        accounting -- this keeps the float accumulation order of the
+        reference loops exactly (down_0, up_0, down_1, up_1, ...), which the
+        bit-for-bit pins depend on.
+        """
+        if not starts:
+            return []
         m = self.method
-        self.key, alpha_new, residual_new, sent = _worker_round_fused(
-            self.key, self.w_local, self.alpha[k], self.residual[k],
-            self.X_k[k], self.y_k[k], self.norms_k[k], k, self.problem.lam,
-            self.n, self.sigma_p, m.gamma, loss=self.problem.loss,
-            num_steps=m.H, comp=self.comp)
-        self.alpha[k] = alpha_new
-        self.residual[k] = residual_new
-        duration = self.delay.compute_time(k, m.H, self.rng)
-        up_time = self.delay.p2p_time(self.up_bytes, k)
-        self.compute_time += duration
-        self.comm_time += up_time
-        self.bytes_up += self.up_bytes
-        self.seq += 1
-        return Message(start_time + duration + up_time, k, sent, alpha_new,
-                       self.up_bytes, self.seq)
+        # Satellite of the vectorized-delay work: per-round vector draws
+        # (ONE size-K numpy draw) for models that support them, per-message
+        # scalar draws (the legacy, reference-pinned order) otherwise.
+        durations = (self.delay.sample_round(m.H, self.rng)
+                     if self.delay.vector_sampled else None)
+        idxs = jnp.asarray([k for k, _ in starts], jnp.int32)
+        alpha_rows, sents, skips = self._round_payloads(idxs)
+        out = []
+        for j, (k, start) in enumerate(starts):
+            if pre_account is not None:
+                rbytes, down_time = pre_account[j]
+                self.bytes_down += rbytes
+                self.comm_time += down_time
+            skipped = bool(skips[j]) if skips is not None else False
+            nbytes = self._message_bytes(skipped)
+            duration = (durations[k] if durations is not None
+                        else self.delay.compute_time(k, m.H, self.rng))
+            up_time = self.delay.p2p_time(nbytes, k)
+            self.compute_time += duration
+            self.comm_time += up_time
+            self.bytes_up += nbytes
+            self.seq += 1
+            msg = Message(start + duration + up_time, k, sents[j],
+                          alpha_rows[j], nbytes, self.seq,
+                          applied=not skipped)
+            self._observe_launch(k, start, msg.arrival)
+            out.append(msg)
+        return out
+
+    def _observe_launch(self, k: int, start: float, arrival: float) -> None:
+        """Per-launch hook (adaptive disciplines observe round latencies)."""
 
     def _apply_server(self, arrived):
         """Fused aggregation + replies; returns (server_time, reply nnz)."""
@@ -485,25 +635,24 @@ class GroupProtocol(Protocol):
         nnz_host = None if self.dense else np.asarray(reply_nnz)
         return server_time, nnz_host
 
-    def _account_reply(self, j, worker, server_time, nnz_host) -> float:
-        """Bill the catch-up reply; returns the worker's next start time."""
+    def _reply_billing(self, j, worker, nnz_host) -> tuple[int, float]:
+        """(bytes, link time) of arrival ``j``'s catch-up reply."""
         rbytes = (msg_filter.dense_bytes(self.d) if self.dense
                   else msg_filter.message_bytes(int(nnz_host[j])))
-        self.bytes_down += rbytes
-        down_time = self.delay.p2p_time(rbytes, worker)
-        self.comm_time += down_time
-        return server_time + down_time
+        return rbytes, self.delay.p2p_time(rbytes, worker)
 
     def process_round(self, round_index, arrived):
         server_time, nnz_host = self._apply_server(arrived)
-        # Reply accounting and relaunch interleave per worker, matching the
-        # reference's float accumulation order exactly (down, up, down, up).
-        out = []
+        # Reply billing is computed up front but ACCOUNTED inside the launch
+        # loop (via pre_account), interleaved per worker exactly like the
+        # reference's float accumulation order (down, up, down, up).
+        starts, billing = [], []
         for j, m in enumerate(arrived):
-            start = self._account_reply(j, m.worker, server_time, nnz_host)
-            out.append(self._launch_worker(m.worker, start))
+            rbytes, down_time = self._reply_billing(j, m.worker, nnz_host)
+            starts.append((m.worker, server_time + down_time))
+            billing.append((rbytes, down_time))
         self.sim_time = server_time
-        return out
+        return self._launch_workers(starts, pre_account=billing)
 
     def snapshot(self, iteration):
         return _Snapshot(iteration, self.sim_time, self.bytes_up,
@@ -512,7 +661,7 @@ class GroupProtocol(Protocol):
 
     def finalize(self, records):
         return RunResult(self.method, records, np.asarray(self.w_server),
-                         np.stack([np.asarray(a) for a in self.alpha]),
+                         np.asarray(self.alpha),
                          alpha_applied=np.asarray(self.alpha_applied))
 
 
@@ -563,6 +712,15 @@ class LagProtocol(GroupProtocol):
     catch-up reply) but applies nothing for them.  Since replies shrink as
     the system converges, the test stays calibrated: all-quiet -> replies
     ~ 0 -> uploads resume, no starvation.
+
+    The reply-energy window lives in a fixed-width device buffer
+    ``(K, lag_window)`` plus per-worker fill counts (see
+    :func:`_lag_window_append`), summed afresh each round over the live
+    entries -- an incremental running sum in f32 would accumulate
+    catastrophic cancellation once reply norms decay orders of magnitude
+    below the evicted early entries.  The scan executor
+    (:mod:`repro.core.executor`) carries the identical buffers, so both
+    executors evaluate the same laziness expression bit-for-bit.
     """
 
     HEARTBEAT_BYTES = 8
@@ -572,70 +730,38 @@ class LagProtocol(GroupProtocol):
             raise ValueError(
                 f"lag_window must be >= 1, got {method.lag_window}")
         super().__init__(problem, method, cluster, seed=seed)
-        # Rolling window of catch-up-reply squared norms per worker (device
-        # scalars); empty window => ref 0 => the first rounds always upload.
-        self._ref_hist = [
-            collections.deque(maxlen=method.lag_window) for _ in range(self.K)]
-        self._zero = jnp.zeros((), problem.X.dtype)
+        # Empty windows => ref 0 => the first rounds always upload.
+        self._ref_buf = jnp.zeros((self.K, method.lag_window),
+                                  problem.X.dtype)
+        self._ref_len = jnp.zeros((self.K,), jnp.int32)
 
-    def _ref(self, k: int):
-        """Windowed mean of worker k's recent reply energy (device scalar).
+    def _round_payloads(self, idxs):
+        (self.key, self.alpha, self.residual, alpha_rows, sents,
+         skips) = _worker_rounds_lag_fused(
+            self.key, self.w_local, self.alpha, self.residual, self._ref_buf,
+            self._ref_len, self.problem.X, self.problem.y, self.norms_sq,
+            idxs, self.problem.lam, self.n, self.sigma_p, self.method.gamma,
+            self.method.lag_xi, loss=self.problem.loss,
+            num_steps=self.method.H, comp=self.comp)
+        return alpha_rows, sents, np.asarray(skips)  # one pull per group
 
-        Summed afresh over the (<= lag_window) window: an incremental
-        running sum in f32 accumulates catastrophic cancellation once reply
-        norms decay orders of magnitude below the popped early entries.
-        """
-        hist = self._ref_hist[k]
-        if not hist:
-            return self._zero
-        return jnp.sum(jnp.stack(tuple(hist))) / len(hist)
-
-    def _launch_lag(self, k: int, start_time: float):
-        """Fused round; returns (device skip flag, message-parts tuple)."""
-        m = self.method
-        self.key, alpha_new, residual_new, sent, skip = _worker_round_lag(
-            self.key, self.w_local, self.alpha[k], self.residual[k],
-            self._ref(k), self.X_k[k], self.y_k[k], self.norms_k[k], k,
-            self.problem.lam, self.n, self.sigma_p, m.gamma, m.lag_xi,
-            loss=self.problem.loss, num_steps=m.H, comp=self.comp)
-        self.alpha[k] = alpha_new
-        self.residual[k] = residual_new
-        return skip, (k, start_time, sent, alpha_new)
-
-    def _finish_launch(self, skipped: bool, parts) -> Message:
-        k, start_time, sent, alpha_new = parts
-        nbytes = self.HEARTBEAT_BYTES if skipped else self.up_bytes
-        duration = self.delay.compute_time(k, self.method.H, self.rng)
-        up_time = self.delay.p2p_time(nbytes, k)
-        self.compute_time += duration
-        self.comm_time += up_time
-        self.bytes_up += nbytes
-        self.seq += 1
-        return Message(start_time + duration + up_time, k, sent, alpha_new,
-                       nbytes, self.seq, applied=not skipped)
-
-    def _relaunch_batched(self, starts):
-        if not starts:
-            return []
-        flags, parts = zip(*[self._launch_lag(k, s) for k, s in starts])
-        skipped = np.asarray(jnp.stack(flags))  # one pull for the whole group
-        return [self._finish_launch(bool(s), p) for s, p in zip(skipped, parts)]
-
-    def initial_messages(self):
-        return self._relaunch_batched([(k, 0.0) for k in range(self.K)])
+    def _message_bytes(self, skipped):
+        return self.HEARTBEAT_BYTES if skipped else self.up_bytes
 
     def process_round(self, round_index, arrived):
         server_time, nnz_host = self._apply_server(arrived)
-        starts = []
+        # Slide this round's reply energies into the arrived workers'
+        # windows (one fused dispatch, no host sync).
+        idxs = jnp.asarray([m.worker for m in arrived], jnp.int32)
+        self._ref_buf, self._ref_len = _lag_window_append(
+            self._ref_buf, self._ref_len, idxs, self._last_reply_sq)
+        starts, billing = [], []
         for j, m in enumerate(arrived):
-            # Slide this round's reply energy into the worker's window
-            # (a device slice, no host sync; maxlen evicts the oldest).
-            k = m.worker
-            self._ref_hist[k].append(self._last_reply_sq[j])
-            starts.append((k, self._account_reply(j, k, server_time,
-                                                  nnz_host)))
+            rbytes, down_time = self._reply_billing(j, m.worker, nnz_host)
+            starts.append((m.worker, server_time + down_time))
+            billing.append((rbytes, down_time))
         self.sim_time = server_time
-        return self._relaunch_batched(starts)
+        return self._launch_workers(starts, pre_account=billing)
 
 
 @register_protocol("sync")
@@ -690,8 +816,9 @@ class SyncProtocol(Protocol):
     def process_round(self, round_index, arrived):
         m = self.method
         self._round_update()
-        step_compute = max(self.delay.compute_time(k, m.H, self.rng)
-                           for k in range(self.K))
+        # One per-round vector draw (same host-RNG stream as K scalar calls
+        # in worker order -- the order the pinned trajectories consumed).
+        step_compute = float(np.max(self.delay.sample_round(m.H, self.rng)))
         step_comm = self.delay.allreduce_time(self.d)
         self.sim_time += step_compute + step_comm
         self.compute_time += step_compute
@@ -839,9 +966,8 @@ class AdaptiveBProtocol(GroupProtocol):
             return self.K  # the staleness-bounding full barrier stays
         return self._B
 
-    def _launch_worker(self, k, start_time):
-        msg = super()._launch_worker(k, start_time)
-        latency = msg.arrival - start_time
+    def _observe_launch(self, k, start, arrival):
+        latency = arrival - start
         beta = self.method.adaptive_ewma
         if np.isnan(self._latency[k]):
             self._latency[k] = latency
@@ -851,7 +977,6 @@ class AdaptiveBProtocol(GroupProtocol):
             cut = np.quantile(self._latency, self.method.adaptive_quantile)
             self._B = int(np.clip(int(np.sum(self._latency <= cut)),
                                   self._b_lo, self._b_hi))
-        return msg
 
 
 # ---------------------------------------------------------------------------
@@ -879,8 +1004,8 @@ def _materialize_records(snaps: list[_Snapshot], problem: objectives.Problem,
     elif eval_mode == "batched":
         ws = jnp.stack([s.w for s in snaps])
         alphas = jnp.stack([s.alpha for s in snaps])
-        p, dv, gap, gap_srv = _eval_batched(ws, alphas, problem.X, problem.y,
-                                            problem.lam, loss=problem.loss)
+        p, dv, gap, gap_srv = _eval_bucketed(ws, alphas, problem.X, problem.y,
+                                             problem.lam, loss=problem.loss)
         rows = list(zip(np.asarray(p, np.float64), np.asarray(dv, np.float64),
                         np.asarray(gap, np.float64),
                         np.asarray(gap_srv, np.float64)))

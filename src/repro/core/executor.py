@@ -1,0 +1,580 @@
+"""Scan-fused lockstep executor: whole runs as ONE compiled computation.
+
+The event engine (:mod:`repro.core.engine` driven by
+:class:`repro.api.session.Session`) pays one jitted dispatch per worker group
+and per server round.  That is already ~100x fewer host<->device round trips
+than the reference loops, but for protocols with *no data-dependent host
+control flow* even the per-round dispatch is overhead: the entire run can be
+a single ``lax.scan`` over rounds.  This module is that second execution
+backend -- selected via ``Session(executor="scan")`` or automatically under
+``executor="auto"`` (the default).
+
+Two scan paths:
+
+* **Lockstep** (``sync`` / ``cocoa`` / ``cocoa_plus``): every round is a
+  K-barrier with static byte accounting, so timing is fully host-computable.
+  Compute-time streams are pre-sampled by
+  :meth:`repro.core.delays.DelayModel.sample_stream` (same host-RNG order as
+  the event loop, so trajectories are bit-identical), the model state
+  ``(w, alpha)`` evolves in one donated scan dispatch, and deferred gap
+  certificates reuse the engine's bucketed ``lax.map`` evaluation.
+
+* **LAG** (``lag``): B-of-K arrivals couple timing to device values (reply
+  ``nnz`` -> reply bytes -> link time -> arrival order), so the *event queue
+  itself* moves in-graph: per-worker arrival times and sequence numbers live
+  in the scan carry, the B earliest messages are selected with a
+  lexicographic ``lax.sort``, and all timing arithmetic runs in float64 on
+  device (traced under ``jax.experimental.enable_x64``; model math stays
+  explicitly float32, and ``sdca`` pins its PRNG dtypes, so the f32
+  trajectory is bit-identical to the event executor's).  Eligible whenever
+  the delay model can pre-sample ``(round, worker)`` compute times without
+  changing the event executor's RNG stream (``sample_stream`` contract);
+  ``markov`` and jittered ``constant`` cannot, and ``executor="auto"`` falls
+  back to the event queue for them.
+
+Protocols with genuinely host-adaptive control flow (``group``'s
+interleaved accounting pins, ``async``, ``adaptive_b``'s observed-latency
+feedback) keep the event queue -- they still benefit from the engine's fused
+multi-arrival server apply and one-dispatch group relaunches.
+
+Bit-for-bit contract: for every supported (protocol, delay) cell the scan
+executor reproduces the event executor's ``RunResult`` exactly --
+trajectories, byte/time accounting, and gap certificates (pinned by
+tests/test_executor.py across the zoo grid).  ``STATS`` counts compiled-call
+and retrace events so tests can assert the one-dispatch-per-run contract.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compress as compress_lib
+from repro.core import engine
+from repro.core import objectives
+from repro.core.acpd import MethodConfig, RunResult
+from repro.core.simulate import ClusterModel
+
+LOCKSTEP_PROTOCOLS = ("sync", "cocoa", "cocoa_plus")
+SCAN_PROTOCOLS = LOCKSTEP_PROTOCOLS + ("lag",)
+
+# Dispatch accounting for the 1-dispatch-per-run contract: "*_calls" counts
+# compiled executions (one per run), "*_traces" counts retraces (flat across
+# same-shape runs).  tests/test_executor.py asserts on these.
+STATS = {"lockstep_calls": 0, "lockstep_traces": 0,
+         "lag_calls": 0, "lag_traces": 0,
+         "sweep_calls": 0, "sweep_traces": 0}
+
+
+def reset_stats() -> None:
+    for k in STATS:
+        STATS[k] = 0
+
+
+# ---------------------------------------------------------------------------
+# Eligibility.
+# ---------------------------------------------------------------------------
+
+
+def scan_supported(method: MethodConfig, cluster: ClusterModel, *,
+                   eval_mode: str = "batched",
+                   target_gap: float | None = None,
+                   time_budget: float | None = None) -> tuple[bool, str]:
+    """Can this run compile to one scan?  Returns (ok, reason-if-not)."""
+    if method.exact_dual_feedback:
+        return False, ("exact_dual_feedback needs a host lstsq per round "
+                       "(reference path only)")
+    if target_gap is not None or eval_mode == "stream":
+        return False, ("streamed certificates / target_gap early stop need "
+                       "the per-round event loop")
+    if time_budget is not None:
+        return False, "time_budget early stop needs the per-round event loop"
+    if method.protocol in LOCKSTEP_PROTOCOLS:
+        return True, ""
+    if method.protocol == "lag":
+        model = cluster.make_delay()
+        if model.vector_sampled or model.deterministic:
+            return True, ""
+        return False, (
+            f"delay model {cluster.delay_model!r} draws per-launch host "
+            f"randomness in arrival order, which cannot be pre-sampled "
+            f"into a (round, worker) stream")
+    return False, (
+        f"protocol {method.protocol!r} has host-adaptive control flow "
+        f"(scan-capable protocols: {SCAN_PROTOCOLS})")
+
+
+# ---------------------------------------------------------------------------
+# Run container handed back to the Session.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundAccount:
+    """Host-side accounting of one server round (cumulative totals)."""
+
+    arrivals: int
+    is_sync: bool
+    sim_time: float
+    bytes_up: int
+    bytes_down: int
+    compute_time: float
+    comm_time: float
+
+
+@dataclasses.dataclass
+class ScanRun:
+    """Everything a Session needs to emit the run's event stream.
+
+    ``eval_ws``/``eval_alphas`` hold the eval-boundary snapshots as ONE
+    stacked array each (gathered from the scan outputs in a single op --
+    per-snapshot slicing would reintroduce an O(rounds) dispatch tail).
+    """
+
+    method: MethodConfig
+    rounds: list[RoundAccount]
+    eval_rounds: list[int]  # 0-based round index per eval boundary
+    eval_ws: jax.Array | None
+    eval_alphas: jax.Array | None
+    w: jax.Array
+    alpha: jax.Array
+    alpha_applied: jax.Array | None = None
+
+    def materialize_records(self, problem, eval_mode: str):
+        """The run's RunRecords; same certificate ops as the event path
+        (``batched``: one bucketed ``lax.map``; ``replay``: eager oracle)."""
+        from repro.core.acpd import RunRecord
+
+        if not self.eval_rounds:
+            return []
+        if eval_mode == "replay":
+            rows = []
+            for i in range(len(self.eval_rounds)):
+                cert = objectives.gap_certificate(
+                    problem, self.eval_alphas[i], w=self.eval_ws[i])
+                rows.append((cert["primal"], cert["dual"], cert["gap"],
+                             cert["gap_server"]))
+        elif eval_mode == "batched":
+            p, dv, gap, gap_srv = engine._eval_bucketed(
+                self.eval_ws, self.eval_alphas, problem.X, problem.y,
+                problem.lam, loss=problem.loss)
+            rows = list(zip(np.asarray(p, np.float64),
+                            np.asarray(dv, np.float64),
+                            np.asarray(gap, np.float64),
+                            np.asarray(gap_srv, np.float64)))
+        else:
+            raise ValueError(f"unknown eval_mode {eval_mode!r}")
+        records = []
+        for r, (p_, dv_, gap_, gs_) in zip(self.eval_rounds, rows):
+            a = self.rounds[r]
+            records.append(RunRecord(
+                iteration=r + 1, sim_time=a.sim_time, gap=float(gap_),
+                gap_server=float(gs_), primal=float(p_), dual=float(dv_),
+                bytes_up=a.bytes_up, bytes_down=a.bytes_down,
+                compute_time=a.compute_time, comm_time=a.comm_time))
+        return records
+
+    def finalize(self, records) -> RunResult:
+        return RunResult(
+            self.method, records, np.asarray(self.w), np.asarray(self.alpha),
+            alpha_applied=(None if self.alpha_applied is None
+                           else np.asarray(self.alpha_applied)))
+
+
+def run_scan(problem: objectives.Problem, method: MethodConfig,
+             cluster: ClusterModel, *, num_outer: int, seed: int,
+             eval_every: int, norms_sq=None) -> ScanRun:
+    """Execute one run on the scan backend (caller checked eligibility).
+
+    ``norms_sq``: optional precomputed per-row squared norms (the Session's
+    protocol instance already holds them; passing them avoids a second full
+    pass over ``X``).
+    """
+    if norms_sq is None:
+        norms_sq = jnp.sum(problem.X * problem.X, axis=-1)
+    if method.protocol in LOCKSTEP_PROTOCOLS:
+        return _run_lockstep(problem, method, cluster, num_outer=num_outer,
+                             seed=seed, eval_every=eval_every,
+                             norms_sq=norms_sq)
+    if method.protocol == "lag":
+        return _run_lag(problem, method, cluster, num_outer=num_outer,
+                        seed=seed, eval_every=eval_every, norms_sq=norms_sq)
+    raise ValueError(f"protocol {method.protocol!r} is not scan-capable "
+                     f"(supported: {SCAN_PROTOCOLS})")
+
+
+def _eval_indices(num_rounds: int, eval_every: int) -> list[int]:
+    """0-based round indices of eval boundaries (iteration % eval_every == 0)."""
+    return [it - 1 for it in range(1, num_rounds + 1) if it % eval_every == 0]
+
+
+# ---------------------------------------------------------------------------
+# Lockstep path: sync / cocoa / cocoa_plus.
+# ---------------------------------------------------------------------------
+
+
+def lockstep_run_traced(key, X, y, norms_sq, lam, n, sigma_p, gamma, *, loss,
+                        num_steps, solver, length):
+    """The whole lockstep run as a traced computation (scan over rounds,
+    workers vmapped inside each round).
+
+    The round body IS the event engine's (``engine._lockstep_round``, the
+    single definition both backends inline -- scalars stay traced operands;
+    constant-folding them changes XLA's simplifications and breaks
+    bit-equality).  Shared by the single-run jit below and the batched sweep
+    runner (:mod:`repro.api.sweep`), which maps/vmaps it over run variants.
+    """
+    K, n_k, d = X.shape
+    w0 = jnp.zeros((d,), X.dtype)
+    alpha0 = jnp.zeros((K, n_k), X.dtype)
+
+    def step(carry, _):
+        key, w, alpha = carry
+        key, w, alpha = engine._lockstep_round(
+            key, w, alpha, X, y, norms_sq, lam, n, sigma_p, gamma, loss=loss,
+            num_steps=num_steps, solver=solver)
+        return (key, w, alpha), (w, alpha)
+
+    (key, w, alpha), (ws, alphas) = jax.lax.scan(
+        step, (key, w0, alpha0), None, length=length)
+    return w, alpha, ws, alphas
+
+
+@partial(jax.jit, static_argnames=("loss", "num_steps", "solver", "length"))
+def _lockstep_scan(key, X, y, norms_sq, lam, n, sigma_p, gamma, *, loss,
+                   num_steps, solver, length):
+    STATS["lockstep_traces"] += 1  # trace-time side effect, not per call
+    return lockstep_run_traced(key, X, y, norms_sq, lam, n, sigma_p, gamma,
+                               loss=loss, num_steps=num_steps, solver=solver,
+                               length=length)
+
+
+def lockstep_solver(method: MethodConfig):
+    """The local solver a lockstep protocol runs: the CoCoA lineage swaps it
+    via ``MethodConfig.local_solver``; the hard-wired ``sync`` entry is the
+    registry's ``sdca`` (the same vmapped computation)."""
+    from repro.core import solvers as solvers_lib
+
+    return solvers_lib.get_solver(
+        method.local_solver if method.protocol != "sync" else "sdca")
+
+
+def lockstep_accounts(method: MethodConfig, cluster: ClusterModel, d: int,
+                      *, num_rounds: int, seed: int) -> list[RoundAccount]:
+    """Host-side timing/byte accounting of a lockstep run.
+
+    Fully independent of device values: compute streams are pre-sampled
+    (same host-RNG order as the event loop's one-K-vector-per-round draws,
+    so the floats are bit-identical), allreduce time and ring bytes are
+    static per round.
+    """
+    K = cluster.num_workers
+    delay = cluster.make_delay()
+    rng = np.random.default_rng(seed)
+    durations = delay.sample_stream(num_rounds, method.H, rng, lockstep=True)
+    step_comm = delay.allreduce_time(d)
+    phase = (K - 1) * d * 4  # ring reduce-scatter == all-gather
+    sim = comp_t = comm_t = 0.0
+    bu = bd = 0
+    rounds: list[RoundAccount] = []
+    for r in range(num_rounds):
+        step_compute = float(np.max(durations[r]))
+        sim += step_compute + step_comm
+        comp_t += step_compute
+        comm_t += step_comm
+        bu += phase
+        bd += phase
+        rounds.append(RoundAccount(K, True, sim, bu, bd, comp_t, comm_t))
+    return rounds
+
+
+def _run_lockstep(problem, method, cluster, *, num_outer, seed, eval_every,
+                  norms_sq):
+    K, n_k, d = problem.X.shape
+    R = num_outer
+    if R == 0:
+        dt = problem.X.dtype
+        return ScanRun(method, [], [], None, None, jnp.zeros((d,), dt),
+                       jnp.zeros((K, n_k), dt))
+    rounds = lockstep_accounts(method, cluster, d, num_rounds=R, seed=seed)
+    sigma_p = method.resolved_sigma_prime(K)
+    STATS["lockstep_calls"] += 1
+    w, alpha, ws, alphas = _lockstep_scan(
+        jax.random.key(seed), problem.X, problem.y, norms_sq, problem.lam,
+        K * n_k, sigma_p, method.gamma, loss=problem.loss,
+        num_steps=method.H, solver=lockstep_solver(method), length=R)
+
+    evals = _eval_indices(R, eval_every)
+    idx = jnp.asarray(evals, jnp.int32)
+    return ScanRun(method, rounds, evals, ws[idx], alphas[idx], w, alpha)
+
+
+# ---------------------------------------------------------------------------
+# LAG path: the B-of-K event queue in-graph.
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit,
+         static_argnames=("loss", "num_steps", "comp", "length", "lag_window",
+                          "dense_reply_bytes"))
+def _lag_scan(key, X, y, norms_sq, lam, n, sigma_p, gamma, xi, durations,
+              needs, up_bytes, heartbeat_bytes, latency,
+              bandwidth, link_factors, *, loss, num_steps, comp, length,
+              lag_window, dense_reply_bytes):
+    """The whole LAG run in one dispatch: in-graph B-of-K event queue.
+
+    Carries per-worker in-flight message state (payload, arrival time f64,
+    sequence number) alongside the model state; each round sorts arrivals
+    lexicographically by ``(arrival, seq)`` -- exactly the host heap's pop
+    order -- applies the group with the event engine's op sequence, then
+    relaunches the arrived workers under a ``lax.cond``-guarded rank scan
+    that splits the global PRNG key only for launched workers (the event
+    path's sequential split chain).  Must be traced under ``enable_x64`` so
+    the timing arithmetic is float64 like the host's; all model math is
+    pinned float32.  ``dense_reply_bytes`` is 0 for sparse compressors
+    (replies billed on in-graph nnz) or the static dense byte count.
+    """
+    STATS["lag_traces"] += 1  # trace-time side effect, not per call
+    K, n_k, d = X.shape
+    dt = X.dtype
+    f64 = jnp.float64
+    i64 = jnp.int64
+    iota = jnp.arange(K, dtype=i64)
+
+    def launch(args, *, initial):
+        """Rank-scan relaunching the first ``need`` ranks of ``order``."""
+        (key, alpha, residual, payload, applied, arrival, seq, seq_ctr,
+         bytes_up, bytes_down, compute_t, comm_t, ref_buf, ref_len, w_local,
+         need, order, starts, reply_bytes, down_times, dur_row) = args
+
+        def do_launch(carry, xs):
+            (key, alpha, residual, payload, applied, arrival, seq,
+             compute_t, comm_t, bytes_up, bytes_down) = carry
+            j, k, start, rbytes, down_t = xs
+            ref_k = engine._lag_reference(ref_buf[k], ref_len[k], xi)
+            key, alpha_k, res_k, dw, sent = engine._local_round(
+                key, w_local, alpha[k], residual[k], X[k], y[k], norms_sq[k],
+                k, lam, n, sigma_p, gamma, loss=loss, num_steps=num_steps,
+                comp=comp)
+            send_sq = jnp.vdot(sent, sent)
+            skip = send_sq < ref_k
+            sent = jnp.where(skip, jnp.zeros_like(sent), sent)
+            res_k = jnp.where(skip, dw, res_k)
+            nbytes = jnp.where(skip, heartbeat_bytes, up_bytes)
+            # Host accounting replica, per worker in arrival order:
+            # down-billing, compute, up-billing (the reference float order).
+            dur = dur_row[k]
+            up_t = latency + nbytes * link_factors[k] / bandwidth
+            bytes_down = bytes_down + rbytes
+            comm_t = comm_t + down_t
+            compute_t = compute_t + dur
+            comm_t = comm_t + up_t
+            bytes_up = bytes_up + nbytes
+            alpha = alpha.at[k].set(alpha_k)
+            residual = residual.at[k].set(res_k)
+            payload = payload.at[k].set(sent)
+            applied = applied.at[k].set(~skip)
+            arrival = arrival.at[k].set(start + dur + up_t)
+            seq = seq.at[k].set(seq_ctr + j + 1)
+            return (key, alpha, residual, payload, applied, arrival, seq,
+                    compute_t, comm_t, bytes_up, bytes_down), None
+
+        def no_op(carry, xs):
+            return carry, None
+
+        def rank_body(carry, xs):
+            return jax.lax.cond(xs[0] < need, do_launch, no_op, carry, xs)
+
+        init = (key, alpha, residual, payload, applied, arrival, seq,
+                compute_t, comm_t, bytes_up, bytes_down)
+        if initial:
+            # No ambiguity on the first launch: every worker, worker order.
+            out, _ = jax.lax.scan(do_launch, init,
+                                  (iota, order, starts, reply_bytes,
+                                   down_times))
+        else:
+            out, _ = jax.lax.scan(rank_body, init,
+                                  (iota, order, starts, reply_bytes,
+                                   down_times))
+        (key, alpha, residual, payload, applied, arrival, seq, compute_t,
+         comm_t, bytes_up, bytes_down) = out
+        return (key, alpha, residual, payload, applied, arrival, seq,
+                seq_ctr + need, bytes_up, bytes_down, compute_t, comm_t)
+
+    # --- initial state + the t=0 launch wave ------------------------------
+    zero64 = jnp.zeros((), f64)
+    state = dict(
+        key=key,
+        w_server=jnp.zeros((d,), dt),
+        dw_tilde=jnp.zeros((K, d), dt),
+        w_local=jnp.zeros((K, d), dt),
+        alpha=jnp.zeros((K, n_k), dt),
+        alpha_applied=jnp.zeros((K, n_k), dt),
+        residual=jnp.zeros((K, d), dt),
+        payload=jnp.zeros((K, d), dt),
+        applied=jnp.ones((K,), bool),
+        ref_buf=jnp.zeros((K, lag_window), dt),
+        ref_len=jnp.zeros((K,), jnp.int32),
+        arrival=jnp.zeros((K,), f64),
+        seq=jnp.zeros((K,), i64),
+        seq_ctr=jnp.zeros((), i64),
+        bytes_up=jnp.zeros((), i64),
+        bytes_down=jnp.zeros((), i64),
+        compute_t=zero64,
+        comm_t=zero64,
+        sim_time=zero64,
+    )
+    (state["key"], state["alpha"], state["residual"], state["payload"],
+     state["applied"], state["arrival"], state["seq"], state["seq_ctr"],
+     state["bytes_up"], state["bytes_down"], state["compute_t"],
+     state["comm_t"]) = launch(
+        (state["key"], state["alpha"], state["residual"], state["payload"],
+         state["applied"], state["arrival"], state["seq"], state["seq_ctr"],
+         state["bytes_up"], state["bytes_down"], state["compute_t"],
+         state["comm_t"], state["ref_buf"], state["ref_len"],
+         state["w_local"], jnp.asarray(K, i64), iota, jnp.zeros((K,), f64),
+         jnp.zeros((K,), i64), jnp.zeros((K,), f64), durations[0]),
+        initial=True)
+
+    # --- the round loop ---------------------------------------------------
+
+    def round_step(carry, xs):
+        s = dict(carry)
+        need, dur_row = xs
+        need = need.astype(i64)
+        # Pop order: lexicographic (arrival, seq) -- the host heap's order.
+        _, _, perm = jax.lax.sort((s["arrival"], s["seq"], iota), num_keys=2)
+        sorted_arrival = s["arrival"][perm]
+        server_time = sorted_arrival[need - 1]
+        sel = iota < need
+
+        # Aggregation, summed in arrival order over exactly `need` payloads.
+        def agg(j, tot):
+            return tot + s["payload"][perm[j]]
+
+        total = jax.lax.fori_loop(0, need, agg, jnp.zeros((d,), dt))
+        w_server = s["w_server"] + gamma * total
+        dw_tilde = s["dw_tilde"] + gamma * total[None, :]
+
+        snap_rows = s["alpha"][perm]  # == each message's dual snapshot
+        app_rows = s["applied"][perm]
+        mask = (sel & app_rows)[:, None]
+        alpha_applied = s["alpha_applied"].at[perm].set(
+            jnp.where(mask, snap_rows, s["alpha_applied"][perm]))
+        replies = dw_tilde[perm]
+        reply_nnz = jnp.sum(replies != 0, axis=1)
+        reply_sq = jnp.sum(replies * replies, axis=1)
+        w_rows = s["w_local"][perm]
+        w_local = s["w_local"].at[perm].set(
+            jnp.where(sel[:, None], w_rows + replies, w_rows))
+        dw_tilde = dw_tilde.at[perm].set(
+            jnp.where(sel[:, None], jnp.zeros_like(replies), dw_tilde[perm]))
+
+        # Reply-energy windows (the op sequence of _lag_window_append,
+        # masked to the arrived workers).
+        rows = s["ref_buf"][perm]
+        lens = s["ref_len"][perm]
+        full = (lens >= lag_window)[:, None]
+        shifted = jnp.where(full, jnp.roll(rows, -1, axis=1), rows)
+        pos = jnp.minimum(lens, lag_window - 1)
+        new_rows = shifted.at[jnp.arange(K), pos].set(reply_sq)
+        ref_buf = s["ref_buf"].at[perm].set(
+            jnp.where(sel[:, None], new_rows, rows))
+        ref_len = s["ref_len"].at[perm].set(
+            jnp.where(sel, jnp.minimum(lens + 1, lag_window), lens))
+
+        # Reply billing per rank (same arithmetic as DelayModel.p2p_time).
+        if dense_reply_bytes:
+            reply_bytes = jnp.full((K,), dense_reply_bytes, i64)
+        else:
+            reply_bytes = (reply_nnz * 8).astype(i64)
+        factors = link_factors[perm]
+        down_times = latency + reply_bytes * factors / bandwidth
+        starts = server_time + down_times
+
+        (key, alpha, residual, payload, applied, arrival, seq, seq_ctr,
+         bytes_up, bytes_down, compute_t, comm_t) = launch(
+            (s["key"], s["alpha"], s["residual"], s["payload"], s["applied"],
+             s["arrival"], s["seq"], s["seq_ctr"], s["bytes_up"],
+             s["bytes_down"], s["compute_t"], s["comm_t"], ref_buf, ref_len,
+             w_local, need, perm, starts, reply_bytes, down_times, dur_row),
+            initial=False)
+
+        s.update(key=key, w_server=w_server, dw_tilde=dw_tilde,
+                 w_local=w_local, alpha=alpha, alpha_applied=alpha_applied,
+                 residual=residual, payload=payload, applied=applied,
+                 ref_buf=ref_buf, ref_len=ref_len, arrival=arrival, seq=seq,
+                 seq_ctr=seq_ctr, bytes_up=bytes_up, bytes_down=bytes_down,
+                 compute_t=compute_t, comm_t=comm_t, sim_time=server_time)
+        ys = (w_server, alpha_applied, server_time, bytes_up, bytes_down,
+              compute_t, comm_t)
+        return s, ys
+
+    state, ys = jax.lax.scan(round_step, state,
+                             (needs, durations[1:]), length=length)
+    return state, ys
+
+
+def _run_lag(problem, method, cluster, *, num_outer, seed, eval_every,
+             norms_sq):
+    from jax.experimental import enable_x64
+
+    K, n_k, d = problem.X.shape
+    T = method.T
+    R = num_outer * T
+    delay = cluster.make_delay()
+    rng = np.random.default_rng(seed)
+    # Row 0 feeds the t=0 launch wave, row 1+r feeds round r -- exactly the
+    # event executor's one-sample_round-per-_launch_workers consumption.
+    durations = delay.sample_stream(R + 1, method.H, rng, lockstep=False)
+    if durations is None:  # caller should have checked scan_supported
+        raise ValueError(
+            f"delay model {cluster.delay_model!r} cannot pre-sample a "
+            f"(round, worker) stream; use executor='event'")
+    needs = np.asarray([K if r % T == T - 1 else min(method.B, K)
+                        for r in range(R)], np.int64)
+    comp = compress_lib.for_method(method, d)
+    dense = isinstance(comp, compress_lib.Dense)
+    up_bytes = comp.wire_bytes(d)
+    sigma_p = method.resolved_sigma_prime(K)
+    if R == 0:
+        dt = problem.X.dtype
+        return ScanRun(method, [], [], None, None, jnp.zeros((d,), dt),
+                       jnp.zeros((K, n_k), dt),
+                       alpha_applied=jnp.zeros((K, n_k), dt))
+
+    STATS["lag_calls"] += 1
+    with enable_x64():
+        state, ys = _lag_scan(
+            jax.random.key(seed), problem.X, problem.y, norms_sq,
+            jnp.float32(problem.lam), jnp.int32(K * n_k),
+            jnp.float32(sigma_p), jnp.float32(method.gamma),
+            jnp.float32(method.lag_xi),
+            jnp.asarray(durations, jnp.float64),
+            jnp.asarray(needs, jnp.int64),
+            jnp.asarray(up_bytes, jnp.int64),
+            jnp.asarray(engine.LagProtocol.HEARTBEAT_BYTES, jnp.int64),
+            jnp.asarray(cluster.latency, jnp.float64),
+            jnp.asarray(cluster.bandwidth, jnp.float64),
+            jnp.asarray(delay.link_factors(), jnp.float64),
+            loss=problem.loss, num_steps=method.H, comp=comp, length=R,
+            lag_window=method.lag_window,
+            dense_reply_bytes=d * 4 if dense else 0)
+
+    ws, alpha_applied_rows, sim, bu, bd, ct, cm = ys
+    sim = np.asarray(sim)
+    bu, bd = np.asarray(bu), np.asarray(bd)
+    ct, cm = np.asarray(ct), np.asarray(cm)
+    rounds = [RoundAccount(int(needs[r]), r % T == T - 1, float(sim[r]),
+                           int(bu[r]), int(bd[r]), float(ct[r]),
+                           float(cm[r]))
+              for r in range(R)]
+    evals = _eval_indices(R, eval_every)
+    idx = jnp.asarray(evals, jnp.int32)
+    return ScanRun(method, rounds, evals, ws[idx], alpha_applied_rows[idx],
+                   state["w_server"], state["alpha"],
+                   alpha_applied=state["alpha_applied"])

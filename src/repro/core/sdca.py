@@ -119,7 +119,10 @@ def solve_subproblem(
 ) -> LocalSolveResult:
     """H sequential SDCA steps with uniform sampling (Alg. 2 line 4)."""
     n_k = X.shape[0]
-    idx = jax.random.randint(key, (num_steps,), 0, n_k)
+    # Explicit dtype: the default follows the x64 flag, and the scan-fused
+    # executor traces this under enable_x64 -- int64 draws would consume the
+    # PRNG differently and break executor bit-equivalence.
+    idx = jax.random.randint(key, (num_steps,), 0, n_k, dtype=jnp.int32)
     return solve_subproblem_indices(
         w_eff, alpha, X, y, norms_sq, lam, n_global, sigma_prime, idx, loss=loss)
 
@@ -150,7 +153,7 @@ def sdca_reference(
     """
     n, d = X.shape
     norms_sq = jnp.sum(X * X, axis=-1)
-    idx = jax.random.randint(key, (num_epochs * n,), 0, n)
+    idx = jax.random.randint(key, (num_epochs * n,), 0, n, dtype=jnp.int32)
 
     def body(carry, i):
         alpha, w = carry

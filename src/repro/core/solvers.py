@@ -81,7 +81,7 @@ def solve_subproblem_accelerated(
         momentum = beta * (dalpha - dalpha_prev)
         da_y = dalpha + momentum
         v_y = v + X.T @ momentum / (lam * n_global)
-        idx = jax.random.randint(k, (inner,), 0, n_k)
+        idx = jax.random.randint(k, (inner,), 0, n_k, dtype=jnp.int32)
         res = solve_subproblem_indices(
             w_eff + sigma_prime * v_y, alpha + da_y, X, y, norms_sq, lam,
             n_global, sigma_prime, idx, loss=loss)

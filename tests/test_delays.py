@@ -168,6 +168,79 @@ def test_worker_aware_model_refused_on_legacy_delegation_path():
 
 
 # ---------------------------------------------------------------------------
+# Vectorized / pre-sampled draws: the RNG stream must not move.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("delay,params", [
+    ("constant", {}),
+    ("shifted_exponential", {"tail_mean": 0.7}),
+    ("pareto", {"shape": 1.8, "scale": 0.5}),
+    ("markov", {}),
+])
+def test_sample_round_matches_scalar_draw_stream(delay, params):
+    """One size-K ``sample_round`` draw must be bit-equal to K sequential
+    ``compute_time`` calls in worker order -- the contract that lets the
+    event executor vectorize per-round sampling (and the scan executor
+    pre-sample whole streams) without moving any pinned trajectory."""
+    c = _cluster(delay_model=delay, delay_params=params, jitter=0.2,
+                 straggler_sigma=3.0)
+    vec = c.make_delay().sample_round(100, np.random.default_rng(11))
+    rng = np.random.default_rng(11)
+    model = c.make_delay()
+    scalars = np.asarray([model.compute_time(k, 100, rng) for k in range(K)])
+    np.testing.assert_array_equal(vec, scalars)
+
+
+def test_sample_stream_lockstep_matches_per_round_consumption():
+    """A pre-sampled (rounds, K) lockstep stream consumes the RNG exactly
+    like per-round ``sample_round`` calls (any model, stateful included)."""
+    for delay in ("shifted_exponential", "markov"):
+        c = _cluster(delay_model=delay)
+        stream = c.make_delay().sample_stream(5, 100,
+                                              np.random.default_rng(3),
+                                              lockstep=True)
+        rng = np.random.default_rng(3)
+        model = c.make_delay()
+        rows = np.stack([model.sample_round(100, rng) for _ in range(5)])
+        np.testing.assert_array_equal(stream, rows)
+
+
+def test_sample_stream_group_mode_refuses_order_dependent_models():
+    """Group-family pre-sampling is only offered when the (round, worker)
+    assignment cannot change the event executor's stream: vectorized or
+    deterministic models yes, markov / jittered constant no."""
+    rng = np.random.default_rng(0)
+    assert _cluster(delay_model="pareto").make_delay().sample_stream(
+        3, 10, rng) is not None
+    assert _cluster().make_delay().sample_stream(3, 10, rng) is not None
+    assert _cluster(jitter=0.5).make_delay().sample_stream(3, 10, rng) is None
+    assert _cluster(delay_model="markov").make_delay().sample_stream(
+        3, 10, rng) is None
+
+
+def test_vector_sampled_flags():
+    assert _cluster(delay_model="shifted_exponential").make_delay(
+        ).vector_sampled
+    assert _cluster(delay_model="pareto").make_delay().vector_sampled
+    assert not _cluster().make_delay().vector_sampled
+    assert not _cluster(delay_model="markov").make_delay().vector_sampled
+
+
+def test_link_factors_expose_p2p_arithmetic():
+    """``p2p_time(nbytes, k) == latency + nbytes * f_k / bandwidth`` exactly
+    -- the expression in-graph executors replicate."""
+    for delay, params in (("constant", {}),
+                          ("bandwidth_coupled", {"link_slowdown": 8.0})):
+        c = _cluster(delay_model=delay, delay_params=params)
+        model = c.make_delay()
+        f = model.link_factors()
+        for k in range(K):
+            assert model.p2p_time(4096, k) == \
+                c.latency + 4096 * f[k] / c.bandwidth
+
+
+# ---------------------------------------------------------------------------
 # Bandwidth-coupled: delay billed on the compressor's own byte formula.
 # ---------------------------------------------------------------------------
 

@@ -23,7 +23,8 @@ def _python_blocks(path: pathlib.Path) -> list[str]:
 @pytest.mark.parametrize("md", ["README.md", "ROADMAP.md",
                                 "docs/architecture.md",
                                 "docs/extending-protocols.md",
-                                "docs/extending-compressors.md"])
+                                "docs/extending-compressors.md",
+                                "docs/performance.md"])
 def test_markdown_links_resolve(md):
     path = ROOT / md
     assert path.exists(), md
@@ -32,7 +33,8 @@ def test_markdown_links_resolve(md):
 
 
 @pytest.mark.parametrize("guide", ["docs/extending-protocols.md",
-                                   "docs/extending-compressors.md"])
+                                   "docs/extending-compressors.md",
+                                   "docs/performance.md"])
 def test_extension_guide_examples_run_as_is(guide):
     """The acceptance bar for the guides: their code is real. All python
     blocks of a guide share one namespace and must run top to bottom
