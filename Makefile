@@ -4,7 +4,8 @@
 
 PY ?= python
 
-.PHONY: check test docs-check bench-quick bench-engine-quick bench
+.PHONY: check test docs-check bench-quick bench-engine-quick \
+	bench-sweep-quick bench
 
 check: test docs-check bench-quick
 
@@ -24,6 +25,14 @@ bench-quick:
 # it-still-runs gate (no perf thresholds enforced -- numbers are informative).
 bench-engine-quick:
 	PYTHONPATH=src $(PY) -m benchmarks.run --quick --only engine
+
+# Sharded-sweep smoke on 4 fake host devices: exercises the mesh path
+# (shard="cells"/"workers" through launch/mesh + shard_map) on every PR;
+# cell failures land in the JSON dump per the bench failure-artifact
+# convention (experiments/bench/sweep_scaling.json "errors").
+bench-sweep-quick:
+	XLA_FLAGS=--xla_force_host_platform_device_count=4 PYTHONPATH=src \
+		$(PY) -m benchmarks.run --quick --only sweep
 
 bench:
 	PYTHONPATH=src $(PY) -m benchmarks.run

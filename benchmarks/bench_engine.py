@@ -62,8 +62,10 @@ _JIT_SITES = (
                            "_worker_rounds_fused", "_worker_rounds_lag_fused",
                            "_server_apply_fused", "_lag_window_append",
                            "_eval_batched")),
-    ("repro.core.executor", ("_lockstep_scan", "_lag_scan")),
-    ("repro.api.sweep", ("_sweep_scan",)),
+    ("repro.core.executor", ("_lockstep_scan", "_lockstep_gap_scan",
+                             "_lag_scan")),
+    ("repro.api.sweep", ("_sweep_scan", "_sweep_scan_workers",
+                         "_lag_sweep_scan")),
 )
 
 

@@ -1,0 +1,222 @@
+"""Sweep scaling: the sharded one-compiled-call grid vs its alternatives.
+
+For each regime (overhead-bound tiny cells, a zoo-sized cell, compute-bound
+large cells) this measures the same seed x gamma lockstep grid four ways --
+ONE sharded ``api.run_sweep`` call (``shard="auto"``: the cell axis over the
+local device mesh), the unsharded vmap call, and per-cell ``Session`` runs
+on both executors -- plus a lag x delay x seed grid (the delay axis batched
+as traced operands).  Wall clock and device-dispatch counts per regime go to
+``experiments/bench/sweep_scaling.json``; ``benchmarks/run.py`` folds the
+headline numbers into the top-level ``BENCH_SWEEP.json`` trajectory so perf
+regressions are visible across PRs.
+
+Honest-asymptote convention (PR 4): every number is reported against the
+hardware actually present.  ``n_devices`` counts XLA devices (CI fakes 4 via
+``--xla_force_host_platform_device_count=4``; ``make bench-sweep-quick``
+does the same) and ``n_cores`` the physical cores backing them -- on a
+2-core host the unsharded vmap baseline already runs at ~1.5 cores of
+intra-op parallelism, so cell-sharding can only recover the idle remainder
+(~1.5x on compute-bound cells, <1x in the overhead regime, where the
+one-compiled-call batching itself -- 3-16x over per-cell sessions -- is the
+win that matters).  On hardware with >= 4 real cores the mesh speedup in the
+overhead-bound regime is expected to clear 2x; the JSON records whichever
+asymptote this machine honestly reaches.
+
+The dump also re-checks (and records) that the sharded grid is
+bit-identical to the unsharded one under ``batch="map"`` -- the acceptance
+contract tests/test_sweep.py pins in its 4-device subprocess.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import cluster, dump, emit, run_cell
+from repro.core import baselines
+
+
+# (d, n_per_worker, H, outer, n_seeds, n_gammas) per regime; quick shrinks.
+_REGIMES = {
+    "overhead": dict(d=256, n_per_worker=16, H=4, outer=200, n_seeds=8,
+                     n_gammas=2),
+    "zoo_cell": dict(d=512, n_per_worker=32, H=16, outer=100, n_seeds=8,
+                     n_gammas=2),
+    "compute_bound": dict(d=2048, n_per_worker=64, H=64, outer=20,
+                          n_seeds=16, n_gammas=1),
+}
+
+# The pre-sampleable zoo delays, derived from the preset registry (not
+# hand-copied literals) so the measured grid tracks the zoo's parameters.
+# Unlike bench_straggler_zoo's sweep section this grid keeps
+# bandwidth_coupled: it defines its own uniform cluster rather than
+# cross-checking against per-cell zoo rows.
+def _lag_delays():
+    from repro.api.presets import ZOO_DELAYS
+
+    return tuple((name, dict(params))
+                 for name, params in sorted(ZOO_DELAYS.items())
+                 if name != "markov")
+
+
+def _timed_best(fn, reps: int = 2) -> float:
+    fn()  # warm: compile outside the timed region
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _dispatches(fn) -> int:
+    from benchmarks.bench_engine import _count_device_dispatches
+
+    _, n = _count_device_dispatches(fn)
+    return n
+
+
+def _identical(a, b) -> bool:
+    return all(
+        (np.asarray(va.result.w) == np.asarray(vb.result.w)).all()
+        and [r.gap for r in va.result.records]
+        == [r.gap for r in vb.result.records]
+        for va, vb in zip(a, b))
+
+
+def _regime_row(api, prob, method, cl, *, outer, seeds, gammas, label):
+    ev = max(1, outer // 4)
+    kw = dict(num_outer=outer, seeds=seeds, gammas=gammas, eval_every=ev)
+
+    def sweep(shard, batch="vmap"):
+        return api.run_sweep(prob, method, cl, batch=batch, shard=shard, **kw)
+
+    def percell(exe):
+        out = []
+        for s in seeds:
+            for g in (gammas or (method.gamma,)):
+                m = dataclasses.replace(method, gamma=g)
+                out.append(api.Session(prob, m, cl, num_outer=outer,
+                                       eval_every=ev, seed=s,
+                                       executor=exe).run())
+        return out
+
+    row = {"cells": len(seeds) * len(gammas or (0,)), "outer": outer,
+           "shard_plan": dataclasses.asdict(api.resolve_shard(
+               "auto", protocol=method.protocol,
+               num_workers=prob.num_workers))}
+    row["sweep_sharded_wall_s"] = _timed_best(lambda: sweep("auto"))
+    row["sweep_vmap_wall_s"] = _timed_best(lambda: sweep("none"))
+    row["percell_scan_wall_s"] = _timed_best(lambda: percell("scan"), reps=1)
+    row["percell_event_wall_s"] = _timed_best(lambda: percell("event"),
+                                              reps=1)
+    row["sweep_dispatches"] = _dispatches(lambda: sweep("auto"))
+    row["percell_scan_dispatches"] = _dispatches(lambda: percell("scan"))
+    row["mesh_speedup_vs_vmap"] = (row["sweep_vmap_wall_s"]
+                                   / row["sweep_sharded_wall_s"])
+    row["speedup_vs_percell_scan"] = (row["percell_scan_wall_s"]
+                                      / row["sweep_sharded_wall_s"])
+    row["speedup_vs_percell_event"] = (row["percell_event_wall_s"]
+                                       / row["sweep_sharded_wall_s"])
+    # The acceptance contract, re-checked where it is cheap: map-mode cells
+    # sharding must not move a single bit.
+    row["sharded_bit_identical"] = _identical(sweep("none", "map"),
+                                              sweep("auto", "map"))
+    emit(f"sweep_scaling/{label}/mesh_vs_vmap",
+         row["sweep_sharded_wall_s"] * 1e6,
+         round(row["mesh_speedup_vs_vmap"], 2))
+    emit(f"sweep_scaling/{label}/vs_percell_event", 0.0,
+         round(row["speedup_vs_percell_event"], 2))
+    return row
+
+
+def _lag_grid_row(api, quick: bool):
+    """One lag x delay x seed grid: the whole delay axis in one call."""
+    lag_delays = _lag_delays()
+    K, d = 4, 512 if not quick else 256
+    outer = 4 if quick else 8
+    seeds = tuple(range(2 if quick else 6))
+    prob = api.ProblemSpec(
+        "rcv1_like", {"K": K, "d": d, "n_per_worker": 32}).build()
+    m = baselines.acpd_lag(K, d, B=2, T=10, rho_d=64, gamma=0.5,
+                           H=8 if quick else 16)
+    cl = cluster(K, sigma=5.0)
+    ev = 5
+    kw = dict(num_outer=outer, seeds=seeds, delays=lag_delays, eval_every=ev)
+
+    def sweep(shard, batch="vmap"):
+        return api.run_sweep(prob, m, cl, batch=batch, shard=shard, **kw)
+
+    def percell():
+        out = []
+        for name, params in lag_delays:
+            cl_v = dataclasses.replace(
+                cl, delay_model=name, delay_params=tuple(params.items()))
+            for s in seeds:
+                out.append(api.Session(prob, m, cl_v, num_outer=outer,
+                                       eval_every=ev, seed=s,
+                                       executor="scan").run())
+        return out
+
+    row = {"cells": len(lag_delays) * len(seeds), "outer": outer,
+           "delays": [n for n, _ in lag_delays]}
+    row["sweep_sharded_wall_s"] = _timed_best(lambda: sweep("auto"))
+    row["sweep_vmap_wall_s"] = _timed_best(lambda: sweep("none"))
+    row["percell_scan_wall_s"] = _timed_best(percell, reps=1)
+    row["mesh_speedup_vs_vmap"] = (row["sweep_vmap_wall_s"]
+                                   / row["sweep_sharded_wall_s"])
+    row["speedup_vs_percell_scan"] = (row["percell_scan_wall_s"]
+                                      / row["sweep_sharded_wall_s"])
+    row["sharded_bit_identical"] = _identical(sweep("none", "map"),
+                                              sweep("auto", "map"))
+    emit("sweep_scaling/lag_grid/vs_percell_scan",
+         row["sweep_sharded_wall_s"] * 1e6,
+         round(row["speedup_vs_percell_scan"], 2))
+    return row
+
+
+def main(quick: bool = False) -> None:
+    import jax
+
+    from repro import api
+    from repro.api.presets import rcv1_spec
+
+    out = {"n_devices": len(jax.devices()),
+           "n_cores": os.cpu_count(),
+           "regimes": {}}
+    specs = []
+    errors: list[dict] = []
+    K = 4
+    for regime, cfg in _REGIMES.items():
+        outer = max(10, cfg["outer"] // 10) if quick else cfg["outer"]
+        n_seeds = max(2, cfg["n_seeds"] // 4) if quick else cfg["n_seeds"]
+        seeds = tuple(range(n_seeds))
+        gammas = (1.0, 0.5)[:cfg["n_gammas"]]
+        prob = api.ProblemSpec("rcv1_like",
+                               {"K": K, "d": cfg["d"],
+                                "n_per_worker": cfg["n_per_worker"]}).build()
+        m = baselines.cocoa_plus(K, H=cfg["H"])
+        specs.append(api.ExperimentSpec(
+            name=f"sweep-scaling-{regime}-K{K}",
+            problem=rcv1_spec(K=K, d=cfg["d"],
+                              n_per_worker=cfg["n_per_worker"]),
+            cluster=cluster(K),
+            methods=(api.MethodEntry(m, outer),),
+            eval_every=max(1, outer // 4), seed=0))
+        row = run_cell(errors, f"sweep_scaling/{regime}", _regime_row,
+                       api, prob, m, cluster(K), outer=outer, seeds=seeds,
+                       gammas=gammas, label=regime)
+        if row is not None:
+            out["regimes"][regime] = row
+    lag_row = run_cell(errors, "sweep_scaling/lag_grid", _lag_grid_row, api,
+                       quick)
+    if lag_row is not None:
+        out["lag_grid"] = lag_row
+    dump("sweep_scaling", out, specs=specs, errors=errors)
+
+
+if __name__ == "__main__":
+    main()

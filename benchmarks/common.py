@@ -28,7 +28,9 @@ from repro.api.problems import rcv1_like as _rcv1_like_builder
 from repro.api.spec import ExperimentSpec
 from repro.core.simulate import ClusterModel
 
-OUT_DIR = pathlib.Path(__file__).resolve().parent.parent / "experiments" / "bench"
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+OUT_DIR = ROOT / "experiments" / "bench"
+TRAJECTORY = ROOT / "BENCH_SWEEP.json"
 
 
 def emit(name: str, us_per_call: float, derived) -> None:
@@ -59,6 +61,79 @@ def dump(name: str, payload, *, specs=None, seed=None, errors=None) -> None:
     if errors is not None:
         doc["errors"] = list(errors)
     (OUT_DIR / f"{name}.json").write_text(json.dumps(doc, indent=1))
+
+
+def append_trajectory(entry: dict) -> None:
+    """Append one run's headline perf numbers to the top-level
+    ``BENCH_SWEEP.json`` trajectory (a JSON list, one entry per
+    perf-carrying ``benchmarks/run.py`` invocation) so perf regressions
+    are visible across PRs without diffing full bench dumps.
+
+    Entries with no perf section are dropped, and so are ``--quick`` smoke
+    runs (their numbers are noise at smoke scale, and ``make check`` must
+    not dirty the tracked trajectory on every developer run).
+    """
+    if entry.get("quick") or not ("executor" in entry or "sweep" in entry):
+        return
+    doc = []
+    if TRAJECTORY.exists():
+        try:
+            doc = json.loads(TRAJECTORY.read_text())
+        except json.JSONDecodeError:
+            doc = []  # a corrupt trajectory must not fail the bench run
+        if not isinstance(doc, list):
+            doc = []
+    doc.append(entry)
+    TRAJECTORY.write_text(json.dumps(doc, indent=1) + "\n")
+
+
+def trajectory_entry(quick: bool, failures: list,
+                     modules_run: list[str]) -> dict:
+    """Summarize ONE bench run into a trajectory entry: wall-clock +
+    dispatch counts per regime for the executor and sweep benchmarks.
+
+    A section is included only when its producing module ran -- and did not
+    fail -- in THIS invocation (``modules_run`` minus the failures), so
+    every number in an entry was measured under the entry's own ``quick``
+    flag and device configuration: neither a ``--only`` run nor a crashed
+    module ever copies stale numbers from an earlier run's dumps.
+    """
+    import jax
+
+    entry: dict = {
+        "utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "quick": quick,
+        "jax_version": jax.__version__,
+        "modules_run": list(modules_run),
+        "failed_modules": [f["cell"] for f in failures],
+    }
+    fresh = set(modules_run) - set(entry["failed_modules"])
+    exec_path = OUT_DIR / "executor_scaling.json"
+    if "benchmarks.bench_engine" in fresh and exec_path.exists():
+        data = json.loads(exec_path.read_text())["data"]
+        entry["executor"] = {
+            regime: {"event_wall_s": row["event"]["wall_s"],
+                     "scan_wall_s": row["scan"]["wall_s"],
+                     "event_dispatches": row["event"]["device_dispatches"],
+                     "scan_dispatches": row["scan"]["device_dispatches"]}
+            for regime, row in data["executor"]["regimes"].items()}
+    sweep_path = OUT_DIR / "sweep_scaling.json"
+    if "benchmarks.bench_sweep_scaling" in fresh and sweep_path.exists():
+        doc = json.loads(sweep_path.read_text())["data"]
+        entry["n_devices"] = doc.get("n_devices")
+        entry["n_cores"] = doc.get("n_cores")
+        keep = ("sweep_sharded_wall_s", "sweep_vmap_wall_s",
+                "percell_scan_wall_s", "percell_event_wall_s",
+                "sweep_dispatches", "percell_scan_dispatches",
+                "mesh_speedup_vs_vmap", "speedup_vs_percell_event",
+                "speedup_vs_percell_scan")
+        rows = dict(doc.get("regimes", {}))
+        if "lag_grid" in doc:
+            rows["lag_grid"] = doc["lag_grid"]
+        entry["sweep"] = {
+            regime: {k: row[k] for k in keep if k in row}
+            for regime, row in rows.items()}
+    return entry
 
 
 def run_cell(errors: list, cell: str, fn: Callable, *args, **kw):

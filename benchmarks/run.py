@@ -29,11 +29,12 @@ def main(argv: list[str] | None = None) -> None:
     from benchmarks import (bench_engine, bench_fig3_convergence,
                             bench_fig4a_rho, bench_fig4b_scaling,
                             bench_fig5_realenv, bench_straggler_zoo,
-                            bench_table1, common, roofline)
+                            bench_sweep_scaling, bench_table1, common,
+                            roofline)
 
     mods = [bench_table1, bench_fig3_convergence, bench_fig4a_rho,
             bench_fig4b_scaling, bench_fig5_realenv, bench_straggler_zoo,
-            bench_engine, roofline]
+            bench_engine, bench_sweep_scaling, roofline]
     if args.only:
         mods = [m for m in mods if args.only in m.__name__]
         if not mods:
@@ -53,6 +54,10 @@ def main(argv: list[str] | None = None) -> None:
         common.dump("bench_failures", {"failed_modules": failures})
     elif failure_file.exists():
         failure_file.unlink()  # clean run: drop the stale failure record
+    # Append this run's headline perf numbers to the top-level trajectory
+    # (BENCH_SWEEP.json) so perf regressions are visible across PRs.
+    common.append_trajectory(common.trajectory_entry(
+        args.quick, failures, [m.__name__ for m in mods]))
     print(f"# all benchmarks done in {time.time() - t0:.1f}s"
           + (f" ({len(failures)} FAILED)" if failures else ""),
           file=sys.stderr)

@@ -10,8 +10,11 @@ Everything a caller needs lives here:
   execution backend (``executor="auto"|"event"|"scan"`` -- the scan-fused
   whole-run executor is bit-identical to the event loop, see
   docs/performance.md);
-* :func:`run_lockstep_sweep` / :func:`sweep_spec` -- whole seed x gamma
-  grids of a lockstep method as ONE compiled computation;
+* :func:`run_sweep` / :func:`sweep_spec` -- whole delay x seed x gamma
+  grids of any scan-capable method (lockstep AND ``lag``) as ONE compiled
+  computation, optionally sharded over the local device mesh
+  (``shard="auto"|"none"|"cells"|"workers"``; :func:`run_lockstep_sweep`
+  is the lockstep-only compat wrapper);
 * the :mod:`repro.core.compress` ``Compressor`` registry (re-exported) --
   the shared payload-compression extension point for both the simulator and
   the transformer exchange path;
@@ -46,9 +49,13 @@ from repro.api.session import (  # noqa: F401
 )
 from repro.api.spec import ExperimentSpec, MethodEntry  # noqa: F401
 from repro.api.sweep import (  # noqa: F401
+    ShardPlan,
     SweepVariant,
+    resolve_shard,
     run_lockstep_sweep,
+    run_sweep,
     sweep_spec,
+    sweep_supported,
 )
 from repro.core.compress import (  # noqa: F401
     Compressor,
@@ -80,6 +87,7 @@ __all__ = [
     "RoundEvent",
     "Session",
     "SessionEvent",
+    "ShardPlan",
     "StopEvent",
     "SweepVariant",
     "SyncEvent",
@@ -95,6 +103,9 @@ __all__ = [
     "register_compressor",
     "register_delay",
     "register_solver",
+    "resolve_shard",
     "run_lockstep_sweep",
+    "run_sweep",
     "sweep_spec",
+    "sweep_supported",
 ]

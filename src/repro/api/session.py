@@ -115,9 +115,13 @@ class Session:
 
     * ``"auto"`` (default) -- the scan-fused whole-run backend
       (:mod:`repro.core.executor`) whenever the run qualifies (lockstep
-      protocols always; ``lag`` when the delay stream is pre-sampleable; no
-      early stop), the event queue otherwise.  Both backends produce
-      bit-identical ``RunResult`` streams, so "auto" is a pure speed axis.
+      protocols always, including ``target_gap`` early stop -- whose
+      certificate moves in-graph -- up to
+      ``executor.GAP_SCAN_AUTO_MAX_ROUNDS`` budgeted rounds; ``lag`` when
+      the delay stream is pre-sampleable and not early-stopped;
+      ``time_budget`` always events), the event queue otherwise.  Both
+      backends produce bit-identical ``RunResult`` streams, so "auto" is a
+      pure speed axis.
     * ``"event"`` -- force the per-round priority-queue loop.
     * ``"scan"``  -- force whole-run compilation; raises ``ValueError`` with
       the reason when the run cannot scan (docs/performance.md has the
@@ -157,8 +161,15 @@ class Session:
             time_budget=time_budget)
         if executor == "scan" and not ok:
             raise ValueError(f"executor='scan' cannot run this spec: {why}")
+        # auto + target_gap: the gap scan computes (masked) rounds to the
+        # end of the budget, so past GAP_SCAN_AUTO_MAX_ROUNDS the event
+        # loop's stop-at-the-hit wins; executor="scan" still forces it.
+        auto_ok = ok and not (
+            target_gap is not None
+            and num_outer > executor_lib.GAP_SCAN_AUTO_MAX_ROUNDS)
         self.executor = "scan" if (executor == "scan"
-                                   or (executor == "auto" and ok)) else "event"
+                                   or (executor == "auto" and auto_ok)) \
+            else "event"
         self.problem = problem
         self.method = method
         self.cluster = cluster
@@ -276,11 +287,20 @@ class Session:
     def _generate_scan(self) -> Iterator[SessionEvent]:
         """The scan backend's stream: the run executes as one compiled
         computation up front, then the identical event sequence is replayed
-        from its per-round accounting."""
+        from its per-round accounting.
+
+        In ``eval_mode="stream"`` (a ``target_gap`` run: the certificates
+        were computed in-graph) the replay interleaves ``EvalEvent``\\ s at
+        their boundaries, exactly like the live event loop; deferred modes
+        keep the emit-evals-at-the-end contract."""
         run = executor_lib.run_scan(self.problem, self.method, self.cluster,
                                     num_outer=self.num_outer, seed=self.seed,
                                     eval_every=self.eval_every,
-                                    norms_sq=self.proto.norms_sq)
+                                    norms_sq=self.proto.norms_sq,
+                                    target_gap=self.target_gap)
+        records = run.materialize_records(self.problem, self.eval_mode)
+        streaming = self.eval_mode == "stream"
+        rec_iter = iter(records)
         iteration = 0
         for acct in run.rounds:
             iteration += 1
@@ -291,11 +311,13 @@ class Session:
                 comm_time=acct.comm_time)
             if acct.is_sync:
                 yield SyncEvent(iteration=iteration, sim_time=acct.sim_time)
-        records = run.materialize_records(self.problem, self.eval_mode)
-        for rec in records:
-            yield EvalEvent(**dataclasses.asdict(rec))
+            if streaming and iteration % self.eval_every == 0:
+                yield EvalEvent(**dataclasses.asdict(next(rec_iter)))
+        if not streaming:
+            for rec in records:
+                yield EvalEvent(**dataclasses.asdict(rec))
         self._result = run.finalize(records)
-        yield StopEvent(reason="completed", iteration=iteration,
+        yield StopEvent(reason=run.stop_reason, iteration=iteration,
                         sim_time=run.rounds[-1].sim_time if run.rounds
                         else 0.0)
 

@@ -72,6 +72,15 @@ class ExperimentSpec:
     ``"event"`` / ``"scan"`` force a backend (see docs/performance.md).
     Both backends produce bit-identical results, so the field is a pure
     speed axis and old spec JSONs (without it) keep their meaning.
+
+    ``shard`` picks how batched sweep executions
+    (:func:`repro.api.sweep.run_sweep` / :func:`repro.api.sweep.sweep_spec`)
+    partition work over the local device mesh: ``"auto"`` (default) shards
+    the sweep-cell axis over all local devices when more than one exists and
+    degrades to the single-device vmap path otherwise; ``"none"`` forces the
+    unsharded path; ``"cells"`` / ``"workers"`` force an axis (see
+    docs/performance.md).  Like ``executor``, a pure speed axis: old spec
+    JSONs keep their meaning, and single-``Session`` runs ignore it.
     """
 
     name: str
@@ -83,6 +92,7 @@ class ExperimentSpec:
     target_gap: float | None = None
     time_budget: float | None = None
     executor: str = "auto"
+    shard: str = "auto"
 
     def __post_init__(self):
         object.__setattr__(self, "methods", tuple(self.methods))
@@ -106,6 +116,7 @@ class ExperimentSpec:
             "target_gap": self.target_gap,
             "time_budget": self.time_budget,
             "executor": self.executor,
+            "shard": self.shard,
         }
 
     @classmethod
@@ -120,6 +131,7 @@ class ExperimentSpec:
             target_gap=d.get("target_gap"),
             time_budget=d.get("time_budget"),
             executor=d.get("executor", "auto"),
+            shard=d.get("shard", "auto"),
         )
 
     def to_json(self, indent: int = 2) -> str:

@@ -1,11 +1,13 @@
-"""Batched sweep runner: many independent lockstep runs, ONE compiled call.
+"""Batched sweep runner: many independent runs, ONE compiled call.
 
-Bench grids sweep seeds, server step sizes (gamma) and sparsity levels over
-the *same spec shape* -- identical dataset, protocol, round budget.  Running
-them as separate sessions pays one compile + one dispatch chain per cell.
-This module batches every variant of a lockstep run (``sync`` / ``cocoa`` /
-``cocoa_plus``) into a single compiled computation built on
-:func:`repro.core.executor.lockstep_run_traced`:
+Bench grids sweep delay models, seeds, server step sizes (gamma) and
+sparsity levels over the *same spec shape* -- identical dataset, protocol,
+round budget.  Running them as separate sessions pays one compile + one
+dispatch chain per cell.  :func:`run_sweep` batches every scan-capable run
+(the lockstep protocols ``sync`` / ``cocoa`` / ``cocoa_plus`` AND ``lag``)
+into a single compiled computation built on the traced run bodies of
+:mod:`repro.core.executor` (:func:`~repro.core.executor.lockstep_run_traced`
+/ :func:`~repro.core.executor.lag_run_traced`):
 
 * ``batch="vmap"`` (default) -- variants are vmapped: one XLA computation
   whose inner ops are batched across the sweep axis.  Fastest, but batched
@@ -14,16 +16,46 @@ This module batches every variant of a lockstep run (``sync`` / ``cocoa`` /
 * ``batch="map"``  -- variants run through ``lax.map``: still one compile
   and one dispatch for the whole sweep, but each variant keeps the
   unbatched op shapes -- bit-identical to ``Session(executor="scan")`` (and
-  therefore to the event engine), pinned by tests/test_executor.py.
+  therefore to the event engine), pinned by tests/test_sweep.py.
 
-Timing/byte accounting is host-side per seed
-(:func:`repro.core.executor.lockstep_accounts` -- gamma does not move the
-simulated clock, so variants sharing a seed share the accounting), and the
-deferred gap certificates of ALL variants evaluate in one bucketed
-``lax.map`` dispatch.
+The *delay axis rides along for free*: lockstep timing is host-side
+accounting (gamma and the delay model never move the compiled computation),
+and the lag executor's in-graph event queue consumes pre-sampled duration
+streams and link factors as traced operands -- so a whole
+delay x seed x gamma grid of one protocol is ONE compiled call.  Different
+grid shapes reuse one compile: the cell axis AND the static eval-boundary
+axis are padded to power-of-two buckets (trailing duplicates, the
+``engine._eval_bucketed`` trick), so repeated calls with different
+(n_delays, n_seeds, n_gammas) grids or eval cadences retrace at most
+log-many times per axis.
+
+Sharding (``shard=``): the batched axes can be partitioned over the local
+device mesh (:func:`repro.launch.mesh.make_mesh` + ``shard_map``):
+
+* ``"auto"`` (default) -- shard the cell axis over all local devices when
+  more than one exists; degrade to the single-device path otherwise (the
+  1-device behavior is bit-identical to ``shard="none"``).
+* ``"none"``  -- force the unsharded vmap/map path.
+* ``"cells"`` -- partition the sweep-cell axis: cells are independent, so
+  there is no cross-shard communication at all and per-cell results are
+  bit-identical to the unsharded path (each shard runs the same per-cell
+  ops on its block).
+* ``"workers"`` -- lockstep only: partition the worker axis of the
+  per-round inner computation (each shard solves its local subproblems,
+  one ``psum`` per round reduces the aggregate; see
+  :func:`repro.core.executor.lockstep_run_traced_sharded`).  For large-K
+  cells; deterministic but NOT bit-identical (the reduction re-associates,
+  like ``batch="vmap"``).
+
+Timing/byte accounting stays host-side for lockstep
+(:func:`repro.core.executor.lockstep_accounts` -- per (delay, seed), since
+gamma does not move the simulated clock) and comes back as per-round scan
+outputs for lag; the deferred gap certificates of ALL variants evaluate in
+one bucketed ``lax.map`` dispatch.
 
 The group-family protocols (data-dependent arrival control flow) cannot
 batch this way; sweep them with one :class:`repro.api.Session` per cell.
+:func:`run_lockstep_sweep` remains as the lockstep-only compat wrapper.
 """
 
 from __future__ import annotations
@@ -34,10 +66,16 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
+from repro.core import compress as compress_lib
 from repro.core import engine, executor, objectives
 from repro.core.acpd import MethodConfig, RunRecord, RunResult
 from repro.core.simulate import ClusterModel
+from repro.launch import mesh as mesh_lib
+
+SHARD_MODES = ("auto", "none", "cells", "workers")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,23 +85,480 @@ class SweepVariant:
     seed: int
     gamma: float
     result: RunResult
+    delay: str = "constant"  # the cell's delay-model registry entry
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardPlan:
+    """A resolved ``shard=`` request: which axis, over how many devices."""
+
+    mode: str  # "none" | "cells" | "workers"
+    n_shards: int  # 1 iff mode == "none"
+
+
+def _pow2_floor(n: int) -> int:
+    return 1 << (max(1, n).bit_length() - 1)
+
+
+def resolve_shard(shard: str, *, protocol: str, num_workers: int,
+                  n_devices: int | None = None) -> ShardPlan:
+    """Resolve a ``shard=`` request against this host's devices.
+
+    ``auto`` picks ``cells`` whenever more than one device exists (cells are
+    embarrassingly parallel and stay bit-identical) and degrades to ``none``
+    on a single device.  ``cells`` degrades to ``none`` on one device too.
+    ``workers`` needs a lockstep protocol (the lag event queue is
+    sequential in arrivals and cannot split its worker axis) and a worker
+    count divisible by the shard count; it degrades to ``none`` when no
+    usable split exists.  Mesh sizes are the largest power of two that fits
+    so cell-axis pow2 padding always divides evenly.
+    """
+    if shard not in SHARD_MODES:
+        raise ValueError(f"unknown shard mode {shard!r}; expected one of "
+                         f"{SHARD_MODES}")
+    if n_devices is None:
+        n_devices = len(jax.devices())
+    pow2 = _pow2_floor(n_devices)
+    if shard == "workers":
+        if protocol not in executor.LOCKSTEP_PROTOCOLS:
+            raise ValueError(
+                f"shard='workers' partitions the lockstep worker axis; "
+                f"protocol {protocol!r} cannot (lag's in-graph event queue "
+                f"is sequential in arrival order). Use shard='cells'.")
+        s = pow2
+        while s > 1 and num_workers % s:
+            s //= 2
+        return ShardPlan("workers", s) if s > 1 else ShardPlan("none", 1)
+    if shard == "none" or pow2 == 1:
+        return ShardPlan("none", 1)
+    return ShardPlan("cells", pow2)  # "auto" and "cells"
+
+
+def sweep_supported(method: MethodConfig,
+                    cluster: ClusterModel) -> tuple[bool, str]:
+    """Can (method, cluster) batch into :func:`run_sweep`?  (ok, why-not)."""
+    return executor.scan_supported(method, cluster)
+
+
+# ---------------------------------------------------------------------------
+# The compiled sweep computations.
+# ---------------------------------------------------------------------------
 
 
 @partial(jax.jit,
-         static_argnames=("loss", "num_steps", "solver", "length", "batch"))
-def _sweep_scan(keys, X, y, norms_sq, lam, n, sigma_ps, gammas, *, loss,
-                num_steps, solver, length, batch):
-    """All sweep variants in one compiled computation."""
+         static_argnames=("loss", "num_steps", "solver", "length",
+                          "batch", "n_shards"))
+def _sweep_scan(keys, X, y, norms_sq, lam, n, sigma_ps, gammas, eval_idx, *,
+                loss, num_steps, solver, length, batch, n_shards):
+    """All lockstep sweep variants in one compiled computation.
+
+    ``eval_idx`` (a traced int32 vector, pow2-padded so eval cadences share
+    compiles) gathers the eval-boundary snapshots in-graph, so only
+    O(cells x boundaries) state leaves the device instead of the full
+    O(cells x rounds) trail.  ``n_shards > 1`` partitions the cell axis over
+    the local mesh via ``shard_map`` -- cells are independent, so each shard
+    runs the identical per-cell ops on its block (no collectives; per-cell
+    results are bit-identical to the unsharded path) with donated carries
+    inside its scan.
+    """
     executor.STATS["sweep_traces"] += 1  # trace-time side effect
     run = partial(executor.lockstep_run_traced, loss=loss,
                   num_steps=num_steps, solver=solver, length=length)
-    if batch == "vmap":
-        return jax.vmap(
-            lambda key, sp, g: run(key, X, y, norms_sq, lam, n, sp, g)
-        )(keys, sigma_ps, gammas)
-    return jax.lax.map(
-        lambda args: run(args[0], X, y, norms_sq, lam, n, args[1], args[2]),
-        (keys, sigma_ps, gammas))
+
+    def one(key, X, y, norms_sq, lam, n, sp, g, idx):
+        w, alpha, ws, alphas = run(key, X, y, norms_sq, lam, n, sp, g)
+        return w, alpha, ws[idx], alphas[idx]
+
+    def block(keys, X, y, norms_sq, lam, n, sigma_ps, gammas, idx):
+        if batch == "vmap":
+            return jax.vmap(
+                lambda key, sp, g: one(key, X, y, norms_sq, lam, n, sp, g,
+                                       idx)
+            )(keys, sigma_ps, gammas)
+        return jax.lax.map(
+            lambda a: one(a[0], X, y, norms_sq, lam, n, a[1], a[2], idx),
+            (keys, sigma_ps, gammas))
+
+    if n_shards == 1:
+        return block(keys, X, y, norms_sq, lam, n, sigma_ps, gammas,
+                     eval_idx)
+    mesh = mesh_lib.make_sweep_mesh(n_shards, "cells")
+    fn = shard_map(block, mesh=mesh,
+                   in_specs=(P("cells"), P(), P(), P(), P(), P(),
+                             P("cells"), P("cells"), P()),
+                   out_specs=(P("cells"),) * 4, check_rep=False)
+    return fn(keys, X, y, norms_sq, lam, n, sigma_ps, gammas, eval_idx)
+
+
+@partial(jax.jit,
+         static_argnames=("loss", "num_steps", "solver", "length",
+                          "batch", "n_shards", "num_workers"))
+def _sweep_scan_workers(keys, X, y, norms_sq, lam, n, sigma_ps, gammas,
+                        eval_idx, *, loss, num_steps, solver, length, batch,
+                        n_shards, num_workers):
+    """Lockstep sweep with the WORKER axis sharded over the mesh.
+
+    Every device sees every cell but only its block of the K workers; each
+    round's aggregate is one cross-shard ``psum``
+    (:func:`repro.core.executor.lockstep_run_traced_sharded`).  A perf mode
+    for large-K cells -- deterministic, not bit-identical (the reduction
+    re-associates).
+    """
+    executor.STATS["sweep_traces"] += 1  # trace-time side effect
+    mesh = mesh_lib.make_sweep_mesh(n_shards, "workers")
+
+    def block(keys, X, y, norms_sq, lam, n, sigma_ps, gammas, idx):
+        run = partial(executor.lockstep_run_traced_sharded, loss=loss,
+                      num_steps=num_steps, solver=solver, length=length,
+                      axis="workers", num_workers=num_workers)
+
+        def one(key, sp, g):
+            w, alpha, ws, alphas = run(key, X, y, norms_sq, lam, n, sp, g)
+            return w, alpha, ws[idx], alphas[idx]
+
+        if batch == "vmap":
+            return jax.vmap(one)(keys, sigma_ps, gammas)
+        return jax.lax.map(lambda a: one(*a), (keys, sigma_ps, gammas))
+
+    fn = shard_map(block, mesh=mesh,
+                   in_specs=(P(), P("workers"), P("workers"), P("workers"),
+                             P(), P(), P(), P(), P()),
+                   out_specs=(P(), P(None, "workers"), P(),
+                              P(None, None, "workers")),
+                   check_rep=False)
+    return fn(keys, X, y, norms_sq, lam, n, sigma_ps, gammas, eval_idx)
+
+
+@partial(jax.jit,
+         static_argnames=("loss", "num_steps", "comp", "length", "lag_window",
+                          "dense_reply_bytes", "batch", "n_shards"))
+def _lag_sweep_scan(keys, X, y, norms_sq, lam, n, sigma_ps, gammas, xi,
+                    durations, needs, up_bytes, heartbeat_bytes, latencies,
+                    bandwidths, link_factors, eval_idx, *, loss, num_steps,
+                    comp, length, lag_window, dense_reply_bytes, batch,
+                    n_shards):
+    """All LAG sweep variants in one compiled computation.
+
+    The per-cell operands carry the whole delay axis: pre-sampled duration
+    streams (f64, one per (delay, seed)), per-worker link factors and
+    latency/bandwidth scalars -- so cells of DIFFERENT delay models batch
+    into the same computation.  Must be called under ``enable_x64`` (the
+    in-graph event-queue timing is f64, like the single-run path).
+    """
+    executor.STATS["sweep_lag_traces"] += 1  # trace-time side effect
+
+    def one(shared, key, sp, g, dur, lat, bw, lf):
+        (X, y, norms_sq, lam, n, xi, needs, up_bytes, heartbeat_bytes,
+         idx) = shared
+        state, ys = executor.lag_run_traced(
+            key, X, y, norms_sq, lam, n, sp, g, xi, dur, needs, up_bytes,
+            heartbeat_bytes, lat, bw, lf, loss=loss, num_steps=num_steps,
+            comp=comp, length=length, lag_window=lag_window,
+            dense_reply_bytes=dense_reply_bytes)
+        ws, app_rows, sim, bu, bd, ct, cm = ys
+        return (state["w_server"], state["alpha"], state["alpha_applied"],
+                ws[idx], app_rows[idx], sim, bu, bd, ct, cm)
+
+    def block(keys, X, y, norms_sq, lam, n, sigma_ps, gammas, xi, durations,
+              needs, up_bytes, heartbeat_bytes, latencies, bandwidths,
+              link_factors, idx):
+        shared = (X, y, norms_sq, lam, n, xi, needs, up_bytes,
+                  heartbeat_bytes, idx)
+        if batch == "vmap":
+            return jax.vmap(partial(one, shared))(
+                keys, sigma_ps, gammas, durations, latencies, bandwidths,
+                link_factors)
+        return jax.lax.map(lambda a: one(shared, *a),
+                           (keys, sigma_ps, gammas, durations, latencies,
+                            bandwidths, link_factors))
+
+    args = (keys, X, y, norms_sq, lam, n, sigma_ps, gammas, xi, durations,
+            needs, up_bytes, heartbeat_bytes, latencies, bandwidths,
+            link_factors, eval_idx)
+    if n_shards == 1:
+        return block(*args)
+    mesh = mesh_lib.make_sweep_mesh(n_shards, "cells")
+    cell = P("cells")
+    fn = shard_map(block, mesh=mesh,
+                   in_specs=(cell, P(), P(), P(), P(), P(), cell, cell, P(),
+                             cell, P(), P(), P(), cell, cell, cell, P()),
+                   out_specs=(cell,) * 10, check_rep=False)
+    return fn(*args)
+
+
+# ---------------------------------------------------------------------------
+# The sweep drivers.
+# ---------------------------------------------------------------------------
+
+
+def _delay_variants(cluster: ClusterModel, delays):
+    """Normalize the delay axis to [(name, ClusterModel), ...].
+
+    ``delays=None`` keeps the spec's own cluster (a pure seed/gamma sweep);
+    entries may be registry names (default parameters) or ``(name, params)``
+    pairs.
+    """
+    if delays is None:
+        return [(cluster.delay_model, cluster)]
+    out = []
+    for entry in delays:
+        if isinstance(entry, str):
+            name, params = entry, None
+        else:
+            name, params = entry
+        if params is None:
+            params = (dict(cluster.delay_params)
+                      if name == cluster.delay_model else {})
+        out.append((name, dataclasses.replace(
+            cluster, delay_model=name, delay_params=tuple(params.items()))))
+    return out
+
+
+def _padded_cells(cells, n_shards):
+    """Pad the cell list to the pow2 bucket (>= shard count) by repeating
+    the last cell; padded rows compute real (discarded) work, so grids of
+    different shapes share one compile without poisoning any live cell."""
+    V = len(cells)
+    V_pad = max(engine._bucket_size(V), n_shards)
+    return cells + [cells[-1]] * (V_pad - V)
+
+
+def _padded_eval_idx(evals) -> tuple:
+    """The static eval-boundary tuple, padded to its pow2 bucket (last
+    index repeated) so sweeps differing only in eval cadence share compiles
+    the same way the cell axis does; callers slice the duplicate snapshot
+    rows off before evaluation."""
+    if not evals:
+        return ()
+    pad = engine._bucket_size(len(evals)) - len(evals)
+    return tuple(evals) + (evals[-1],) * pad
+
+
+def run_sweep(
+    problem: objectives.Problem,
+    method: MethodConfig,
+    cluster: ClusterModel,
+    *,
+    num_outer: int,
+    seeds=(0,),
+    gammas=None,
+    delays=None,
+    eval_every: int = 1,
+    batch: str = "vmap",
+    shard: str = "auto",
+) -> list[SweepVariant]:
+    """Run the cross product ``delays x seeds x gammas`` of a scan-capable
+    method as one compiled computation; returns one :class:`SweepVariant`
+    per cell (delay-major, then seed, then gamma).
+
+    ``gammas=None`` keeps the method's own gamma; when a gamma variant is
+    swept and ``method.sigma_prime`` is unset, each variant gets its
+    protocol's safe default sigma' for THAT gamma (the same resolution a
+    single run would do).  ``delays=None`` keeps the cluster's own delay
+    model; otherwise entries are delay-registry names or ``(name, params)``
+    pairs.  ``shard`` partitions the batched axes over the local device mesh
+    (see the module docstring; ``"auto"`` degrades gracefully to the
+    unsharded path on one device).
+
+    Contract: under ``batch="map"`` with an unsharded or cells-sharded
+    plan, every cell is bit-identical to the corresponding
+    ``Session(executor="scan")`` run -- and therefore to the event engine
+    (pinned by tests/test_sweep.py).
+    """
+    if method.protocol not in executor.SCAN_PROTOCOLS:
+        raise ValueError(
+            f"sweep batching needs a scan-capable protocol "
+            f"{executor.SCAN_PROTOCOLS}, got {method.protocol!r}; run "
+            f"group-family methods one Session per cell")
+    if batch not in ("vmap", "map"):
+        raise ValueError(f"unknown batch mode {batch!r}; 'vmap' or 'map'")
+    if num_outer <= 0:
+        raise ValueError(f"num_outer must be >= 1, got {num_outer}")
+    gammas = [method.gamma] if gammas is None else list(gammas)
+    seeds = list(seeds)
+    if not seeds or not gammas:
+        raise ValueError(
+            f"the sweep grid is empty: got {len(seeds)} seeds x "
+            f"{len(gammas)} gammas (each axis needs at least one value)")
+    variants = _delay_variants(cluster, delays)
+    if not variants:
+        raise ValueError("delays=() declares an empty delay axis; pass "
+                         "None to keep the cluster's own delay model")
+    plan = resolve_shard(shard, protocol=method.protocol,
+                         num_workers=problem.X.shape[0])
+    if method.protocol == "lag":
+        return _run_lag_sweep(problem, method, variants, num_outer=num_outer,
+                              seeds=seeds, gammas=gammas,
+                              eval_every=eval_every, batch=batch, plan=plan)
+    return _run_lockstep_sweep(problem, method, variants,
+                               num_outer=num_outer, seeds=seeds,
+                               gammas=gammas, eval_every=eval_every,
+                               batch=batch, plan=plan)
+
+
+def _variant_records(rounds, evals, gap, gap_srv, p, dv, v):
+    return [
+        RunRecord(iteration=r + 1, sim_time=rounds[r].sim_time,
+                  gap=float(gap[v, i]), gap_server=float(gap_srv[v, i]),
+                  primal=float(p[v, i]), dual=float(dv[v, i]),
+                  bytes_up=rounds[r].bytes_up,
+                  bytes_down=rounds[r].bytes_down,
+                  compute_time=rounds[r].compute_time,
+                  comm_time=rounds[r].comm_time)
+        for i, r in enumerate(evals)
+    ]
+
+
+def _eval_grid(ws_eval, alphas_eval, problem, V, S):
+    """Every variant's certificates in one bucketed lax.map dispatch: rows
+    stay unbatched, so per-variant values match single-run evaluation.
+
+    Snapshots are gathered to host first: a cells-sharded sweep leaves them
+    distributed, and evaluating through the sharded layout would let GSPMD
+    re-partition the certificate reductions (breaking the bit-identity of
+    the certificates, though not of the trajectories).
+    """
+    K, n_k, d = problem.X.shape
+    p, dv, gap, gap_srv = engine._eval_bucketed(
+        np.asarray(ws_eval).reshape(V * S, d),
+        np.asarray(alphas_eval).reshape(V * S, K, n_k),
+        problem.X, problem.y, problem.lam, loss=problem.loss)
+    return tuple(np.asarray(a, np.float64).reshape(V, S)
+                 for a in (p, dv, gap, gap_srv))
+
+
+def _run_lockstep_sweep(problem, method, variants, *, num_outer, seeds,
+                        gammas, eval_every, batch, plan):
+    K, n_k, d = problem.X.shape
+    # Trajectories depend only on (seed, gamma): the delay axis is pure
+    # host-side accounting for lockstep runs, so compute each unique
+    # trajectory once and reuse it across delay variants.
+    cells = [(s, g) for s in seeds for g in gammas]
+    methods = {g: dataclasses.replace(method, gamma=g) for g in gammas}
+    padded = _padded_cells(cells, plan.n_shards)
+    sigma_ps = np.asarray([methods[g].resolved_sigma_prime(K)
+                           for _, g in padded])
+    keys = jax.vmap(jax.random.key)(jnp.asarray([s for s, _ in padded]))
+    norms_sq = jnp.sum(problem.X * problem.X, axis=-1)
+    evals = executor._eval_indices(num_outer, eval_every)
+
+    executor.STATS["sweep_calls"] += 1
+    runner = _sweep_scan if plan.mode != "workers" else partial(
+        _sweep_scan_workers, num_workers=K)
+    w, alpha, ws_eval, alphas_eval = runner(
+        keys, problem.X, problem.y, norms_sq, problem.lam, K * n_k,
+        jnp.asarray(sigma_ps, problem.X.dtype),
+        jnp.asarray([g for _, g in padded], problem.X.dtype),
+        jnp.asarray(_padded_eval_idx(evals), jnp.int32),
+        loss=problem.loss, num_steps=method.H,
+        solver=executor.lockstep_solver(method), length=num_outer,
+        batch=batch, n_shards=plan.n_shards if plan.mode != "none" else 1)
+
+    V, S = len(cells), len(evals)
+    p, dv, gap, gap_srv = _eval_grid(ws_eval[:V, :S], alphas_eval[:V, :S],
+                                     problem, V, S)
+    # Gamma does not move the simulated clock: accounting is per
+    # (delay variant, seed).
+    out = []
+    for name, cl in variants:
+        accounts = {s: executor.lockstep_accounts(
+            method, cl, d, num_rounds=num_outer, seed=s) for s in seeds}
+        for v, (seed, gamma) in enumerate(cells):
+            records = _variant_records(accounts[seed], evals, gap, gap_srv,
+                                       p, dv, v)
+            out.append(SweepVariant(seed, gamma, RunResult(
+                methods[gamma], records, np.asarray(w[v]),
+                np.asarray(alpha[v])), delay=name))
+    return out
+
+
+def _run_lag_sweep(problem, method, variants, *, num_outer, seeds, gammas,
+                   eval_every, batch, plan):
+    from jax.experimental import enable_x64
+
+    K, n_k, d = problem.X.shape
+    T = method.T
+    R = num_outer * T
+    comp = compress_lib.for_method(method, d)
+    dense = isinstance(comp, compress_lib.Dense)
+    up_bytes = comp.wire_bytes(d)
+    needs = executor.lag_needs(method, K, R)
+    methods = {g: dataclasses.replace(method, gamma=g) for g in gammas}
+
+    for name, cl in variants:
+        ok, why = executor.scan_supported(method, cl)
+        if not ok:
+            raise ValueError(
+                f"delay model {name!r} cannot batch into a lag sweep: {why}; "
+                f"run it per-cell via Session(executor='event')")
+
+    # Cell order: delay-major, then seed, then gamma (matches the returned
+    # variant order).  Durations are per (cluster variant, seed) -- the same
+    # host-RNG stream a single run would consume -- and gamma variants share
+    # them.  Keyed by the (hashable) ClusterModel itself, NOT the delay
+    # name: two entries of the same model with different params must not
+    # share a stream.
+    cells = [(name, cl, s, g)
+             for name, cl in variants for s in seeds for g in gammas]
+    padded = _padded_cells(cells, plan.n_shards)
+    dur_cache: dict = {}
+    link_cache: dict = {}
+    for _, cl, s, _ in padded:
+        if (cl, s) not in dur_cache:
+            durations, delay = executor.lag_durations(method, cl,
+                                                      num_rounds=R, seed=s)
+            dur_cache[(cl, s)] = durations
+            link_cache[cl] = delay.link_factors()
+    durations = np.stack([dur_cache[(cl, s)] for _, cl, s, _ in padded])
+    link_factors = np.stack([link_cache[cl] for _, cl, _, _ in padded])
+    lats = np.asarray([cl.latency for _, cl, _, _ in padded])
+    bws = np.asarray([cl.bandwidth for _, cl, _, _ in padded])
+    sigma_ps = np.asarray([methods[g].resolved_sigma_prime(K)
+                           for *_, g in padded])
+    keys = jax.vmap(jax.random.key)(
+        jnp.asarray([s for _, _, s, _ in padded]))
+    norms_sq = jnp.sum(problem.X * problem.X, axis=-1)
+    evals = executor._eval_indices(R, eval_every)
+
+    executor.STATS["sweep_lag_calls"] += 1
+    with enable_x64():
+        (w, alpha, alpha_applied, ws_eval, app_eval, sim, bu, bd, ct,
+         cm) = _lag_sweep_scan(
+            keys, problem.X, problem.y, norms_sq, jnp.float32(problem.lam),
+            jnp.int32(K * n_k), jnp.asarray(sigma_ps, jnp.float32),
+            jnp.asarray([g for *_, g in padded], jnp.float32),
+            jnp.float32(method.lag_xi),
+            jnp.asarray(durations, jnp.float64),
+            jnp.asarray(needs, jnp.int64),
+            jnp.asarray(up_bytes, jnp.int64),
+            jnp.asarray(engine.LagProtocol.HEARTBEAT_BYTES, jnp.int64),
+            jnp.asarray(lats, jnp.float64),
+            jnp.asarray(bws, jnp.float64),
+            jnp.asarray(link_factors, jnp.float64),
+            jnp.asarray(_padded_eval_idx(evals), jnp.int32),
+            loss=problem.loss, num_steps=method.H, comp=comp, length=R,
+            lag_window=method.lag_window,
+            dense_reply_bytes=d * 4 if dense else 0, batch=batch,
+            n_shards=plan.n_shards if plan.mode == "cells" else 1)
+
+    V, S = len(cells), len(evals)
+    p, dv, gap, gap_srv = _eval_grid(ws_eval[:V, :S], app_eval[:V, :S],
+                                     problem, V, S)
+    sim, bu, bd, ct, cm = (np.asarray(a) for a in (sim, bu, bd, ct, cm))
+    out = []
+    for v, (name, cl, seed, gamma) in enumerate(cells):
+        rounds = executor.lag_accounts(needs, T, sim[v], bu[v], bd[v],
+                                       ct[v], cm[v])
+        records = _variant_records(rounds, evals, gap, gap_srv, p, dv, v)
+        out.append(SweepVariant(seed, gamma, RunResult(
+            methods[gamma], records, np.asarray(w[v]), np.asarray(alpha[v]),
+            alpha_applied=np.asarray(alpha_applied[v])), delay=name))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Compat + spec-level entry points.
+# ---------------------------------------------------------------------------
 
 
 def run_lockstep_sweep(
@@ -76,88 +571,29 @@ def run_lockstep_sweep(
     gammas=None,
     eval_every: int = 1,
     batch: str = "vmap",
+    shard: str = "none",
 ) -> list[SweepVariant]:
-    """Run the cross product ``seeds x gammas`` of a lockstep method as one
-    compiled computation; returns one :class:`SweepVariant` per cell.
-
-    ``gammas=None`` keeps the method's own gamma (a pure seed sweep).  When
-    a gamma variant is swept and ``method.sigma_prime`` is unset, each
-    variant gets its protocol's safe default sigma' for THAT gamma (the same
-    resolution a single run would do).
-    """
+    """Lockstep-only compat wrapper over :func:`run_sweep` (PR-4 surface;
+    unsharded by default).  New code should call :func:`run_sweep`."""
     if method.protocol not in executor.LOCKSTEP_PROTOCOLS:
         raise ValueError(
             f"sweep batching needs a lockstep protocol "
-            f"{executor.LOCKSTEP_PROTOCOLS}, got {method.protocol!r}; run "
-            f"group-family methods one Session per cell")
-    if batch not in ("vmap", "map"):
-        raise ValueError(f"unknown batch mode {batch!r}; 'vmap' or 'map'")
-    if num_outer <= 0:
-        raise ValueError(f"num_outer must be >= 1, got {num_outer}")
-    gammas = [method.gamma] if gammas is None else list(gammas)
-    seeds = list(seeds)
-    K, n_k, d = problem.X.shape
-
-    cells = [(s, g) for s in seeds for g in gammas]
-    methods = [dataclasses.replace(method, gamma=g) for _, g in cells]
-    sigma_ps = np.asarray([m.resolved_sigma_prime(K) for m in methods])
-    keys = jax.vmap(jax.random.key)(jnp.asarray([s for s, _ in cells]))
-    norms_sq = jnp.sum(problem.X * problem.X, axis=-1)
-
-    executor.STATS["sweep_calls"] += 1
-    w, alpha, ws, alphas = _sweep_scan(
-        keys, problem.X, problem.y, norms_sq, problem.lam, K * n_k,
-        jnp.asarray(sigma_ps, problem.X.dtype),
-        jnp.asarray([g for _, g in cells], problem.X.dtype),
-        loss=problem.loss, num_steps=method.H,
-        solver=executor.lockstep_solver(method), length=num_outer,
-        batch=batch)
-
-    # Gamma does not move the simulated clock: accounting is per seed.
-    accounts = {s: executor.lockstep_accounts(method, cluster, d,
-                                              num_rounds=num_outer, seed=s)
-                for s in seeds}
-    evals = executor._eval_indices(num_outer, eval_every)
-    # Every variant's certificates in one bucketed lax.map dispatch: rows
-    # stay unbatched, so per-variant values match single-run evaluation.
-    # (eval_every > num_outer => no boundaries => empty records, like a
-    # Session with the same parameters.)
-    V, S = len(cells), len(evals)
-    idx = jnp.asarray(evals, jnp.int32)
-    ws_eval = ws[:, idx].reshape((V * S, d))
-    alphas_eval = alphas[:, idx].reshape((V * S, K, n_k))
-    p, dv, gap, gap_srv = engine._eval_bucketed(
-        ws_eval, alphas_eval, problem.X, problem.y, problem.lam,
-        loss=problem.loss)
-    p = np.asarray(p, np.float64).reshape(V, S)
-    dv = np.asarray(dv, np.float64).reshape(V, S)
-    gap = np.asarray(gap, np.float64).reshape(V, S)
-    gap_srv = np.asarray(gap_srv, np.float64).reshape(V, S)
-
-    out = []
-    for v, ((seed, gamma), m) in enumerate(zip(cells, methods)):
-        rounds = accounts[seed]
-        records = [
-            RunRecord(iteration=r + 1, sim_time=rounds[r].sim_time,
-                      gap=float(gap[v, i]), gap_server=float(gap_srv[v, i]),
-                      primal=float(p[v, i]), dual=float(dv[v, i]),
-                      bytes_up=rounds[r].bytes_up,
-                      bytes_down=rounds[r].bytes_down,
-                      compute_time=rounds[r].compute_time,
-                      comm_time=rounds[r].comm_time)
-            for i, r in enumerate(evals)
-        ]
-        out.append(SweepVariant(seed, gamma, RunResult(
-            m, records, np.asarray(w[v]), np.asarray(alpha[v]))))
-    return out
+            f"{executor.LOCKSTEP_PROTOCOLS}, got {method.protocol!r}; use "
+            f"run_sweep for lag, or one Session per cell for the group "
+            f"family")
+    return run_sweep(problem, method, cluster, num_outer=num_outer,
+                     seeds=seeds, gammas=gammas, eval_every=eval_every,
+                     batch=batch, shard=shard)
 
 
 def sweep_spec(spec, method_name: str, *, seeds=None, gammas=None,
-               batch: str = "vmap") -> list[SweepVariant]:
+               delays=None, batch: str = "vmap",
+               shard: str | None = None) -> list[SweepVariant]:
     """Spec-level convenience: sweep one method entry of an
     :class:`repro.api.ExperimentSpec` (its eval cadence, its problem, its
     seed -- ``seeds`` defaults to ``(spec.seed,)`` so the no-axes call
-    reproduces exactly the run the spec declares)."""
+    reproduces exactly the run the spec declares).  ``shard`` defaults to
+    the spec's own ``shard`` field."""
     if spec.target_gap is not None or spec.time_budget is not None:
         raise ValueError(
             "sweep batching compiles whole runs and cannot early-stop; "
@@ -165,8 +601,9 @@ def sweep_spec(spec, method_name: str, *, seeds=None, gammas=None,
             "Experiment/Session instead")
     entry = spec.method_named(method_name)
     problem = spec.problem.build()
-    return run_lockstep_sweep(problem, entry.config, spec.cluster,
-                              num_outer=entry.num_outer,
-                              seeds=(spec.seed,) if seeds is None else seeds,
-                              gammas=gammas, eval_every=spec.eval_every,
-                              batch=batch)
+    return run_sweep(problem, entry.config, spec.cluster,
+                     num_outer=entry.num_outer,
+                     seeds=(spec.seed,) if seeds is None else seeds,
+                     gammas=gammas, delays=delays,
+                     eval_every=spec.eval_every, batch=batch,
+                     shard=spec.shard if shard is None else shard)

@@ -296,6 +296,24 @@ def _server_apply_fused(w_server, dw_tilde, w_local, alpha_applied, idxs,
     return w_server, dw_tilde, w_local, alpha_applied, reply_nnz, reply_sq
 
 
+def _lockstep_local_solves(w, alpha, X, y, norms_sq, lam, n, sigma_p, keys, *,
+                           loss, num_steps, solver):
+    """The vmapped per-worker subproblem solves of one lockstep round.
+
+    Shared by :func:`_lockstep_round` (full worker axis) and the
+    worker-sharded executor variant
+    (:func:`repro.core.executor.lockstep_run_traced_sharded`, which maps it
+    over a local worker block with its slice of the key split) so the solve
+    op sequence is defined in exactly one place; only the aggregation
+    (plain ``sum`` vs ``sum`` + ``psum``) differs between the two callers.
+    """
+    K = X.shape[0]
+    w_all = jnp.broadcast_to(w, (K, w.shape[0]))
+    fn = partial(solver, loss=loss, num_steps=num_steps)
+    return jax.vmap(fn, in_axes=(0, 0, 0, 0, 0, None, None, None, 0))(
+        w_all, alpha, X, y, norms_sq, lam, n, sigma_p, keys)
+
+
 def _lockstep_round(key, w, alpha, X, y, norms_sq, lam, n, sigma_p, gamma, *,
                     loss, num_steps, solver):
     """Shared lockstep round body: all K subproblems vmapped + aggregation.
@@ -309,10 +327,9 @@ def _lockstep_round(key, w, alpha, X, y, norms_sq, lam, n, sigma_p, gamma, *,
     K = X.shape[0]
     key, sub = jax.random.split(key)
     keys = jax.random.split(sub, K)
-    w_all = jnp.broadcast_to(w, (K, w.shape[0]))
-    fn = partial(solver, loss=loss, num_steps=num_steps)
-    dalpha, v = jax.vmap(fn, in_axes=(0, 0, 0, 0, 0, None, None, None, 0))(
-        w_all, alpha, X, y, norms_sq, lam, n, sigma_p, keys)
+    dalpha, v = _lockstep_local_solves(w, alpha, X, y, norms_sq, lam, n,
+                                       sigma_p, keys, loss=loss,
+                                       num_steps=num_steps, solver=solver)
     alpha = alpha + gamma * dalpha
     w = w + gamma * jnp.sum(v, axis=0)
     return key, w, alpha
@@ -340,6 +357,23 @@ def _cocoa_round_fused(key, w, alpha, X, y, norms_sq, lam, n, sigma_p, gamma,
                            solver=solver)
 
 
+def _certificate_ops(w, alpha, X, y, lam, *, loss):
+    """ONE snapshot's gap certificate: (primal, dual, gap, gap_server).
+
+    The single definition of the certificate op sequence -- shared by the
+    deferred batch evaluation below and the scan executor's in-graph
+    ``target_gap`` test (:func:`repro.core.executor.lockstep_run_gap_traced`)
+    so the two can never silently desynchronize; the ops mirror the
+    reference's eager ``objectives.gap_certificate`` exactly (the bit-exact
+    equivalence contract).
+    """
+    w_alpha = objectives.primal_from_dual(alpha, X, lam)
+    p = objectives.primal_objective(w_alpha, X, y, lam, loss=loss)
+    dv = objectives.dual_objective(alpha, X, y, lam, loss=loss)
+    p_srv = objectives.primal_objective(w, X, y, lam, loss=loss)
+    return p, dv, p - dv, p_srv - dv
+
+
 @partial(jax.jit, static_argnames=("loss",))
 def _eval_batched(ws, alphas, X, y, lam, *, loss):
     """All deferred gap certificates in one dispatch.
@@ -352,11 +386,7 @@ def _eval_batched(ws, alphas, X, y, lam, *, loss):
 
     def one(args):
         w, alpha = args
-        w_alpha = objectives.primal_from_dual(alpha, X, lam)
-        p = objectives.primal_objective(w_alpha, X, y, lam, loss=loss)
-        dv = objectives.dual_objective(alpha, X, y, lam, loss=loss)
-        p_srv = objectives.primal_objective(w, X, y, lam, loss=loss)
-        return p, dv, p - dv, p_srv - dv
+        return _certificate_ops(w, alpha, X, y, lam, loss=loss)
 
     return jax.lax.map(one, (ws, alphas))
 

@@ -37,6 +37,16 @@ interleaved accounting pins, ``async``, ``adaptive_b``'s observed-latency
 feedback) keep the event queue -- they still benefit from the engine's fused
 multi-arrival server apply and one-dispatch group relaunches.
 
+``target_gap`` early stop is scan-capable for lockstep runs: the duality-gap
+certificate moves in-graph and a ``done`` flag in the carry freezes the
+state once the target is reached (:func:`lockstep_run_gap_traced`,
+compute-and-mask with post-hoc truncation).  The traced run bodies
+(:func:`lockstep_run_traced`, :func:`lag_run_traced`, and the
+worker-sharded :func:`lockstep_run_traced_sharded`) are also the building
+blocks of :func:`repro.api.sweep.run_sweep`, which maps/vmaps them across
+whole protocol x delay x seed x gamma grids and can shard the batched axes
+over a device mesh.
+
 Bit-for-bit contract: for every supported (protocol, delay) cell the scan
 executor reproduces the event executor's ``RunResult`` exactly --
 trajectories, byte/time accounting, and gap certificates (pinned by
@@ -62,12 +72,23 @@ from repro.core.simulate import ClusterModel
 LOCKSTEP_PROTOCOLS = ("sync", "cocoa", "cocoa_plus")
 SCAN_PROTOCOLS = LOCKSTEP_PROTOCOLS + ("lag",)
 
+# target_gap runs on the scan backend compute-and-mask: every budgeted round
+# executes even after the target is hit, so for huge budgets the masked tail
+# can dwarf the dispatch overhead the scan saves.  ``executor="auto"`` only
+# picks the gap scan up to this round budget and keeps the event loop (which
+# stops at the hit) beyond it; forcing ``executor="scan"`` overrides.
+GAP_SCAN_AUTO_MAX_ROUNDS = 4096
+
 # Dispatch accounting for the 1-dispatch-per-run contract: "*_calls" counts
 # compiled executions (one per run), "*_traces" counts retraces (flat across
-# same-shape runs).  tests/test_executor.py asserts on these.
+# same-shape runs).  tests/test_executor.py + tests/test_sweep.py assert on
+# these.  The sweep counters live here (not in repro.api.sweep) so one reset
+# covers every scan-family entry point.
 STATS = {"lockstep_calls": 0, "lockstep_traces": 0,
+         "lockstep_gap_calls": 0, "lockstep_gap_traces": 0,
          "lag_calls": 0, "lag_traces": 0,
-         "sweep_calls": 0, "sweep_traces": 0}
+         "sweep_calls": 0, "sweep_traces": 0,
+         "sweep_lag_calls": 0, "sweep_lag_traces": 0}
 
 
 def reset_stats() -> None:
@@ -84,15 +105,29 @@ def scan_supported(method: MethodConfig, cluster: ClusterModel, *,
                    eval_mode: str = "batched",
                    target_gap: float | None = None,
                    time_budget: float | None = None) -> tuple[bool, str]:
-    """Can this run compile to one scan?  Returns (ok, reason-if-not)."""
+    """Can this run compile to one scan?  Returns (ok, reason-if-not).
+
+    ``target_gap`` early stop is scan-capable for the lockstep protocols:
+    the duality-gap certificate moves in-graph and a ``done`` flag in the
+    scan carry freezes the state once the target is reached
+    (compute-and-mask; see :func:`lockstep_run_gap_traced`).  ``lag`` and
+    the group family keep the event loop for early stop, as does
+    ``time_budget`` (its stop point depends on interleaved host accounting).
+    """
     if method.exact_dual_feedback:
         return False, ("exact_dual_feedback needs a host lstsq per round "
                        "(reference path only)")
-    if target_gap is not None or eval_mode == "stream":
-        return False, ("streamed certificates / target_gap early stop need "
-                       "the per-round event loop")
     if time_budget is not None:
         return False, "time_budget early stop needs the per-round event loop"
+    if target_gap is not None:
+        if method.protocol not in LOCKSTEP_PROTOCOLS:
+            return False, (
+                f"target_gap early stop compiles in-graph only for lockstep "
+                f"protocols {LOCKSTEP_PROTOCOLS}; {method.protocol!r} needs "
+                f"the per-round event loop")
+    elif eval_mode == "stream":
+        return False, ("streamed certificates without a gap target need "
+                       "the per-round event loop")
     if method.protocol in LOCKSTEP_PROTOCOLS:
         return True, ""
     if method.protocol == "lag":
@@ -143,12 +178,20 @@ class ScanRun:
     w: jax.Array
     alpha: jax.Array
     alpha_applied: jax.Array | None = None
+    # target_gap runs: why/when the run stopped, plus the records already
+    # materialized from the in-graph certificates (nothing left to defer).
+    stop_reason: str = "completed"
+    stream_records: list | None = None
 
     def materialize_records(self, problem, eval_mode: str):
         """The run's RunRecords; same certificate ops as the event path
-        (``batched``: one bucketed ``lax.map``; ``replay``: eager oracle)."""
+        (``batched``: one bucketed ``lax.map``; ``replay``: eager oracle).
+        target_gap runs computed their certificates in-graph and carry the
+        finished records (``stream_records``)."""
         from repro.core.acpd import RunRecord
 
+        if self.stream_records is not None:
+            return self.stream_records
         if not self.eval_rounds:
             return []
         if eval_mode == "replay":
@@ -187,19 +230,25 @@ class ScanRun:
 
 def run_scan(problem: objectives.Problem, method: MethodConfig,
              cluster: ClusterModel, *, num_outer: int, seed: int,
-             eval_every: int, norms_sq=None) -> ScanRun:
+             eval_every: int, norms_sq=None,
+             target_gap: float | None = None) -> ScanRun:
     """Execute one run on the scan backend (caller checked eligibility).
 
     ``norms_sq``: optional precomputed per-row squared norms (the Session's
     protocol instance already holds them; passing them avoids a second full
-    pass over ``X``).
+    pass over ``X``).  ``target_gap``: gap early stop, lockstep only (the
+    certificate moves in-graph; see :func:`lockstep_run_gap_traced`).
     """
     if norms_sq is None:
         norms_sq = jnp.sum(problem.X * problem.X, axis=-1)
     if method.protocol in LOCKSTEP_PROTOCOLS:
         return _run_lockstep(problem, method, cluster, num_outer=num_outer,
                              seed=seed, eval_every=eval_every,
-                             norms_sq=norms_sq)
+                             norms_sq=norms_sq, target_gap=target_gap)
+    if target_gap is not None:
+        raise ValueError(
+            f"target_gap early stop on the scan backend is lockstep-only; "
+            f"{method.protocol!r} runs it through the event loop")
     if method.protocol == "lag":
         return _run_lag(problem, method, cluster, num_outer=num_outer,
                         seed=seed, eval_every=eval_every, norms_sq=norms_sq)
@@ -244,6 +293,49 @@ def lockstep_run_traced(key, X, y, norms_sq, lam, n, sigma_p, gamma, *, loss,
     return w, alpha, ws, alphas
 
 
+def lockstep_run_traced_sharded(key, X, y, norms_sq, lam, n, sigma_p, gamma,
+                                *, loss, num_steps, solver, length, axis,
+                                num_workers):
+    """:func:`lockstep_run_traced` on ONE worker shard of a device mesh.
+
+    Runs inside ``shard_map`` with the worker axis partitioned over mesh
+    axis ``axis``: ``X``/``y``/``norms_sq`` are the local ``(K_loc, n_k, d)``
+    blocks, ``w`` stays replicated, and each round does exactly one
+    cross-shard reduction (the ``psum`` of the shard-local ``sum_k v_k``).
+    The PRNG split chain is the global one -- every shard splits the full
+    ``num_workers`` keys and slices its block by ``axis_index`` -- so each
+    worker sees the same key as the unsharded run.  Per-shard ops keep
+    unbatched per-worker shapes inside the local vmap, so kernel-backed
+    solvers (e.g. the Pallas SDCA inner loop in
+    :mod:`repro.kernels.sdca_inner`) drop in per shard unchanged.
+
+    The partial-sum + psum association differs from the unsharded
+    ``sum(v, axis=0)``, so results are deterministic for a fixed mesh but
+    NOT bit-identical to ``shard="none"`` -- a perf mode, like
+    ``batch="vmap"`` (tests pin allclose agreement instead).
+    """
+    K_loc, n_k, d = X.shape
+    w0 = jnp.zeros((d,), X.dtype)
+    alpha0 = jnp.zeros((K_loc, n_k), X.dtype)
+    shard = jax.lax.axis_index(axis)
+
+    def step(carry, _):
+        key, w, alpha = carry
+        key, sub = jax.random.split(key)
+        keys = jax.random.split(sub, num_workers)
+        local_keys = jax.lax.dynamic_slice_in_dim(keys, shard * K_loc, K_loc)
+        dalpha, v = engine._lockstep_local_solves(
+            w, alpha, X, y, norms_sq, lam, n, sigma_p, local_keys, loss=loss,
+            num_steps=num_steps, solver=solver)
+        alpha = alpha + gamma * dalpha
+        w = w + gamma * jax.lax.psum(jnp.sum(v, axis=0), axis)
+        return (key, w, alpha), (w, alpha)
+
+    (key, w, alpha), (ws, alphas) = jax.lax.scan(
+        step, (key, w0, alpha0), None, length=length)
+    return w, alpha, ws, alphas
+
+
 @partial(jax.jit, static_argnames=("loss", "num_steps", "solver", "length"))
 def _lockstep_scan(key, X, y, norms_sq, lam, n, sigma_p, gamma, *, loss,
                    num_steps, solver, length):
@@ -251,6 +343,82 @@ def _lockstep_scan(key, X, y, norms_sq, lam, n, sigma_p, gamma, *, loss,
     return lockstep_run_traced(key, X, y, norms_sq, lam, n, sigma_p, gamma,
                                loss=loss, num_steps=num_steps, solver=solver,
                                length=length)
+
+
+def gap_floor_f32(target_gap: float) -> np.float32:
+    """The largest float32 ``t`` with ``float(t) <= target_gap``.
+
+    The event loop's early stop compares ``float(gap_f32) <= target_gap`` in
+    float64; the in-graph test compares float32 against float32.  Flooring
+    the target to the f32 grid makes the two predicates decide identically
+    for every representable gap value, so the executors stop on the same
+    round bit-for-bit.
+    """
+    t = np.float32(target_gap)
+    if float(t) > target_gap:
+        t = np.nextafter(t, np.float32(-np.inf), dtype=np.float32)
+    return t
+
+
+def lockstep_run_gap_traced(key, X, y, norms_sq, lam, n, sigma_p, gamma,
+                            gap_target, eval_mask, *, loss, num_steps, solver,
+                            length):
+    """Lockstep run with in-graph duality-gap early stop, as one scan.
+
+    The round body is the shared :func:`engine._lockstep_round`; at eval
+    boundaries (``eval_mask``, a static-per-round bool stream) the duality
+    gap certificate is computed in-graph via the shared
+    :func:`engine._certificate_ops`, and a ``done`` flag in the
+    carry freezes ``(w, alpha)`` once the gap reaches ``gap_target``
+    (compute-and-mask: later rounds still execute but write nothing).  The
+    caller truncates the per-round outputs at the stop boundary post hoc --
+    trajectories and certificates up to the stop are bit-identical to the
+    event loop's streamed path (pinned by tests/test_executor.py).
+
+    ``gap_target`` must be pre-floored to the f32 grid
+    (:func:`gap_floor_f32`) so the f32 comparison decides like the host's
+    f64 one.
+    """
+    K, n_k, d = X.shape
+    w0 = jnp.zeros((d,), X.dtype)
+    alpha0 = jnp.zeros((K, n_k), X.dtype)
+
+    def certify(args):
+        w, alpha = args
+        return engine._certificate_ops(w, alpha, X, y, lam, loss=loss)
+
+    def no_cert(args):
+        z = jnp.zeros((), args[0].dtype)
+        return z, z, z, z
+
+    def step(carry, is_eval):
+        key, w, alpha, done = carry
+        key, w_new, alpha_new = engine._lockstep_round(
+            key, w, alpha, X, y, norms_sq, lam, n, sigma_p, gamma, loss=loss,
+            num_steps=num_steps, solver=solver)
+        w = jnp.where(done, w, w_new)
+        alpha = jnp.where(done, alpha, alpha_new)
+        do_cert = is_eval & ~done
+        p, dv, gap, gap_srv = jax.lax.cond(do_cert, certify, no_cert,
+                                           (w, alpha))
+        done = done | (do_cert & (gap <= gap_target))
+        return (key, w, alpha, done), (p, dv, gap, gap_srv, done)
+
+    (key, w, alpha, done), ys = jax.lax.scan(
+        step, (key, w0, alpha0, jnp.zeros((), bool)), eval_mask,
+        length=length)
+    return w, alpha, ys
+
+
+@partial(jax.jit, static_argnames=("loss", "num_steps", "solver", "length"))
+def _lockstep_gap_scan(key, X, y, norms_sq, lam, n, sigma_p, gamma,
+                       gap_target, eval_mask, *, loss, num_steps, solver,
+                       length):
+    STATS["lockstep_gap_traces"] += 1  # trace-time side effect, not per call
+    return lockstep_run_gap_traced(key, X, y, norms_sq, lam, n, sigma_p,
+                                   gamma, gap_target, eval_mask, loss=loss,
+                                   num_steps=num_steps, solver=solver,
+                                   length=length)
 
 
 def lockstep_solver(method: MethodConfig):
@@ -293,7 +461,7 @@ def lockstep_accounts(method: MethodConfig, cluster: ClusterModel, d: int,
 
 
 def _run_lockstep(problem, method, cluster, *, num_outer, seed, eval_every,
-                  norms_sq):
+                  norms_sq, target_gap=None):
     K, n_k, d = problem.X.shape
     R = num_outer
     if R == 0:
@@ -302,6 +470,11 @@ def _run_lockstep(problem, method, cluster, *, num_outer, seed, eval_every,
                        jnp.zeros((K, n_k), dt))
     rounds = lockstep_accounts(method, cluster, d, num_rounds=R, seed=seed)
     sigma_p = method.resolved_sigma_prime(K)
+    if target_gap is not None:
+        return _run_lockstep_gap(problem, method, rounds, sigma_p,
+                                 num_outer=R, seed=seed,
+                                 eval_every=eval_every, norms_sq=norms_sq,
+                                 target_gap=target_gap)
     STATS["lockstep_calls"] += 1
     w, alpha, ws, alphas = _lockstep_scan(
         jax.random.key(seed), problem.X, problem.y, norms_sq, problem.lam,
@@ -313,19 +486,49 @@ def _run_lockstep(problem, method, cluster, *, num_outer, seed, eval_every,
     return ScanRun(method, rounds, evals, ws[idx], alphas[idx], w, alpha)
 
 
+def _run_lockstep_gap(problem, method, rounds, sigma_p, *, num_outer, seed,
+                      eval_every, norms_sq, target_gap):
+    """Lockstep + target_gap: one gap-scan dispatch, records truncated at the
+    stop boundary from the in-graph certificates."""
+    from repro.core.acpd import RunRecord
+
+    R = num_outer
+    eval_mask = np.asarray([(r + 1) % eval_every == 0 for r in range(R)])
+    STATS["lockstep_gap_calls"] += 1
+    w, alpha, ys = _lockstep_gap_scan(
+        jax.random.key(seed), problem.X, problem.y, norms_sq, problem.lam,
+        problem.n, sigma_p, method.gamma, gap_floor_f32(target_gap),
+        jnp.asarray(eval_mask), loss=problem.loss, num_steps=method.H,
+        solver=lockstep_solver(method), length=R)
+    p, dv, gap, gap_srv = (np.asarray(a, np.float64) for a in ys[:4])
+    done = np.asarray(ys[4])
+    hit = bool(done.any())
+    stop = int(np.argmax(done)) if hit else R - 1
+    records = []
+    for r in range(stop + 1):
+        if not eval_mask[r]:
+            continue
+        a = rounds[r]
+        records.append(RunRecord(
+            iteration=r + 1, sim_time=a.sim_time, gap=float(gap[r]),
+            gap_server=float(gap_srv[r]), primal=float(p[r]),
+            dual=float(dv[r]), bytes_up=a.bytes_up, bytes_down=a.bytes_down,
+            compute_time=a.compute_time, comm_time=a.comm_time))
+    return ScanRun(method, rounds[:stop + 1], [], None, None, w, alpha,
+                   stop_reason="target_gap" if hit else "completed",
+                   stream_records=records)
+
+
 # ---------------------------------------------------------------------------
 # LAG path: the B-of-K event queue in-graph.
 # ---------------------------------------------------------------------------
 
 
-@partial(jax.jit,
-         static_argnames=("loss", "num_steps", "comp", "length", "lag_window",
-                          "dense_reply_bytes"))
-def _lag_scan(key, X, y, norms_sq, lam, n, sigma_p, gamma, xi, durations,
-              needs, up_bytes, heartbeat_bytes, latency,
-              bandwidth, link_factors, *, loss, num_steps, comp, length,
-              lag_window, dense_reply_bytes):
-    """The whole LAG run in one dispatch: in-graph B-of-K event queue.
+def lag_run_traced(key, X, y, norms_sq, lam, n, sigma_p, gamma, xi, durations,
+                   needs, up_bytes, heartbeat_bytes, latency,
+                   bandwidth, link_factors, *, loss, num_steps, comp, length,
+                   lag_window, dense_reply_bytes):
+    """The whole LAG run as a traced computation: in-graph B-of-K event queue.
 
     Carries per-worker in-flight message state (payload, arrival time f64,
     sequence number) alongside the model state; each round sorts arrivals
@@ -337,8 +540,12 @@ def _lag_scan(key, X, y, norms_sq, lam, n, sigma_p, gamma, xi, durations,
     the timing arithmetic is float64 like the host's; all model math is
     pinned float32.  ``dense_reply_bytes`` is 0 for sparse compressors
     (replies billed on in-graph nnz) or the static dense byte count.
+
+    Shared by the single-run jit below and the batched sweep runner
+    (:mod:`repro.api.sweep`), which maps/vmaps it over delay x seed x gamma
+    cells -- durations, link factors and latency/bandwidth are traced
+    operands, so a whole delay-model axis batches into one computation.
     """
-    STATS["lag_traces"] += 1  # trace-time side effect, not per call
     K, n_k, d = X.shape
     dt = X.dtype
     f64 = jnp.float64
@@ -519,6 +726,61 @@ def _lag_scan(key, X, y, norms_sq, lam, n, sigma_p, gamma, xi, durations,
     return state, ys
 
 
+@partial(jax.jit,
+         static_argnames=("loss", "num_steps", "comp", "length", "lag_window",
+                          "dense_reply_bytes"))
+def _lag_scan(key, X, y, norms_sq, lam, n, sigma_p, gamma, xi, durations,
+              needs, up_bytes, heartbeat_bytes, latency,
+              bandwidth, link_factors, *, loss, num_steps, comp, length,
+              lag_window, dense_reply_bytes):
+    """One LAG run = one dispatch (jit over :func:`lag_run_traced`)."""
+    STATS["lag_traces"] += 1  # trace-time side effect, not per call
+    return lag_run_traced(key, X, y, norms_sq, lam, n, sigma_p, gamma, xi,
+                          durations, needs, up_bytes, heartbeat_bytes,
+                          latency, bandwidth, link_factors, loss=loss,
+                          num_steps=num_steps, comp=comp, length=length,
+                          lag_window=lag_window,
+                          dense_reply_bytes=dense_reply_bytes)
+
+
+def lag_needs(method: MethodConfig, K: int, num_rounds: int) -> np.ndarray:
+    """Per-round arrival counts of a LAG run (B-of-K + T-periodic barrier)."""
+    T = method.T
+    return np.asarray([K if r % T == T - 1 else min(method.B, K)
+                       for r in range(num_rounds)], np.int64)
+
+
+def lag_durations(method: MethodConfig, cluster: ClusterModel, *,
+                  num_rounds: int, seed: int):
+    """Pre-sample a LAG run's compute stream; returns (durations, delay).
+
+    Row 0 feeds the t=0 launch wave, row 1+r feeds round r -- exactly the
+    event executor's one-sample_round-per-_launch_workers consumption.
+    Raises when the delay model cannot pre-sample a (round, worker) stream
+    (callers normally check :func:`scan_supported` first).
+    """
+    delay = cluster.make_delay()
+    rng = np.random.default_rng(seed)
+    durations = delay.sample_stream(num_rounds + 1, method.H, rng,
+                                    lockstep=False)
+    if durations is None:
+        raise ValueError(
+            f"delay model {cluster.delay_model!r} cannot pre-sample a "
+            f"(round, worker) stream; use executor='event'")
+    return durations, delay
+
+
+def lag_accounts(needs: np.ndarray, T: int, sim, bu, bd, ct,
+                 cm) -> list[RoundAccount]:
+    """RoundAccounts from one lag run's per-round scan outputs (host arrays)."""
+    sim = np.asarray(sim)
+    bu, bd = np.asarray(bu), np.asarray(bd)
+    ct, cm = np.asarray(ct), np.asarray(cm)
+    return [RoundAccount(int(needs[r]), r % T == T - 1, float(sim[r]),
+                         int(bu[r]), int(bd[r]), float(ct[r]), float(cm[r]))
+            for r in range(len(needs))]
+
+
 def _run_lag(problem, method, cluster, *, num_outer, seed, eval_every,
              norms_sq):
     from jax.experimental import enable_x64
@@ -526,17 +788,8 @@ def _run_lag(problem, method, cluster, *, num_outer, seed, eval_every,
     K, n_k, d = problem.X.shape
     T = method.T
     R = num_outer * T
-    delay = cluster.make_delay()
-    rng = np.random.default_rng(seed)
-    # Row 0 feeds the t=0 launch wave, row 1+r feeds round r -- exactly the
-    # event executor's one-sample_round-per-_launch_workers consumption.
-    durations = delay.sample_stream(R + 1, method.H, rng, lockstep=False)
-    if durations is None:  # caller should have checked scan_supported
-        raise ValueError(
-            f"delay model {cluster.delay_model!r} cannot pre-sample a "
-            f"(round, worker) stream; use executor='event'")
-    needs = np.asarray([K if r % T == T - 1 else min(method.B, K)
-                        for r in range(R)], np.int64)
+    durations, delay = lag_durations(method, cluster, num_rounds=R, seed=seed)
+    needs = lag_needs(method, K, R)
     comp = compress_lib.for_method(method, d)
     dense = isinstance(comp, compress_lib.Dense)
     up_bytes = comp.wire_bytes(d)
@@ -566,13 +819,7 @@ def _run_lag(problem, method, cluster, *, num_outer, seed, eval_every,
             dense_reply_bytes=d * 4 if dense else 0)
 
     ws, alpha_applied_rows, sim, bu, bd, ct, cm = ys
-    sim = np.asarray(sim)
-    bu, bd = np.asarray(bu), np.asarray(bd)
-    ct, cm = np.asarray(ct), np.asarray(cm)
-    rounds = [RoundAccount(int(needs[r]), r % T == T - 1, float(sim[r]),
-                           int(bu[r]), int(bd[r]), float(ct[r]),
-                           float(cm[r]))
-              for r in range(R)]
+    rounds = lag_accounts(needs, T, sim, bu, bd, ct, cm)
     evals = _eval_indices(R, eval_every)
     idx = jnp.asarray(evals, jnp.int32)
     return ScanRun(method, rounds, evals, ws[idx], alpha_applied_rows[idx],

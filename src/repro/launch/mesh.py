@@ -38,6 +38,15 @@ def make_host_mesh() -> Mesh:
     return make_mesh((1, n), ("data", "model"))
 
 
+def make_sweep_mesh(n_shards: int, axis: str) -> Mesh:
+    """1-D mesh over the first ``n_shards`` local devices for the sharded
+    sweep runner (:mod:`repro.api.sweep`): ``axis`` is ``"cells"`` or
+    ``"workers"``.  ``n_shards`` must not exceed the local device count
+    (callers size it via :func:`repro.api.sweep.resolve_shard`, which picks
+    the largest power of two that fits)."""
+    return make_mesh((n_shards,), (axis,))
+
+
 def data_axes(mesh: Mesh) -> tuple[str, ...]:
     return tuple(a for a in ("pod", "data") if a in mesh.shape)
 

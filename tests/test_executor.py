@@ -123,23 +123,71 @@ def test_event_protocols_stay_on_the_queue(small_problem, protocol):
                     executor="scan")
 
 
-def test_scan_rejects_early_stop_and_bad_names(small_problem):
+def test_scan_early_stop_routing(small_problem):
+    """target_gap scans for lockstep (in-graph certificates + done mask);
+    time_budget and non-lockstep early stop keep the event loop."""
     m = baselines.cocoa_plus(K, H=16)
-    with pytest.raises(ValueError, match="executor='scan'"):
-        api.Session(small_problem, m, _cluster(), num_outer=1,
-                    executor="scan", target_gap=1e-3)
     with pytest.raises(ValueError, match="executor='scan'"):
         api.Session(small_problem, m, _cluster(), num_outer=1,
                     executor="scan", time_budget=1.0)
     with pytest.raises(ValueError, match="unknown executor"):
         api.Session(small_problem, m, _cluster(), num_outer=1,
                     executor="fused")
-    # auto + early stop silently uses the event loop (streaming works).
-    _, session = _run(small_problem, m, _cluster(), "auto", num_outer=1)
-    assert session.executor == "scan"
+    # auto + target_gap: lockstep scans, lag falls back to the event loop.
     s = api.Session(small_problem, m, _cluster(), num_outer=1,
                     target_gap=1e-12)
+    assert s.executor == "scan"
+    s = api.Session(small_problem, _METHODS["lag"](), _cluster(),
+                    num_outer=1, target_gap=1e-12)
     assert s.executor == "event"
+    with pytest.raises(ValueError, match="executor='scan'"):
+        api.Session(small_problem, _METHODS["lag"](), _cluster(),
+                    num_outer=1, executor="scan", target_gap=1e-12)
+    # auto + time_budget: event for everyone.
+    s = api.Session(small_problem, m, _cluster(), num_outer=1,
+                    time_budget=1.0)
+    assert s.executor == "event"
+    # auto + target_gap caps the round budget: the gap scan computes masked
+    # rounds to the end, so huge budgets stay on the stop-at-the-hit event
+    # loop (forcing executor="scan" still overrides).
+    big = executor.GAP_SCAN_AUTO_MAX_ROUNDS + 1
+    s = api.Session(small_problem, m, _cluster(), num_outer=big,
+                    target_gap=1e-12)
+    assert s.executor == "event"
+    s = api.Session(small_problem, m, _cluster(), num_outer=big,
+                    target_gap=1e-12, executor="scan")
+    assert s.executor == "scan"
+
+
+@pytest.mark.parametrize("protocol", sorted(executor.LOCKSTEP_PROTOCOLS))
+def test_target_gap_scan_matches_event_stream(small_problem, protocol):
+    """The early-stop satellite contract: a target_gap run on the scan
+    backend reproduces the event loop's streamed session exactly -- the
+    same interleaved event sequence, the same truncation point, the same
+    certificates -- both when the target is hit mid-run and when the budget
+    completes first."""
+    method = _METHODS[protocol]()
+    # A target the run reaches partway: the 4th eval boundary's gap.
+    probe, _ = _run(small_problem, method, _cluster(), "scan", num_outer=30,
+                    eval_every=2)
+    for target, want_reason in (
+            (probe.records[3].gap * 1.0000001, "target_gap"),
+            (probe.records[-1].gap * 0.5, "completed")):
+        kw = dict(num_outer=30, eval_every=2, seed=0, target_gap=target)
+        sessions = {}
+        events = {}
+        for exe in ("event", "scan"):
+            sessions[exe] = api.Session(small_problem, method, _cluster(),
+                                        executor=exe, **kw)
+            events[exe] = list(sessions[exe])
+        assert sessions["scan"].executor == "scan"
+        assert [type(e) for e in events["event"]] == \
+            [type(e) for e in events["scan"]]
+        for a, b in zip(events["event"], events["scan"]):
+            assert a == b, (a, b)
+        assert events["scan"][-1].reason == want_reason
+        _assert_runs_identical(sessions["scan"].result(),
+                               sessions["event"].result())
 
 
 def test_scan_session_streams_the_same_events(small_problem):
