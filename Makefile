@@ -4,13 +4,19 @@
 
 PY ?= python
 
-.PHONY: check test docs-check bench-quick bench-engine-quick \
+.PHONY: check test docs-check analyze bench-quick bench-engine-quick \
 	bench-sweep-quick bench
 
-check: test docs-check bench-quick
+check: test docs-check analyze bench-quick
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
+
+# Static analysis: project lint + trace-time contract checks against the
+# checked-in baseline (ANALYSIS_BASELINE.json). Nonzero on any new finding
+# or failed contract; see docs/static-analysis.md.
+analyze:
+	PYTHONPATH=src $(PY) -m repro analyze
 
 # Offline markdown link-check + JSON round-trip of every shipped preset
 # (the CI docs job runs exactly this target).

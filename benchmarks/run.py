@@ -18,6 +18,24 @@ import sys
 import time
 
 
+def _analysis_findings() -> dict:
+    """Static-analysis debt alongside the perf numbers: total lint findings
+    over src/ plus how many are new vs the checked-in baseline, so the
+    trajectory shows contract debt shrinking, not just wall-clock."""
+    try:
+        from repro.analysis import Baseline, lint_paths
+        from repro.analysis.cli import BASELINE_NAME, _repo_root
+
+        root = _repo_root()
+        findings = lint_paths([root / "src"], root=root)
+        new, accepted, stale = Baseline.load(
+            root / BASELINE_NAME).split(findings)
+        return {"total": len(findings), "new": len(new),
+                "baseline": len(accepted), "stale": len(stale)}
+    except Exception as e:  # never fail a bench run over the analyzer
+        return {"error": repr(e)}
+
+
 def main(argv: list[str] | None = None) -> None:
     parser = argparse.ArgumentParser(description=__doc__)
     parser.add_argument("--quick", action="store_true",
@@ -56,8 +74,10 @@ def main(argv: list[str] | None = None) -> None:
         failure_file.unlink()  # clean run: drop the stale failure record
     # Append this run's headline perf numbers to the top-level trajectory
     # (BENCH_SWEEP.json) so perf regressions are visible across PRs.
-    common.append_trajectory(common.trajectory_entry(
-        args.quick, failures, [m.__name__ for m in mods]))
+    entry = common.trajectory_entry(
+        args.quick, failures, [m.__name__ for m in mods])
+    entry["analysis_findings"] = _analysis_findings()
+    common.append_trajectory(entry)
     print(f"# all benchmarks done in {time.time() - t0:.1f}s"
           + (f" ({len(failures)} FAILED)" if failures else ""),
           file=sys.stderr)

@@ -11,4 +11,5 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python -m pytest -x -q
 python scripts/check_links.py README.md ROADMAP.md docs
 python scripts/check_specs.py
+python -m repro analyze
 python -m benchmarks.run --quick

@@ -11,6 +11,10 @@ Subcommands:
 * ``bench``            -- the benchmark driver; ``--quick`` and ``--only``
   are forwarded to ``benchmarks/run.py`` so both entry points share one
   driver (run from the repo root with ``PYTHONPATH=src``).
+* ``analyze``          -- the static analyzer (AST lint + trace-time
+  contract checks, see :mod:`repro.analysis` and docs/static-analysis.md);
+  exits nonzero on findings not in ``ANALYSIS_BASELINE.json`` or on a
+  failed contract.
 """
 
 from __future__ import annotations
@@ -137,6 +141,20 @@ def main(argv: list[str] | None = None) -> int:
     p_bench.add_argument("--only", default=None,
                          help="substring filter on benchmark module names")
     p_bench.set_defaults(fn=_cmd_bench)
+
+    # `analyze` owns its flag surface (see repro.analysis.cli); forward the
+    # raw remainder so `repro analyze --update-baseline` etc. just work.
+    sub.add_parser(
+        "analyze", add_help=False,
+        help="static analysis: project lint + trace-contract checks "
+             "(docs/static-analysis.md)").set_defaults(fn=None)
+
+    if argv is None:
+        argv = sys.argv[1:]
+    if argv and argv[0] == "analyze":
+        from repro.analysis.cli import main as analyze_main
+
+        return analyze_main(argv[1:])
 
     args = parser.parse_args(argv)
     return args.fn(args)

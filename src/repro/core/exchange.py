@@ -156,7 +156,8 @@ def exchange_sequential(cfg: ExchangeConfig, grad_fn, params, grouped_batch,
     update = jax.tree.unflatten(treedef, update_leaves)
     new_state = ExchangeState(residual=jax.tree.unflatten(
         treedef, [new_res_flat[i] for i in sorted(new_res_flat)]))
-    total = float(sum(np.prod(v.shape) for v in jax.tree.leaves(state.residual)))
+    total = float(sum(  # analysis: host-ok (static shapes, not traced values)
+        np.prod(v.shape) for v in jax.tree.leaves(state.residual)))
     metrics = {
         "exchange/sent_fraction": sent_total / jnp.float32(max(total, 1.0)),
         "exchange/bytes_step": bytes_total,

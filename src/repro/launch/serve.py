@@ -55,7 +55,13 @@ def main() -> None:
         plen = plen  # patches + text both occupy cache slots
     out = [tok]
     t1 = time.time()
-    step_fn = jax.jit(lambda p, t, c, n: decode_step(p, t, c, n, cfg))
+    # The decode loop rebinds ``caches`` every step: donate it so each step
+    # updates the KV buffers in place instead of allocating a second copy
+    # (found by `repro analyze`, rule jit-donation).
+    step_fn = jax.jit(
+        lambda params, tok, caches, pos: decode_step(params, tok, caches,
+                                                     pos, cfg),
+        donate_argnums=(2,))
     for i in range(args.gen - 1):
         logits, caches = step_fn(params, tok, caches, jnp.int32(plen + 1 + i))
         tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)

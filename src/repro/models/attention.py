@@ -123,7 +123,7 @@ def attend_blocked(
     use_window = window is not None and exploit_window and window < S
     if use_window:
         # Each query block needs keys in [blk_start - window, blk_start + bq).
-        wpad = -(-int(window) // bk) * bk
+        wpad = -(-int(window) // bk) * bk  # analysis: host-ok (static config)
         Lw = wpad + bq
         k_src = jnp.pad(k, ((0, 0), (wpad, 0), (0, 0), (0, 0)))
         v_src = jnp.pad(v, ((0, 0), (wpad, 0), (0, 0), (0, 0)))

@@ -65,7 +65,7 @@ def _layout(spec: FlashSpec, S: int):
     use_window = spec.window is not None and spec.window < S
     if use_window:
         bk = min(spec.block_k, S)
-        wpad = -(-int(spec.window) // bk) * bk
+        wpad = -(-int(spec.window) // bk) * bk  # analysis: host-ok (static)
         Lw = wpad + bq
         nk = Lw // bk
         return bq, nq, bk, nk, wpad, Lw, True

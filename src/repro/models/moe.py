@@ -35,7 +35,9 @@ def moe_spec(cfg: ModelConfig) -> dict:
     }
 
 
-def capacity(num_tokens: int, cfg: ModelConfig) -> int:
+def capacity(num_tokens: int, cfg: ModelConfig) -> int:  # analysis: host-ok
+    # Static Python arithmetic on config values, even when called from a
+    # traced layer (num_tokens comes from a shape).
     c = int(num_tokens * cfg.experts_per_token * cfg.moe_capacity_factor
             / cfg.num_experts) + 1
     # Round to a lane multiple so the (E, C, D) buffer tiles cleanly.

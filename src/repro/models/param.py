@@ -190,7 +190,8 @@ def constraint(x: jax.Array, mesh: Mesh | None, *axes: str | tuple[str, ...] | N
             continue
         cand = (target,) if isinstance(target, str) else tuple(target)
         cand = tuple(c for c in cand if c in mesh.shape)
-        total = int(np.prod([mesh.shape[c] for c in cand])) if cand else 0
+        total = (int(np.prod([mesh.shape[c] for c in cand]))  # analysis: host-ok
+                 if cand else 0)
         if cand and total and dim % total == 0:
             resolved.append(cand if len(cand) > 1 else cand[0])
             any_set = True

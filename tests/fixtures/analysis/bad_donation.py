@@ -1,0 +1,32 @@
+"""Seeded violations for the `jit-donation` rule."""
+
+from functools import partial
+
+import jax
+
+
+@jax.jit  # VIOLATION
+def update(state, grad):
+    return {k: state[k] - grad[k] for k in state}
+
+
+@partial(jax.jit, static_argnames=("lr",))  # VIOLATION
+def sgd_step(opt_state, grad, *, lr):
+    return opt_state - lr * grad
+
+
+def make_step(cfg):
+    def body(carry, batch):
+        return carry, batch
+
+    return jax.jit(body)  # VIOLATION (carry not donated)
+
+
+@partial(jax.jit, donate_argnums=(0,))  # ok: donates its carry
+def donated(state, grad):
+    return state - grad
+
+
+@jax.jit  # ok: no carry-style parameters
+def evaluate(params, batch):
+    return params, batch

@@ -1,0 +1,14 @@
+"""Seeded violations for the `f64-without-x64` rule."""
+
+import jax.numpy as jnp
+
+
+def timings(n):
+    return jnp.zeros((n,), jnp.float64)  # VIOLATION
+
+
+def guarded(n):
+    from jax.experimental import enable_x64
+
+    with enable_x64():
+        return jnp.zeros((n,), jnp.float64)  # ok: enable_x64 in scope

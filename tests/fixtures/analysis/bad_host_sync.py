@@ -1,0 +1,39 @@
+"""Seeded violations for the `traced-host-sync` rule.
+
+``step`` is traced (passed to ``lax.scan``); ``host_report`` is plain host
+code and must NOT be flagged even though it uses the same calls.
+"""
+
+import random
+import time
+
+import jax
+import numpy as np
+
+
+def step(carry, _):
+    t = time.time()  # VIOLATION
+    jitter = random.random()  # VIOLATION
+    host = np.asarray(carry)  # VIOLATION
+    scale = float(carry)  # VIOLATION
+    return carry + t + jitter + host.sum() + scale, None
+
+
+def helper(x):
+    # Reachable from `step`? No -- but reachable from `run` via `step` only.
+    return x.item()  # VIOLATION (called from the traced `step` chain below)
+
+
+def step2(carry, _):
+    return helper(carry), None
+
+
+def run(x):
+    y, _ = jax.lax.scan(step, x, None, length=3)
+    z, _ = jax.lax.scan(step2, y, None, length=3)
+    return z
+
+
+def host_report(result):
+    # Host-side by design: unreachable from any traced entry point.
+    print(f"{time.time()}: {float(result):.3f}", np.asarray(result))

@@ -1,0 +1,9 @@
+"""Seeded violations for the `mesh-via-make-mesh` rule."""
+
+import jax
+from jax.experimental import mesh_utils
+
+
+def build_mesh():
+    devices = mesh_utils.create_device_mesh((1,))  # VIOLATION
+    return jax.sharding.Mesh(devices, ("cells",))  # VIOLATION

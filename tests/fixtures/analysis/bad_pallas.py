@@ -1,0 +1,12 @@
+"""Seeded violations for the `pallas-scalar-index` rule."""
+
+from jax.experimental import pallas as pl
+
+
+def kernel(x_ref, o_ref):
+    k = pl.program_id(0)
+    o_ref[k] = x_ref[k] + 1.0  # VIOLATION  # VIOLATION (both subscripts)
+    row = pl.load(x_ref, (k, slice(None)))  # VIOLATION
+    pl.store(o_ref, (pl.ds(k, 1),), row[None])  # ok: pl.ds
+    first = x_ref[0]  # ok: constant index
+    return first

@@ -1,0 +1,28 @@
+"""Seeded violations for the `registry-hooks` rule.
+
+Linted as source only (never imported), so nothing here reaches the real
+registries.
+"""
+
+from repro.core.compress import Compressor, register_compressor
+from repro.core.engine import Protocol, register_protocol
+from repro.core.solvers import register_solver
+
+
+@register_protocol("fixture_bad_proto")  # VIOLATION (missing hooks)
+class IncompleteProtocol(Protocol):
+    def num_rounds(self, R):
+        return R
+
+
+@register_compressor("fixture_bad_comp")  # VIOLATION (missing hooks)
+class IncompleteCompressor(Compressor):
+    def compress(self, dw):
+        return dw, dw
+
+
+def not_a_solver(w_eff, alpha):
+    return alpha
+
+
+register_solver("fixture_bad_solver")(not_a_solver)  # VIOLATION

@@ -1,0 +1,12 @@
+"""Seeded violations for the `version-floor` rule (JAX floor is 0.4.37)."""
+
+import jax
+
+
+def flatten_params(tree):
+    leaves, treedef = jax.tree.flatten_with_path(tree)  # VIOLATION
+    return leaves, treedef
+
+
+def explicit_axis():
+    return jax.sharding.AxisType  # VIOLATION

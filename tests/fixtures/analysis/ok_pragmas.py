@@ -1,0 +1,40 @@
+"""The negative fixture: every violation class, each pragma-suppressed.
+
+Must produce ZERO findings -- asserts the pragma grammar end to end
+(`host-ok` / `x64-ok` aliases, `ignore[rule]`, def-scoped suppression).
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def step(carry, _):
+    t = time.time()  # analysis: host-ok
+    return carry + t, None
+
+
+def step2(carry, _):  # analysis: ignore[traced-host-sync]
+    # Def-scoped pragma: suppresses every line in this function.
+    scale = float(carry)
+    return carry * scale, None
+
+
+def run(x):
+    y, _ = jax.lax.scan(step, x, None, length=2)
+    z, _ = jax.lax.scan(step2, y, None, length=2)
+    return z
+
+
+def timings(n):  # analysis: x64-ok
+    return jnp.zeros((n,), jnp.float64)
+
+
+@jax.jit  # analysis: ignore[jit-donation]
+def update(state, grad):
+    return state - grad
+
+
+def flatten_params(tree):
+    return jax.tree.flatten_with_path(tree)  # analysis: ignore

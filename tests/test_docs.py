@@ -24,7 +24,8 @@ def _python_blocks(path: pathlib.Path) -> list[str]:
                                 "docs/architecture.md",
                                 "docs/extending-protocols.md",
                                 "docs/extending-compressors.md",
-                                "docs/performance.md"])
+                                "docs/performance.md",
+                                "docs/static-analysis.md"])
 def test_markdown_links_resolve(md):
     path = ROOT / md
     assert path.exists(), md
@@ -34,7 +35,8 @@ def test_markdown_links_resolve(md):
 
 @pytest.mark.parametrize("guide", ["docs/extending-protocols.md",
                                    "docs/extending-compressors.md",
-                                   "docs/performance.md"])
+                                   "docs/performance.md",
+                                   "docs/static-analysis.md"])
 def test_extension_guide_examples_run_as_is(guide):
     """The acceptance bar for the guides: their code is real. All python
     blocks of a guide share one namespace and must run top to bottom
@@ -51,12 +53,13 @@ def test_extension_guide_examples_run_as_is(guide):
 
 def test_readme_documents_every_registry_entry():
     """The capability matrix must not rot: every registered protocol,
-    compressor, and delay model appears in README.md."""
+    compressor, delay model, and analysis rule appears in README.md."""
+    from repro.analysis import lint
     from repro.core import compress, delays, engine
 
     readme = (ROOT / "README.md").read_text()
     for name in (engine.available_protocols() + compress.available_compressors()
-                 + delays.available_delays()):
-        if name.endswith("_example"):
+                 + delays.available_delays() + lint.available_rules()):
+        if name.endswith(("_example", "-example")):
             continue  # registered by executing the guides' worked examples
         assert f"`{name}`" in readme, f"README does not mention `{name}`"
