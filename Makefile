@@ -5,7 +5,7 @@
 PY ?= python
 
 .PHONY: check test docs-check analyze bench-quick bench-engine-quick \
-	bench-sweep-quick bench
+	bench-sweep-quick serve-smoke bench
 
 check: test docs-check analyze bench-quick
 
@@ -39,6 +39,17 @@ bench-engine-quick:
 bench-sweep-quick:
 	XLA_FLAGS=--xla_force_host_platform_device_count=4 PYTHONPATH=src \
 		$(PY) -m benchmarks.run --quick --only sweep
+
+# Multi-tenant serving smoke on 4 fake host devices: a short open-loop
+# Poisson burst through the live ExperimentService (benchmarks/bench_serve.py)
+# plus the two-tenant streamed demo (examples/serve_experiments.py) -- the
+# CI gate that coalescing, stream demux, and the warm-compile cache still
+# work end to end under a sharded mesh.
+serve-smoke:
+	XLA_FLAGS=--xla_force_host_platform_device_count=4 PYTHONPATH=src \
+		$(PY) -m benchmarks.run --quick --only serve
+	XLA_FLAGS=--xla_force_host_platform_device_count=4 PYTHONPATH=src \
+		$(PY) examples/serve_experiments.py --quick
 
 bench:
 	PYTHONPATH=src $(PY) -m benchmarks.run

@@ -1,0 +1,151 @@
+"""Serving under open-loop Poisson load: throughput, latency, coalescing.
+
+Drives a live :class:`repro.serve.ExperimentService` (dispatcher thread
+started, exactly as ``python -m repro serve`` runs it) with an open-loop
+Poisson arrival process over a straggler-zoo preset mix: three tenants
+submitting CoCoA+ and ACPD-LAG requests against different delay models and
+seeds.  Open-loop means arrival times are drawn up front and never slowed
+by completions, so the service sees genuine queueing pressure and the
+coalescer has real batches to form.
+
+Measured over the post-warmup window (warmup populates the jit/process
+compile caches -- the steady state a persistent service exists for):
+
+* ``sustained_req_per_s`` -- completed requests / wall-clock of the window;
+* ``latency_p50_s`` / ``latency_p99_s`` -- per-request submit->result();
+* ``coalesce_factor`` -- batched requests per compiled dispatch;
+* ``compile_cache_hit_rate`` -- warm-cache hits over cache lookups.
+
+Output: CSV rows plus ``experiments/bench/serve.json`` (provenance-stamped);
+the driver folds the headline numbers into the BENCH_SWEEP.json trajectory
+(including ``--quick`` runs: serving latency is meaningful at smoke scale
+because the batch *policy*, not the problem size, dominates it).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+
+import numpy as np
+
+from benchmarks.common import dump, emit
+
+TENANTS = ("alice", "bob", "carol")
+# Pre-sampleable zoo delays only: markov rides the solo lane (per-launch
+# chain draws, see docs/performance.md) and would make latency bimodal.
+DELAYS = ("constant", "pareto", "shifted_exponential")
+METHODS = ("CoCoA+", "ACPD-LAG")  # two batchable templates -> two cohorts
+
+
+def _specs(quick: bool):
+    from repro import api
+
+    return [api.build_preset(f"zoo-{d}", quick=quick) for d in DELAYS]
+
+
+def _drive(service, specs, *, n_requests: int, rate_hz: float,
+           rng: np.random.Generator):
+    """Submit ``n_requests`` at Poisson arrivals; return (wall_s, latencies,
+    rejected).  Latency is submit -> ``result()`` (full stream delivered)."""
+    from repro.serve import BackpressureError
+
+    latencies: list[float] = []
+    lat_lock = threading.Lock()
+    waiters: list[threading.Thread] = []
+    rejected = 0
+    t_start = time.perf_counter()
+    due = 0.0
+    for i in range(n_requests):
+        due += rng.exponential(1.0 / rate_hz)
+        lead = due - (time.perf_counter() - t_start)
+        if lead > 0:
+            time.sleep(lead)
+        spec = dataclasses.replace(specs[int(rng.integers(len(specs)))],
+                                   seed=int(rng.integers(8)))
+        method = METHODS[int(rng.integers(len(METHODS)))]
+        t0 = time.perf_counter()
+        try:
+            handle = service.submit(TENANTS[i % len(TENANTS)], spec,
+                                    method=method)
+        except BackpressureError:
+            rejected += 1
+            continue
+
+        def _wait(h=handle, t0=t0):
+            h.result(timeout=600)
+            with lat_lock:
+                latencies.append(time.perf_counter() - t0)
+
+        th = threading.Thread(target=_wait, daemon=True)
+        th.start()
+        waiters.append(th)
+    for th in waiters:
+        th.join(timeout=600)
+    return time.perf_counter() - t_start, sorted(latencies), rejected
+
+
+def main(quick: bool = False) -> None:
+    from repro.serve import CoalescePolicy, ExperimentService
+
+    specs = _specs(quick)
+    n_requests = 12 if quick else 48
+    rate_hz = 30.0 if quick else 60.0
+    rng = np.random.default_rng(0)
+
+    service = ExperimentService(CoalescePolicy(max_batch=16, max_wait_s=0.05,
+                                               max_tenant_depth=64,
+                                               batch="map"))
+    service.start()
+    try:
+        # Warmup: one request per (preset, template) compiles every shape the
+        # measured window will see; the steady state a warm service serves.
+        warm = [service.submit("warmup", s, method=m)
+                for s in specs for m in METHODS]
+        for h in warm:
+            h.result(timeout=600)
+        before = service.stats()
+
+        wall_s, lats, rejected = _drive(service, specs,
+                                        n_requests=n_requests,
+                                        rate_hz=rate_hz, rng=rng)
+        after = service.stats()
+    finally:
+        service.stop()
+
+    batches = after["batches"] - before["batches"]
+    batched = after["batched_requests"] - before["batched_requests"]
+    cache_hits = (after["compile_cache"]["hits"]
+                  - before["compile_cache"]["hits"])
+    cache_lookups = cache_hits + (after["compile_cache"]["misses"]
+                                  - before["compile_cache"]["misses"])
+    data = {
+        "n_requests": n_requests,
+        "offered_rate_hz": rate_hz,
+        "completed": len(lats),
+        "rejected_backpressure": rejected,
+        "window_wall_s": wall_s,
+        "sustained_req_per_s": len(lats) / wall_s if wall_s else 0.0,
+        "latency_p50_s": float(np.percentile(lats, 50)) if lats else None,
+        "latency_p99_s": float(np.percentile(lats, 99)) if lats else None,
+        "batches": batches,
+        "coalesce_factor": batched / batches if batches else 0.0,
+        "compile_cache_hit_rate": (cache_hits / cache_lookups
+                                   if cache_lookups else 0.0),
+        "solo_requests": after["solo_requests"] - before["solo_requests"],
+        "policy": dataclasses.asdict(service.policy),
+        "devices": after["devices"],
+    }
+    emit("serve/throughput", wall_s * 1e6 / max(len(lats), 1),
+         f"{data['sustained_req_per_s']:.1f}req/s")
+    emit("serve/latency", (data["latency_p50_s"] or 0.0) * 1e6,
+         f"p99={data['latency_p99_s']:.3f}s" if lats else "no-completions")
+    emit("serve/coalesce", 0.0,
+         f"x{data['coalesce_factor']:.2f}@{batches}batches "
+         f"cache_hit={data['compile_cache_hit_rate']:.2f}")
+    dump("serve", data, specs=specs, seed=0)
+
+
+if __name__ == "__main__":
+    main()

@@ -69,11 +69,14 @@ def append_trajectory(entry: dict) -> None:
     perf-carrying ``benchmarks/run.py`` invocation) so perf regressions
     are visible across PRs without diffing full bench dumps.
 
-    Entries with no perf section are dropped, and so are ``--quick`` smoke
-    runs (their numbers are noise at smoke scale, and ``make check`` must
-    not dirty the tracked trajectory on every developer run).
+    Entries with no perf section are dropped.  ``--quick`` smoke runs are
+    dropped too UNLESS they carry a ``serve`` section: executor/sweep
+    wall-clocks are noise at smoke scale, but serving latency and coalesce
+    factor are policy-dominated, so the quick serve cell is a real data
+    point and the trajectory captures it alongside the full-scale numbers.
     """
-    if entry.get("quick") or not ("executor" in entry or "sweep" in entry):
+    has_perf = "executor" in entry or "sweep" in entry or "serve" in entry
+    if not has_perf or (entry.get("quick") and "serve" not in entry):
         return
     doc = []
     if TRAJECTORY.exists():
@@ -133,6 +136,13 @@ def trajectory_entry(quick: bool, failures: list,
         entry["sweep"] = {
             regime: {k: row[k] for k in keep if k in row}
             for regime, row in rows.items()}
+    serve_path = OUT_DIR / "serve.json"
+    if "benchmarks.bench_serve" in fresh and serve_path.exists():
+        data = json.loads(serve_path.read_text())["data"]
+        entry["serve"] = {k: data.get(k) for k in (
+            "sustained_req_per_s", "latency_p50_s", "latency_p99_s",
+            "coalesce_factor", "compile_cache_hit_rate", "n_requests",
+            "offered_rate_hz", "batches", "solo_requests")}
     return entry
 
 

@@ -15,6 +15,10 @@ Subcommands:
   contract checks, see :mod:`repro.analysis` and docs/static-analysis.md);
   exits nonzero on findings not in ``ANALYSIS_BASELINE.json`` or on a
   failed contract.
+* ``serve``            -- the persistent multi-tenant experiment service
+  over HTTP (:mod:`repro.serve`, docs/serving.md): POST /submit specs,
+  GET /events/<job>, GET /stats; coalesces compatible tenant requests into
+  shared compiled sweep batches.
 """
 
 from __future__ import annotations
@@ -142,12 +146,17 @@ def main(argv: list[str] | None = None) -> int:
                          help="substring filter on benchmark module names")
     p_bench.set_defaults(fn=_cmd_bench)
 
-    # `analyze` owns its flag surface (see repro.analysis.cli); forward the
-    # raw remainder so `repro analyze --update-baseline` etc. just work.
+    # `analyze` and `serve` own their flag surfaces; forward the raw
+    # remainder so `repro analyze --update-baseline` / `repro serve --port`
+    # etc. just work.
     sub.add_parser(
         "analyze", add_help=False,
         help="static analysis: project lint + trace-contract checks "
              "(docs/static-analysis.md)").set_defaults(fn=None)
+    sub.add_parser(
+        "serve", add_help=False,
+        help="multi-tenant experiment service over HTTP "
+             "(docs/serving.md)").set_defaults(fn=None)
 
     if argv is None:
         argv = sys.argv[1:]
@@ -155,6 +164,11 @@ def main(argv: list[str] | None = None) -> int:
         from repro.analysis.cli import main as analyze_main
 
         return analyze_main(argv[1:])
+    if argv and argv[0] == "serve":
+        from repro.serve.http import main as serve_main
+
+        serve_main(argv[1:])
+        return 0
 
     args = parser.parse_args(argv)
     return args.fn(args)

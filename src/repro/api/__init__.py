@@ -14,7 +14,10 @@ Everything a caller needs lives here:
   grids of any scan-capable method (lockstep AND ``lag``) as ONE compiled
   computation, optionally sharded over the local device mesh
   (``shard="auto"|"none"|"cells"|"workers"``; :func:`run_lockstep_sweep`
-  is the lockstep-only compat wrapper);
+  is the lockstep-only compat wrapper); :func:`run_sweep_cells` runs an
+  EXPLICIT list of :class:`SweepCellSpec` cells through the same compiled
+  callables -- the entry point the multi-tenant service layer
+  (:mod:`repro.serve`) batches coalesced tenant requests through;
 * the :mod:`repro.core.compress` ``Compressor`` registry (re-exported) --
   the shared payload-compression extension point for both the simulator and
   the transformer exchange path;
@@ -50,10 +53,12 @@ from repro.api.session import (  # noqa: F401
 from repro.api.spec import ExperimentSpec, MethodEntry  # noqa: F401
 from repro.api.sweep import (  # noqa: F401
     ShardPlan,
+    SweepCellSpec,
     SweepVariant,
     resolve_shard,
     run_lockstep_sweep,
     run_sweep,
+    run_sweep_cells,
     sweep_spec,
     sweep_supported,
 )
@@ -89,6 +94,7 @@ __all__ = [
     "SessionEvent",
     "ShardPlan",
     "StopEvent",
+    "SweepCellSpec",
     "SweepVariant",
     "SyncEvent",
     "available_compressors",
@@ -106,6 +112,7 @@ __all__ = [
     "resolve_shard",
     "run_lockstep_sweep",
     "run_sweep",
+    "run_sweep_cells",
     "sweep_spec",
     "sweep_supported",
 ]

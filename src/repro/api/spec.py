@@ -103,6 +103,87 @@ class ExperimentSpec:
                 return entry
         raise KeyError(f"no method named {name!r} in spec {self.name!r}")
 
+    # -- validation --------------------------------------------------------
+
+    def validate(self) -> "ExperimentSpec":
+        """Resolve every registry name and structural invariant WITHOUT
+        building the dataset or compiling anything; returns ``self``.
+
+        Raises ``ValueError`` naming the bad entry AND the full list of
+        known entries (problem kinds, protocols, compressors, delay models,
+        local solvers) so a caller -- in particular the serve layer's
+        admission gate (:class:`repro.serve.ExperimentService`), where a
+        queued bad spec must never reach a batch and poison its cohort --
+        can reject at enqueue time with an actionable message.  ``Session``
+        construction performs the same resolution; this front-loads it for
+        specs that are queued before they run.
+        """
+        import inspect
+
+        from repro.api import problems as problems_lib
+        from repro.core import compress as compress_lib
+        from repro.core import delays as delays_lib
+        from repro.core import engine as engine_lib
+        from repro.core import solvers as solvers_lib
+
+        errors: list[str] = []
+        builder = problems_lib._PROBLEMS.get(self.problem.kind)
+        if builder is None:
+            errors.append(
+                f"unknown problem {self.problem.kind!r}; available: "
+                f"{problems_lib.available_problems()}")
+        else:
+            params = inspect.signature(builder).parameters
+            unknown = sorted(set(self.problem.params) - set(params))
+            if unknown:
+                errors.append(
+                    f"problem {self.problem.kind!r} got unknown params "
+                    f"{unknown}; accepted: {sorted(params)}")
+        try:
+            delays_lib.get_delay(self.cluster.delay_model)
+        except ValueError as e:
+            errors.append(str(e))
+        if not self.methods:
+            errors.append("spec declares no methods")
+        names = [m.config.name for m in self.methods]
+        if len(set(names)) != len(names):
+            errors.append(f"duplicate method names in spec: {names}")
+        for entry in self.methods:
+            cfg = entry.config
+            where = f"method {cfg.name!r}"
+            if cfg.protocol not in engine_lib.available_protocols():
+                errors.append(
+                    f"{where}: unknown protocol {cfg.protocol!r}; "
+                    f"available: {engine_lib.available_protocols()}")
+            if cfg.compressor is not None:
+                try:
+                    compress_lib.get_compressor(cfg.compressor)
+                except ValueError as e:
+                    errors.append(f"{where}: {e}")
+            try:
+                solvers_lib.get_solver(cfg.local_solver)
+            except ValueError as e:
+                errors.append(f"{where}: {e}")
+            if entry.num_outer <= 0:
+                errors.append(f"{where}: num_outer must be >= 1, got "
+                              f"{entry.num_outer}")
+            if not 1 <= cfg.B <= self.cluster.num_workers:
+                errors.append(
+                    f"{where}: B={cfg.B} outside [1, K={self.cluster.num_workers}]")
+        if self.eval_every <= 0:
+            errors.append(f"eval_every must be >= 1, got {self.eval_every}")
+        if self.executor not in ("auto", "event", "scan"):
+            errors.append(f"unknown executor {self.executor!r}; expected "
+                          f"'auto', 'event' or 'scan'")
+        from repro.api.sweep import SHARD_MODES
+        if self.shard not in SHARD_MODES:
+            errors.append(f"unknown shard mode {self.shard!r}; expected one "
+                          f"of {SHARD_MODES}")
+        if errors:
+            raise ValueError(
+                f"invalid spec {self.name!r}: " + "; ".join(errors))
+        return self
+
     # -- serialization -----------------------------------------------------
 
     def to_dict(self) -> dict[str, Any]:

@@ -80,12 +80,46 @@ SHARD_MODES = ("auto", "none", "cells", "workers")
 
 @dataclasses.dataclass(frozen=True)
 class SweepVariant:
-    """One cell of the sweep: the varied parameters plus its RunResult."""
+    """One cell of the sweep: the varied parameters plus its RunResult.
+
+    ``rounds`` carries the cell's full per-round host accounting
+    (:class:`repro.core.executor.RoundAccount` tuples) so a consumer can
+    replay the cell's complete Session event stream -- the serve layer's
+    stream demultiplexer (:mod:`repro.serve.streams`) depends on it.  It is
+    set by :func:`run_sweep_cells` (and the lag path generally); the
+    lockstep cross-product sweep leaves it ``None`` -- that path dedups
+    trajectories across the delay axis and only needs eval-boundary
+    records.
+    """
 
     seed: int
     gamma: float
     result: RunResult
     delay: str = "constant"  # the cell's delay-model registry entry
+    rounds: tuple | None = None  # per-round RoundAccounts (cell sweeps)
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepCellSpec:
+    """One EXPLICIT sweep cell: its full per-cell parameterization.
+
+    :func:`run_sweep` generates the cross product of its axes internally;
+    :func:`run_sweep_cells` instead takes a flat list of these -- the serve
+    layer's coalescer (:mod:`repro.serve.coalesce`) builds one per tenant
+    request, so heterogeneous tenant grids batch into one compiled call
+    with no cross-product waste.  ``gamma=None`` keeps the method's own
+    gamma; ``sigma_prime=None`` resolves the protocol default for the
+    cell's gamma (exactly what a solo run would do).  The ``cluster`` is
+    fully per-cell: lockstep timing is host-side accounting, and the lag
+    executor consumes pre-sampled per-cell delay streams as traced
+    operands, so cells of different delay models / latencies / bandwidths
+    share one computation.
+    """
+
+    cluster: ClusterModel
+    seed: int
+    gamma: float | None = None
+    sigma_prime: float | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -474,6 +508,18 @@ def _run_lockstep_sweep(problem, method, variants, *, num_outer, seeds,
 
 def _run_lag_sweep(problem, method, variants, *, num_outer, seeds, gammas,
                    eval_every, batch, plan):
+    # Cell order: delay-major, then seed, then gamma (matches the returned
+    # variant order).  The cell-level core below keys duration streams by
+    # the (hashable) ClusterModel itself, NOT the delay name: two entries
+    # of the same model with different params must not share a stream.
+    cells = [SweepCellSpec(cl, s, g, method.sigma_prime)
+             for _, cl in variants for s in seeds for g in gammas]
+    return _lag_cells(problem, method, cells, num_outer=num_outer,
+                      eval_every=eval_every, batch=batch, plan=plan)
+
+
+def _lag_cells(problem, method, cells, *, num_outer, eval_every, batch,
+               plan):
     from jax.experimental import enable_x64
 
     K, n_k, d = problem.X.shape
@@ -483,40 +529,37 @@ def _run_lag_sweep(problem, method, variants, *, num_outer, seeds, gammas,
     dense = isinstance(comp, compress_lib.Dense)
     up_bytes = comp.wire_bytes(d)
     needs = executor.lag_needs(method, K, R)
-    methods = {g: dataclasses.replace(method, gamma=g) for g in gammas}
+    mcfgs = [dataclasses.replace(method, gamma=c.gamma,
+                                 sigma_prime=c.sigma_prime) for c in cells]
 
-    for name, cl in variants:
-        ok, why = executor.scan_supported(method, cl)
+    for c in cells:
+        ok, why = executor.scan_supported(method, c.cluster)
         if not ok:
             raise ValueError(
-                f"delay model {name!r} cannot batch into a lag sweep: {why}; "
-                f"run it per-cell via Session(executor='event')")
+                f"delay model {c.cluster.delay_model!r} cannot batch into a "
+                f"lag sweep: {why}; run it per-cell via "
+                f"Session(executor='event')")
 
-    # Cell order: delay-major, then seed, then gamma (matches the returned
-    # variant order).  Durations are per (cluster variant, seed) -- the same
-    # host-RNG stream a single run would consume -- and gamma variants share
-    # them.  Keyed by the (hashable) ClusterModel itself, NOT the delay
-    # name: two entries of the same model with different params must not
-    # share a stream.
-    cells = [(name, cl, s, g)
-             for name, cl in variants for s in seeds for g in gammas]
-    padded = _padded_cells(cells, plan.n_shards)
+    # Durations are per (cluster, seed) -- the same host-RNG stream a single
+    # run would consume -- so gamma variants of one (cluster, seed) share.
+    padded = _padded_cells(list(cells), plan.n_shards)
     dur_cache: dict = {}
     link_cache: dict = {}
-    for _, cl, s, _ in padded:
-        if (cl, s) not in dur_cache:
-            durations, delay = executor.lag_durations(method, cl,
-                                                      num_rounds=R, seed=s)
-            dur_cache[(cl, s)] = durations
-            link_cache[cl] = delay.link_factors()
-    durations = np.stack([dur_cache[(cl, s)] for _, cl, s, _ in padded])
-    link_factors = np.stack([link_cache[cl] for _, cl, _, _ in padded])
-    lats = np.asarray([cl.latency for _, cl, _, _ in padded])
-    bws = np.asarray([cl.bandwidth for _, cl, _, _ in padded])
-    sigma_ps = np.asarray([methods[g].resolved_sigma_prime(K)
-                           for *_, g in padded])
+    for c in padded:
+        if (c.cluster, c.seed) not in dur_cache:
+            durations, delay = executor.lag_durations(
+                method, c.cluster, num_rounds=R, seed=c.seed)
+            dur_cache[(c.cluster, c.seed)] = durations
+            link_cache[c.cluster] = delay.link_factors()
+    durations = np.stack([dur_cache[(c.cluster, c.seed)] for c in padded])
+    link_factors = np.stack([link_cache[c.cluster] for c in padded])
+    lats = np.asarray([c.cluster.latency for c in padded])
+    bws = np.asarray([c.cluster.bandwidth for c in padded])
+    sigma_ps = np.asarray([dataclasses.replace(
+        method, gamma=c.gamma,
+        sigma_prime=c.sigma_prime).resolved_sigma_prime(K) for c in padded])
     keys = jax.vmap(jax.random.key)(
-        jnp.asarray([s for _, _, s, _ in padded]))
+        jnp.asarray([c.seed for c in padded]))
     norms_sq = jnp.sum(problem.X * problem.X, axis=-1)
     evals = executor._eval_indices(R, eval_every)
 
@@ -526,7 +569,7 @@ def _run_lag_sweep(problem, method, variants, *, num_outer, seeds, gammas,
          cm) = _lag_sweep_scan(
             keys, problem.X, problem.y, norms_sq, jnp.float32(problem.lam),
             jnp.int32(K * n_k), jnp.asarray(sigma_ps, jnp.float32),
-            jnp.asarray([g for *_, g in padded], jnp.float32),
+            jnp.asarray([c.gamma for c in padded], jnp.float32),
             jnp.float32(method.lag_xi),
             jnp.asarray(durations, jnp.float64),
             jnp.asarray(needs, jnp.int64),
@@ -546,14 +589,112 @@ def _run_lag_sweep(problem, method, variants, *, num_outer, seeds, gammas,
                                      problem, V, S)
     sim, bu, bd, ct, cm = (np.asarray(a) for a in (sim, bu, bd, ct, cm))
     out = []
-    for v, (name, cl, seed, gamma) in enumerate(cells):
+    for v, c in enumerate(cells):
         rounds = executor.lag_accounts(needs, T, sim[v], bu[v], bd[v],
                                        ct[v], cm[v])
         records = _variant_records(rounds, evals, gap, gap_srv, p, dv, v)
-        out.append(SweepVariant(seed, gamma, RunResult(
-            methods[gamma], records, np.asarray(w[v]), np.asarray(alpha[v]),
-            alpha_applied=np.asarray(alpha_applied[v])), delay=name))
+        out.append(SweepVariant(c.seed, c.gamma, RunResult(
+            mcfgs[v], records, np.asarray(w[v]), np.asarray(alpha[v]),
+            alpha_applied=np.asarray(alpha_applied[v])),
+            delay=c.cluster.delay_model, rounds=tuple(rounds)))
     return out
+
+
+def _lockstep_cells(problem, method, cells, *, num_outer, eval_every, batch,
+                    plan):
+    K, n_k, d = problem.X.shape
+    mcfgs = [dataclasses.replace(method, gamma=c.gamma,
+                                 sigma_prime=c.sigma_prime) for c in cells]
+    padded = _padded_cells(list(cells), plan.n_shards)
+    sigma_ps = np.asarray([dataclasses.replace(
+        method, gamma=c.gamma,
+        sigma_prime=c.sigma_prime).resolved_sigma_prime(K) for c in padded])
+    keys = jax.vmap(jax.random.key)(jnp.asarray([c.seed for c in padded]))
+    norms_sq = jnp.sum(problem.X * problem.X, axis=-1)
+    evals = executor._eval_indices(num_outer, eval_every)
+
+    executor.STATS["sweep_calls"] += 1
+    runner = _sweep_scan if plan.mode != "workers" else partial(
+        _sweep_scan_workers, num_workers=K)
+    w, alpha, ws_eval, alphas_eval = runner(
+        keys, problem.X, problem.y, norms_sq, problem.lam, K * n_k,
+        jnp.asarray(sigma_ps, problem.X.dtype),
+        jnp.asarray([c.gamma for c in padded], problem.X.dtype),
+        jnp.asarray(_padded_eval_idx(evals), jnp.int32),
+        loss=problem.loss, num_steps=method.H,
+        solver=executor.lockstep_solver(method), length=num_outer,
+        batch=batch, n_shards=plan.n_shards if plan.mode != "none" else 1)
+
+    V, S = len(cells), len(evals)
+    p, dv, gap, gap_srv = _eval_grid(ws_eval[:V, :S], alphas_eval[:V, :S],
+                                     problem, V, S)
+    out = []
+    for v, c in enumerate(cells):
+        rounds = executor.lockstep_accounts(mcfgs[v], c.cluster, d,
+                                            num_rounds=num_outer,
+                                            seed=c.seed)
+        records = _variant_records(rounds, evals, gap, gap_srv, p, dv, v)
+        out.append(SweepVariant(c.seed, c.gamma, RunResult(
+            mcfgs[v], records, np.asarray(w[v]), np.asarray(alpha[v])),
+            delay=c.cluster.delay_model, rounds=tuple(rounds)))
+    return out
+
+
+def run_sweep_cells(
+    problem: objectives.Problem,
+    method: MethodConfig,
+    cells,
+    *,
+    num_outer: int,
+    eval_every: int = 1,
+    batch: str = "vmap",
+    shard: str = "auto",
+) -> list[SweepVariant]:
+    """Run an EXPLICIT list of sweep cells as one compiled computation.
+
+    Where :func:`run_sweep` runs the full ``delays x seeds x gammas`` cross
+    product, this takes a flat list of :class:`SweepCellSpec` (or
+    ``(cluster, seed, gamma)`` tuples) and runs exactly those cells -- the
+    entry point the multi-tenant serve layer (:mod:`repro.serve`) batches
+    coalesced requests through, since different tenants rarely ask for a
+    rectangular grid.  ``method`` is the shared template: everything that
+    is static to the compiled computation (protocol, H, T, B, rho,
+    compressor, solver, lag window) comes from it, while each cell's
+    ``gamma`` / ``sigma_prime`` / ``cluster`` / ``seed`` override per cell.
+
+    Same compiled callables, same pow2 cell/eval bucketing, and same
+    bit-identity contract as :func:`run_sweep`: under ``batch="map"`` with
+    an unsharded or cells-sharded plan every cell is bit-identical to the
+    corresponding solo ``Session(executor="scan")`` run (pinned by
+    tests/test_serve.py).  Every returned variant carries its full
+    per-round accounting (``SweepVariant.rounds``) so callers can replay
+    the cell's complete Round/Sync/Eval/Stop event stream.
+    """
+    if method.protocol not in executor.SCAN_PROTOCOLS:
+        raise ValueError(
+            f"sweep batching needs a scan-capable protocol "
+            f"{executor.SCAN_PROTOCOLS}, got {method.protocol!r}; run "
+            f"group-family methods one Session per cell")
+    if batch not in ("vmap", "map"):
+        raise ValueError(f"unknown batch mode {batch!r}; 'vmap' or 'map'")
+    if num_outer <= 0:
+        raise ValueError(f"num_outer must be >= 1, got {num_outer}")
+    cells = [c if isinstance(c, SweepCellSpec) else SweepCellSpec(*c)
+             for c in cells]
+    if not cells:
+        raise ValueError("cells is empty: pass at least one SweepCellSpec")
+    cells = [dataclasses.replace(c, gamma=method.gamma)
+             if c.gamma is None else c for c in cells]
+    K = problem.X.shape[0]
+    for c in cells:
+        if c.cluster.num_workers != K:
+            raise ValueError(
+                f"cell cluster has num_workers={c.cluster.num_workers} but "
+                f"the problem is partitioned over K={K} workers")
+    plan = resolve_shard(shard, protocol=method.protocol, num_workers=K)
+    core = _lag_cells if method.protocol == "lag" else _lockstep_cells
+    return core(problem, method, cells, num_outer=num_outer,
+                eval_every=eval_every, batch=batch, plan=plan)
 
 
 # ---------------------------------------------------------------------------

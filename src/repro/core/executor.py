@@ -143,6 +143,29 @@ def scan_supported(method: MethodConfig, cluster: ClusterModel, *,
         f"(scan-capable protocols: {SCAN_PROTOCOLS})")
 
 
+def coalesce_supported(method: MethodConfig, cluster: ClusterModel, *,
+                       target_gap: float | None = None,
+                       time_budget: float | None = None) -> tuple[bool, str]:
+    """Can this (method, cluster) join a SHARED sweep batch?  (ok, why-not).
+
+    The serve-layer admission check (:mod:`repro.serve`): a coalesced batch
+    compiles whole fixed-length runs for many tenants at once, so it is
+    strictly narrower than :func:`scan_supported` -- early-stopped runs
+    never coalesce (their round count is data-dependent; a stopping tenant
+    would either truncate or pad every cohort cell), even though a solo
+    lockstep ``target_gap`` run can scan.  Ineligible requests are still
+    servable, one :class:`repro.api.Session` per request (the solo lane).
+    """
+    if target_gap is not None:
+        return False, ("target_gap early stop makes the round count "
+                       "data-dependent; batches compile fixed-length runs "
+                       "-- served per-request instead")
+    if time_budget is not None:
+        return False, ("time_budget early stop needs the per-round event "
+                       "loop -- served per-request instead")
+    return scan_supported(method, cluster)
+
+
 # ---------------------------------------------------------------------------
 # Run container handed back to the Session.
 # ---------------------------------------------------------------------------

@@ -47,6 +47,23 @@ def make_sweep_mesh(n_shards: int, axis: str) -> Mesh:
     return make_mesh((n_shards,), (axis,))
 
 
+def device_summary() -> dict:
+    """This host's accelerator inventory as a plain dict -- surfaced by the
+    experiment service's ``GET /stats`` endpoint and stamped into bench
+    provenance, so serve-side numbers always say what hardware (and how many
+    sweep shards) produced them."""
+    devs = jax.devices()
+    return {
+        "platform": devs[0].platform if devs else "none",
+        "device_count": len(devs),
+        "sweep_shards": _pow2_floor(len(devs)),
+    }
+
+
+def _pow2_floor(n: int) -> int:
+    return 1 << (max(1, n).bit_length() - 1)
+
+
 def data_axes(mesh: Mesh) -> tuple[str, ...]:
     return tuple(a for a in ("pod", "data") if a in mesh.shape)
 

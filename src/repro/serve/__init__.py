@@ -1,0 +1,47 @@
+"""The persistent multi-tenant experiment service (ROADMAP open item 1).
+
+Long-lived serving over the batched sweep substrate: tenants submit
+:class:`~repro.api.ExperimentSpec` requests (in-process or over HTTP --
+``python -m repro serve``); the service validates at admission, coalesces
+compatible requests into shared :func:`repro.api.run_sweep_cells` batches
+(per-tenant round-robin fairness, bounded queue depth with typed
+backpressure), keeps the jit compile cache warm across tenants with hit/miss
+accounting, and streams each tenant's typed Round/Sync/Eval/Stop events back
+bit-identical to a solo :class:`~repro.api.Session` run.
+
+Layout: :mod:`~repro.serve.service` (admission + dispatch),
+:mod:`~repro.serve.coalesce` (batch keys + fairness policy),
+:mod:`~repro.serve.streams` (per-tenant demux/replay),
+:mod:`~repro.serve.cache` (compile-cache key mirror + counters),
+:mod:`~repro.serve.http` (stdlib HTTP front end).  docs/serving.md is the
+executed guide.
+"""
+
+from repro.serve.cache import CompileCache, sweep_cache_key  # noqa: F401
+from repro.serve.coalesce import (  # noqa: F401
+    CoalescePolicy,
+    batch_key,
+    form_batch,
+)
+from repro.serve.http import event_to_dict, serve_http  # noqa: F401
+from repro.serve.service import (  # noqa: F401
+    BackpressureError,
+    ExperimentService,
+    SpecValidationError,
+)
+from repro.serve.streams import JobHandle, replay_events  # noqa: F401
+
+__all__ = [
+    "BackpressureError",
+    "CoalescePolicy",
+    "CompileCache",
+    "ExperimentService",
+    "JobHandle",
+    "SpecValidationError",
+    "batch_key",
+    "event_to_dict",
+    "form_batch",
+    "replay_events",
+    "serve_http",
+    "sweep_cache_key",
+]

@@ -1,0 +1,121 @@
+"""Warm compiled-sweep cache accounting, keyed like ``jax.jit``'s own cache.
+
+The actual compiled executables live in ``jax.jit``'s process-level cache on
+:func:`repro.api.sweep._sweep_scan` / ``_lag_sweep_scan`` -- a long-lived
+service keeps them warm for free.  What jit does NOT give a service is
+*observability*: whether an incoming batch will hit a warm executable or pay
+a fresh trace+compile, and therefore what the fleet's compile amortization
+actually is.  :class:`CompileCache` mirrors jit's cache key -- ``(static
+arguments, operand aval (shape, dtype) tuples)``, the exact construction the
+PR-6 trace-time contract ``check_sweep_bucket_sharing`` pins
+(:mod:`repro.analysis.contracts`) -- and counts hits/misses per key.
+
+The mirror is honest because ``run_sweep_cells`` routes every batch through
+the same pow2 padding helpers the key derivation uses: two batches map to
+the same :func:`sweep_cache_key` if and only if jit reuses one executable
+(cross-checked against ``executor.STATS`` trace counters in
+tests/test_serve.py).
+"""
+
+from __future__ import annotations
+
+import threading
+
+from repro.core import compress as compress_lib
+from repro.core import engine, executor
+
+
+def _bucket(n: int) -> int:
+    return engine._bucket_size(n)
+
+
+def sweep_cache_key(problem, method, num_cells: int, *, num_outer: int,
+                    eval_every: int, batch: str, plan) -> tuple:
+    """The jit cache key a ``run_sweep_cells`` call with this shape maps to.
+
+    Statics and operand avals exactly as the compiled callables see them:
+    the cell axis padded to ``max(pow2 bucket, n_shards)``, the eval axis to
+    its pow2 bucket -- so heterogeneous tenant batches that pad alike
+    collapse to one key (and one compile).
+    """
+    K, n_k, d = problem.X.shape
+    n_shards = plan.n_shards
+    V = max(_bucket(num_cells), n_shards)
+    if method.protocol == "lag":
+        R = num_outer * method.T
+        E = _bucket(len(executor._eval_indices(R, eval_every)))
+        comp = compress_lib.for_method(method, d)
+        dense = isinstance(comp, compress_lib.Dense)
+        statics = ("lag", problem.loss, method.H, comp, R,
+                   method.lag_window, d * 4 if dense else 0, batch,
+                   n_shards if plan.mode == "cells" else 1)
+        avals = (
+            ((V,), "key"),
+            ((K, n_k, d), "float32"), ((K, n_k), "float32"),
+            ((K, n_k), "float32"),
+            ((), "float32"), ((), "int32"),          # lam, n
+            ((V,), "float32"), ((V,), "float32"),    # sigma_ps, gammas
+            ((), "float32"),                         # xi
+            ((V, R, K), "float64"),                  # durations
+            ((R,), "int64"), ((), "int64"), ((), "int64"),
+            ((V,), "float64"), ((V,), "float64"),    # lats, bws
+            ((V, K), "float64"),                     # link_factors
+            ((E,), "int32"),
+        )
+        return (statics, avals)
+    E = _bucket(len(executor._eval_indices(num_outer, eval_every)))
+    statics = ("lockstep", problem.loss, method.H,
+               executor.lockstep_solver(method), num_outer, batch,
+               n_shards if plan.mode != "none" else 1, plan.mode)
+    dt = str(problem.X.dtype)
+    avals = (
+        ((V,), "key"),
+        ((K, n_k, d), dt), ((K, n_k), dt), ((K, n_k), dt),
+        ((), dt), ((), "int32"),
+        ((V,), dt), ((V,), dt),
+        ((E,), "int32"),
+    )
+    return (statics, avals)
+
+
+class CompileCache:
+    """Hit/miss accounting over the warm jit cache (thread-safe).
+
+    ``note(key)`` records one batched dispatch against ``key`` and returns
+    whether it was warm.  ``stats()`` reports the counters the bench and
+    ``GET /stats`` surface: total hits/misses, distinct entries, hit rate.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._seen: dict[tuple, int] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def note(self, key: tuple) -> bool:
+        with self._lock:
+            warm = key in self._seen
+            self._seen[key] = self._seen.get(key, 0) + 1
+            if warm:
+                self.hits += 1
+            else:
+                self.misses += 1
+            return warm
+
+    def stats(self) -> dict:
+        with self._lock:
+            total = self.hits + self.misses
+            return {
+                "entries": len(self._seen),
+                "hits": self.hits,
+                "misses": self.misses,
+                "hit_rate": self.hits / total if total else 0.0,
+            }
+
+
+def warm_trace_counters() -> dict:
+    """The executor's process-wide trace/dispatch counters (ground truth the
+    mirror is validated against)."""
+    return {k: executor.STATS[k] for k in
+            ("sweep_calls", "sweep_traces", "sweep_lag_calls",
+             "sweep_lag_traces")}

@@ -1,0 +1,146 @@
+"""Thin stdlib HTTP front end over :class:`~repro.serve.ExperimentService`.
+
+``python -m repro serve [--host H] [--port P] [...policy knobs]`` binds a
+``ThreadingHTTPServer``; the protocol is deliberately minimal JSON:
+
+* ``POST /submit``  body ``{"tenant": str, "spec": <ExperimentSpec dict>,
+  "method": str?}`` -> ``200 {"job_id": ...}``;
+  ``400`` on validation errors (full registry listings in ``error``),
+  ``429`` on per-tenant backpressure.
+* ``GET /events/<job_id>`` -> blocks until the job finishes, returns
+  ``{"events": [{"type": "round"|"sync"|"eval"|"stop", ...}, ...]}`` -- the
+  tenant's full typed stream in order (``500`` carries the job's error).
+* ``GET /stats`` -> the service counters: coalesce factor, compile-cache
+  hits/misses, per-tenant in-flight depth, device inventory.
+
+This is a control-plane front end for the in-process service, not a
+load-bearing web server: auth, TLS and horizontal scale-out sit outside the
+repo's scope (ROADMAP open item 2 covers multi-host).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+
+from repro.api.session import EvalEvent, RoundEvent, StopEvent, SyncEvent
+from repro.serve.service import (
+    BackpressureError,
+    ExperimentService,
+    SpecValidationError,
+)
+
+_EVENT_TYPES = {RoundEvent: "round", SyncEvent: "sync", EvalEvent: "eval",
+                StopEvent: "stop"}
+
+
+def event_to_dict(event) -> dict:
+    """One typed event as a JSON-able dict (``type`` tag + its fields)."""
+    return {"type": _EVENT_TYPES[type(event)], **dataclasses.asdict(event)}
+
+
+def make_handler(service: ExperimentService):
+    class Handler(BaseHTTPRequestHandler):
+        def log_message(self, fmt, *args):  # quiet by default
+            pass
+
+        def _reply(self, code: int, payload: dict) -> None:
+            body = json.dumps(payload).encode()
+            self.send_response(code)
+            self.send_header("Content-Type", "application/json")
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
+
+        def do_POST(self):  # noqa: N802 (stdlib handler naming)
+            if self.path != "/submit":
+                return self._reply(404, {"error": f"no route {self.path}"})
+            length = int(self.headers.get("Content-Length", 0))
+            try:
+                req = json.loads(self.rfile.read(length) or b"{}")
+                tenant = req["tenant"]
+                spec_dict = req["spec"]
+            except (KeyError, ValueError) as e:
+                return self._reply(
+                    400, {"error": f"body must be JSON with 'tenant' and "
+                                   f"'spec': {e}"})
+            try:
+                handle = service.submit_json(tenant, json.dumps(spec_dict),
+                                             method=req.get("method"))
+            except SpecValidationError as e:
+                return self._reply(400, {"error": str(e)})
+            except BackpressureError as e:
+                return self._reply(429, {"error": str(e)})
+            self._reply(200, {"job_id": handle.job_id,
+                              "tenant": handle.tenant})
+
+        def do_GET(self):  # noqa: N802
+            if self.path == "/stats":
+                return self._reply(200, service.stats())
+            if self.path.startswith("/events/"):
+                job_id = self.path[len("/events/"):]
+                try:
+                    handle = service.job(job_id)
+                except KeyError as e:
+                    return self._reply(404, {"error": str(e)})
+                try:
+                    events = [event_to_dict(e) for e in handle.events()]
+                except Exception as e:  # noqa: BLE001 -- job failure -> 500
+                    return self._reply(500, {"error": repr(e)})
+                return self._reply(200, {"job_id": job_id, "events": events})
+            self._reply(404, {"error": f"no route {self.path}"})
+
+    return Handler
+
+
+def serve_http(service: ExperimentService, host: str = "127.0.0.1",
+               port: int = 8008) -> ThreadingHTTPServer:
+    """Bind (but do not run) the HTTP server; caller owns ``serve_forever``.
+
+    Returning the bound server lets tests pick ``port=0`` and read the real
+    port back before starting the loop in a thread."""
+    return ThreadingHTTPServer((host, port), make_handler(service))
+
+
+def main(argv: list[str] | None = None) -> None:
+    """CLI entry point: ``python -m repro serve``."""
+    import argparse
+
+    from repro.serve.coalesce import CoalescePolicy
+
+    ap = argparse.ArgumentParser(
+        prog="repro serve",
+        description="persistent multi-tenant experiment service (HTTP)")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8008)
+    ap.add_argument("--max-batch", type=int, default=16)
+    ap.add_argument("--max-wait", type=float, default=0.05,
+                    help="seconds a non-full batch waits before closing")
+    ap.add_argument("--max-tenant-depth", type=int, default=8)
+    ap.add_argument("--batch", default="map", choices=("map", "vmap"),
+                    help="map = bit-identical to solo Sessions (default); "
+                         "vmap = faster, float-reassociated")
+    ap.add_argument("--shard", default="auto",
+                    choices=("auto", "none", "cells", "workers"))
+    args = ap.parse_args(argv)
+
+    service = ExperimentService(CoalescePolicy(
+        max_batch=args.max_batch, max_wait_s=args.max_wait,
+        max_tenant_depth=args.max_tenant_depth, batch=args.batch,
+        shard=args.shard)).start()
+    server = serve_http(service, args.host, args.port)
+    host, port = server.server_address[:2]
+    print(f"experiment service listening on http://{host}:{port} "
+          f"(POST /submit, GET /events/<job>, GET /stats)")
+    try:
+        server.serve_forever()
+    except KeyboardInterrupt:
+        pass
+    finally:
+        server.shutdown()
+        service.stop()
+
+
+if __name__ == "__main__":
+    main()

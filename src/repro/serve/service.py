@@ -1,0 +1,349 @@
+"""The persistent multi-tenant experiment service.
+
+``ExperimentService`` is the long-lived front of the sweep substrate: tenants
+submit one method entry of an :class:`~repro.api.ExperimentSpec` each
+(in-process :meth:`~ExperimentService.submit`, or JSON over the stdlib HTTP
+front end -- ``python -m repro serve``), and the service
+
+1. **validates at admission** (``spec.validate()``: every registry name plus
+   structural invariants, full known-entry listings in the error) so a bad
+   spec is rejected synchronously and can never reach a batch and poison its
+   cohort;
+2. **bounds per-tenant depth** -- submissions past ``max_tenant_depth``
+   in-flight jobs raise a typed :class:`BackpressureError` instead of
+   queueing unboundedly;
+3. **coalesces** compatible requests (same :func:`repro.serve.coalesce.batch_key`)
+   into ONE :func:`repro.api.run_sweep_cells` call under the max-wait /
+   max-batch policy, round-robin across tenants inside each batch;
+4. **streams back** each tenant's typed Round/Sync/Eval/Stop events,
+   bit-identical to a solo ``Session`` run (``batch="map"`` default;
+   pinned by tests/test_serve.py);
+5. keeps the **compile cache warm** across tenants (jit's process cache holds
+   the executables; :class:`repro.serve.cache.CompileCache` mirrors its keys
+   and reports hit/miss counters through :meth:`stats` / ``GET /stats``).
+
+Requests that cannot share a batch -- group-family protocols,
+``target_gap``/``time_budget`` early stop (:func:`repro.core.executor.coalesce_supported`)
+-- take the **solo lane**: a per-request ``Session`` streamed through the
+same ``JobHandle``, so admission control and the API are uniform.
+
+Threading model: ``submit`` is safe from any thread; one dispatcher thread
+(started by :meth:`start`, or driven synchronously by :meth:`drain` for
+deterministic tests and batch clients) owns all execution.  Datasets are
+built once per distinct ``ProblemSpec`` and memoized.
+"""
+
+from __future__ import annotations
+
+import itertools
+import json
+import threading
+import time  # analysis: host-ok
+from typing import Mapping
+
+from repro.api import run_sweep_cells
+from repro.api.session import Session
+from repro.api.sweep import resolve_shard
+from repro.api.spec import ExperimentSpec
+from repro.core import executor as executor_lib
+from repro.launch import mesh as mesh_lib
+from repro.serve.cache import CompileCache, sweep_cache_key
+from repro.serve.coalesce import CoalescePolicy, Request, batch_key, form_batch
+from repro.serve.streams import JobHandle, deliver
+
+
+class SpecValidationError(ValueError):
+    """Rejected at admission: the spec names unknown registry entries or
+    violates a structural invariant (message lists the known entries)."""
+
+
+class BackpressureError(RuntimeError):
+    """Rejected at admission: the tenant already has ``max_tenant_depth``
+    unfinished jobs; retry after draining some."""
+
+
+class ExperimentService:
+    """See module docstring.  One instance per process; thread-safe submit."""
+
+    def __init__(self, policy: CoalescePolicy | None = None):
+        self.policy = policy or CoalescePolicy()
+        self.compile_cache = CompileCache()
+        self._lock = threading.Condition()
+        self._pending: dict[tuple, list[Request]] = {}  # batch_key -> queue
+        self._solo: list[Request] = []
+        self._group_opened: dict[tuple, float] = {}  # batch_key -> first enqueue time
+        self._inflight: dict[str, int] = {}  # tenant -> unfinished jobs
+        self._jobs: dict[str, JobHandle] = {}
+        self._order = itertools.count()
+        self._problems: dict[tuple, object] = {}  # memoized datasets
+        self._thread: threading.Thread | None = None
+        self._stopping = False
+        self.counters = {
+            "submitted": 0, "rejected_validation": 0,
+            "rejected_backpressure": 0, "batches": 0, "batched_requests": 0,
+            "solo_requests": 0, "failed": 0,
+        }
+
+    # -- admission ---------------------------------------------------------
+
+    def submit(self, tenant: str, spec: ExperimentSpec,
+               method: str | None = None) -> JobHandle:
+        """Admit one request: ``spec``'s method entry named ``method`` (or
+        its only entry).  Validates and applies backpressure synchronously;
+        returns the tenant's stream handle."""
+        try:
+            spec.validate()
+        except ValueError as e:
+            with self._lock:
+                self.counters["rejected_validation"] += 1
+            raise SpecValidationError(str(e)) from None
+        if method is None:
+            if len(spec.methods) != 1:
+                raise SpecValidationError(
+                    f"spec {spec.name!r} has {len(spec.methods)} method "
+                    f"entries {[m.config.name for m in spec.methods]}; pass "
+                    f"method=<name> to pick one per request")
+            entry = spec.methods[0]
+        else:
+            try:
+                entry = spec.method_named(method)
+            except KeyError as e:
+                with self._lock:
+                    self.counters["rejected_validation"] += 1
+                raise SpecValidationError(str(e)) from None
+
+        ok, why = executor_lib.coalesce_supported(
+            entry.config, spec.cluster, target_gap=spec.target_gap,
+            time_budget=spec.time_budget)
+
+        with self._lock:
+            if (self._inflight.get(tenant, 0)
+                    >= self.policy.max_tenant_depth):
+                self.counters["rejected_backpressure"] += 1
+                raise BackpressureError(
+                    f"tenant {tenant!r} has {self._inflight[tenant]} "
+                    f"unfinished jobs (max_tenant_depth="
+                    f"{self.policy.max_tenant_depth}); drain before "
+                    f"resubmitting")
+            order = next(self._order)
+            handle = JobHandle(f"job-{order}", tenant)
+            req = Request(tenant=tenant, spec=spec, entry=entry,
+                          handle=handle, order=order,
+                          solo_reason=None if ok else why)
+            if ok:
+                key = batch_key(spec, entry, policy=self.policy)
+                self._pending.setdefault(key, []).append(req)
+                self._group_opened.setdefault(key, time.monotonic())
+            else:
+                self._solo.append(req)
+            self._inflight[tenant] = self._inflight.get(tenant, 0) + 1
+            self._jobs[handle.job_id] = handle
+            self.counters["submitted"] += 1
+            self._lock.notify_all()
+        return handle
+
+    def submit_json(self, tenant: str, text: str,
+                    method: str | None = None) -> JobHandle:
+        try:
+            spec = ExperimentSpec.from_dict(json.loads(text))
+        except (KeyError, TypeError, ValueError) as e:
+            with self._lock:
+                self.counters["rejected_validation"] += 1
+            raise SpecValidationError(f"unparseable spec JSON: {e}") from None
+        return self.submit(tenant, spec, method=method)
+
+    def job(self, job_id: str) -> JobHandle:
+        with self._lock:
+            try:
+                return self._jobs[job_id]
+            except KeyError:
+                raise KeyError(f"unknown job {job_id!r}") from None
+
+    # -- execution ---------------------------------------------------------
+
+    def _problem_for(self, spec: ExperimentSpec):
+        key = (spec.problem.kind, tuple(sorted(spec.problem.params.items())))
+        if key not in self._problems:
+            self._problems[key] = spec.problem.build()
+        return self._problems[key]
+
+    def _run_batch(self, reqs: list[Request]) -> None:
+        """One coalesced dispatch: every request's cell through
+        ``run_sweep_cells``, results demuxed to each handle."""
+        first = reqs[0]
+        problem = self._problem_for(first.spec)
+        method = first.entry.config
+        cells = [r.cell for r in reqs]
+        plan = resolve_shard(self.policy.shard, protocol=method.protocol,
+                             num_workers=first.spec.cluster.num_workers)
+        key = sweep_cache_key(
+            problem, method, len(cells), num_outer=first.entry.num_outer,
+            eval_every=first.spec.eval_every, batch=self.policy.batch,
+            plan=plan)
+        self.compile_cache.note(key)
+        try:
+            variants = run_sweep_cells(
+                problem, method, cells, num_outer=first.entry.num_outer,
+                eval_every=first.spec.eval_every, batch=self.policy.batch,
+                shard=self.policy.shard)
+        except Exception as e:  # noqa: BLE001 -- a failed batch must not hang tenants
+            for r in reqs:
+                r.handle._fail(e)
+                self._job_done(r.tenant)
+            with self._lock:
+                self.counters["failed"] += len(reqs)
+            return
+        with self._lock:
+            self.counters["batches"] += 1
+            self.counters["batched_requests"] += len(reqs)
+        for r, v in zip(reqs, variants):
+            deliver(r, v)
+            self._job_done(r.tenant)
+
+    def _run_solo(self, req: Request) -> None:
+        """The solo lane: one Session, streamed live into the handle."""
+        try:
+            spec = req.spec
+            session = Session(
+                self._problem_for(spec), req.entry.config, spec.cluster,
+                num_outer=req.entry.num_outer, seed=spec.seed,
+                eval_every=spec.eval_every,
+                target_gap=spec.target_gap, time_budget=spec.time_budget,
+                executor=spec.executor)
+            for event in session.events():
+                req.handle._push(event)
+            req.handle._finish(session.result())
+        except Exception as e:  # noqa: BLE001
+            req.handle._fail(e)
+            with self._lock:
+                self.counters["failed"] += 1
+        else:
+            with self._lock:
+                self.counters["solo_requests"] += 1
+        self._job_done(req.tenant)
+
+    def _job_done(self, tenant: str) -> None:
+        with self._lock:
+            self._inflight[tenant] = max(0, self._inflight.get(tenant, 0) - 1)
+            self._lock.notify_all()
+
+    # -- dispatch policy ---------------------------------------------------
+
+    def _due_groups(self, now: float, *, flush: bool) -> list[tuple]:
+        """Keys whose batch should close now: full, aged out, or flushing."""
+        due = []
+        for key, reqs in self._pending.items():
+            if not reqs:
+                continue
+            if (flush or len(reqs) >= self.policy.max_batch
+                    or now - self._group_opened[key]
+                    >= self.policy.max_wait_s):
+                due.append(key)
+        return due
+
+    def _take_batch(self, key: tuple) -> list[Request]:
+        reqs = self._pending[key]
+        picked = form_batch(reqs, max_batch=self.policy.max_batch)
+        remaining = [r for r in reqs if r not in picked]
+        if remaining:
+            self._pending[key] = remaining
+            self._group_opened[key] = time.monotonic()  # restart the clock
+        else:
+            del self._pending[key]
+            del self._group_opened[key]
+        return picked
+
+    def _dispatch_once(self, *, flush: bool) -> bool:
+        """Run at most one batch or one solo request; True if work was done.
+
+        Execution happens OUTSIDE the lock -- submissions keep flowing while
+        a batch runs.
+        """
+        with self._lock:
+            due = self._due_groups(time.monotonic(), flush=flush)
+            if due:
+                # oldest group first: bounded wait under cross-key load
+                key = min(due, key=lambda k: self._group_opened[k])
+                batch = self._take_batch(key)
+            elif self._solo:
+                batch = None
+                solo = self._solo.pop(0)
+            else:
+                return False
+        if due:
+            self._run_batch(batch)
+        else:
+            self._run_solo(solo)
+        return True
+
+    def drain(self) -> None:
+        """Synchronously run EVERYTHING queued (max-wait ignored: pending
+        groups flush at their current size).  The deterministic path for
+        tests, benches and one-shot batch clients."""
+        while self._dispatch_once(flush=True):
+            pass
+
+    # -- the dispatcher thread --------------------------------------------
+
+    def start(self) -> "ExperimentService":
+        if self._thread is not None:
+            raise RuntimeError("service already started")
+        self._stopping = False
+        self._thread = threading.Thread(target=self._loop,
+                                        name="experiment-service",
+                                        daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self, *, drain: bool = True) -> None:
+        with self._lock:
+            self._stopping = True
+            self._lock.notify_all()
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if drain:
+            self.drain()
+
+    def _loop(self) -> None:
+        while True:
+            did = self._dispatch_once(flush=False)
+            with self._lock:
+                if self._stopping:
+                    return
+                if not did:
+                    # sleep until new work or the oldest group ages out
+                    timeout = self.policy.max_wait_s
+                    if self._group_opened:
+                        oldest = min(self._group_opened.values())
+                        timeout = max(0.0, oldest + self.policy.max_wait_s
+                                      - time.monotonic())
+                    self._lock.wait(timeout=min(timeout,
+                                                self.policy.max_wait_s))
+
+    # -- observability -----------------------------------------------------
+
+    def stats(self) -> dict:
+        with self._lock:
+            counters = dict(self.counters)
+            pending = sum(len(v) for v in self._pending.values())
+            solo = len(self._solo)
+            inflight = {t: n for t, n in self._inflight.items() if n}
+        batches = counters["batches"]
+        counters["coalesce_factor"] = (
+            counters["batched_requests"] / batches if batches else 0.0)
+        return {
+            **counters,
+            "pending_batched": pending,
+            "pending_solo": solo,
+            "inflight_by_tenant": inflight,
+            "compile_cache": self.compile_cache.stats(),
+            "trace_counters": _trace_counters(),
+            "devices": mesh_lib.device_summary(),
+        }
+
+
+def _trace_counters() -> dict:
+    from repro.serve.cache import warm_trace_counters
+
+    return warm_trace_counters()

@@ -2,8 +2,10 @@
 guides' worked examples execute as-is (every fenced python block, in
 order, in one namespace per guide)."""
 
+import os
 import pathlib
 import re
+import subprocess
 import sys
 
 import pytest
@@ -25,6 +27,7 @@ def _python_blocks(path: pathlib.Path) -> list[str]:
                                 "docs/extending-protocols.md",
                                 "docs/extending-compressors.md",
                                 "docs/performance.md",
+                                "docs/serving.md",
                                 "docs/static-analysis.md"])
 def test_markdown_links_resolve(md):
     path = ROOT / md
@@ -36,6 +39,7 @@ def test_markdown_links_resolve(md):
 @pytest.mark.parametrize("guide", ["docs/extending-protocols.md",
                                    "docs/extending-compressors.md",
                                    "docs/performance.md",
+                                   "docs/serving.md",
                                    "docs/static-analysis.md"])
 def test_extension_guide_examples_run_as_is(guide):
     """The acceptance bar for the guides: their code is real. All python
@@ -49,6 +53,20 @@ def test_extension_guide_examples_run_as_is(guide):
             exec(compile(block, f"{guide}[block {i}]", "exec"), ns)
         except Exception as e:  # pragma: no cover - failure reporting
             pytest.fail(f"{guide} block {i} failed: {e!r}\n{block}")
+
+
+def test_serve_example_runs_quick():
+    """The two-tenant serving demo is executed documentation: it must run at
+    smoke scale and its own asserts (coalesce factor >= 2, i.e. the tenants
+    actually shared one compiled batch) must hold."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "examples" / "serve_experiments.py"),
+         "--quick"],
+        capture_output=True, text=True, cwd=ROOT, env=env, timeout=600)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "coalesce factor" in proc.stdout
 
 
 def test_readme_documents_every_registry_entry():

@@ -1,0 +1,489 @@
+"""The multi-tenant experiment service (repro.serve) + run_sweep_cells.
+
+Pins the serve contract from ISSUE/ROADMAP open item 1:
+
+* coalesced tenant batches share ONE compiled sweep call (executor.STATS
+  trace/dispatch counters + the PR-6-style jit-cache-key mirror agree), and
+  each tenant's streamed Round/Sync/Eval/Stop events are bit-identical to a
+  solo ``Session`` run;
+* registry-name/spec-validation errors surface at enqueue time as typed
+  ``SpecValidationError`` with the full known-entry listing (a queued bad
+  spec never reaches a batch);
+* fairness and backpressure: round-robin across tenants inside a batch (a
+  deep backlog cannot starve another tenant) and bounded per-tenant depth
+  with a typed ``BackpressureError`` instead of a hang;
+* the solo lane (group-family protocols, early-stop specs, non-presampleable
+  lag delays) streams real Session events through the same handle API;
+* the HTTP front end round-trips submit -> events -> stats.
+
+``run_sweep_cells`` itself (the api-layer substrate the coalescer batches
+through) is pinned against ``run_sweep`` and solo sessions at the top.
+"""
+
+import dataclasses
+import json
+import threading
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.api.session import EvalEvent, RoundEvent, StopEvent, SyncEvent
+from repro.core import baselines, executor
+from repro.core.simulate import ClusterModel
+from repro.serve import (
+    BackpressureError,
+    CoalescePolicy,
+    ExperimentService,
+    SpecValidationError,
+    batch_key,
+    form_batch,
+    serve_http,
+    sweep_cache_key,
+)
+from repro.serve.coalesce import Request
+
+K, D = 4, 256
+
+
+def _problem_spec(seed=0):
+    return api.ProblemSpec("linear_synthetic",
+                           {"num_workers": K, "n_per_worker": 48, "d": D,
+                            "nnz_per_row": 12, "seed": seed, "lam": 1e-3})
+
+
+def _cluster(delay="constant", params=None, sigma=5.0):
+    return ClusterModel(num_workers=K, straggler_sigma=sigma,
+                        delay_model=delay,
+                        delay_params=tuple((params or {}).items()))
+
+
+def _spec(name="t", method=None, cluster=None, seed=0, num_outer=4,
+          eval_every=2, **kw):
+    method = method or baselines.cocoa_plus(K, H=8)
+    return api.ExperimentSpec(
+        name=name, problem=_problem_spec(),
+        cluster=cluster or _cluster(),
+        methods=(api.MethodEntry(method, num_outer),),
+        eval_every=eval_every, seed=seed, **kw)
+
+
+def _policy(**kw):
+    kw.setdefault("batch", "map")
+    kw.setdefault("shard", "none")
+    kw.setdefault("max_wait_s", 0.0)
+    return CoalescePolicy(**kw)
+
+
+def _solo_events(spec, method_name):
+    entry = spec.method_named(method_name)
+    sess = api.Session(spec.problem.build(), entry.config, spec.cluster,
+                       num_outer=entry.num_outer, seed=spec.seed,
+                       eval_every=spec.eval_every, executor="scan")
+    events = list(sess.events())
+    return events, sess.result()
+
+
+# ---------------------------------------------------------------------------
+# run_sweep_cells: the explicit-cell substrate.
+# ---------------------------------------------------------------------------
+
+
+class TestRunSweepCells:
+    def test_matches_cross_product_run_sweep(self):
+        prob = _problem_spec().build()
+        m = baselines.cocoa_plus(K, H=8)
+        cl = _cluster()
+        grid = api.run_sweep(prob, m, cl, num_outer=4, seeds=(0, 1),
+                             gammas=(0.5, 1.0), batch="map", shard="none")
+        # run_sweep's gamma axis keeps the method's own sigma_prime; carry
+        # it per cell (sigma_prime=None would re-resolve the protocol
+        # default per gamma instead)
+        cells = [api.SweepCellSpec(cl, s, g, m.sigma_prime)
+                 for s in (0, 1) for g in (0.5, 1.0)]
+        explicit = api.run_sweep_cells(prob, m, cells, num_outer=4,
+                                       batch="map", shard="none")
+        for a, b in zip(grid, explicit):
+            assert (a.seed, a.gamma) == (b.seed, b.gamma)
+            np.testing.assert_array_equal(a.result.w, b.result.w)
+            assert ([r.gap for r in a.result.records]
+                    == [r.gap for r in b.result.records])
+            assert b.rounds is not None and len(b.rounds) == 4
+
+    def test_heterogeneous_clusters_one_call(self):
+        """Cells of DIFFERENT delay models batch into one dispatch; the
+        trajectory is shared, the accounting is per-cell."""
+        prob = _problem_spec().build()
+        m = baselines.cocoa_plus(K, H=8)
+        cells = [api.SweepCellSpec(_cluster(), 0, 1.0),
+                 api.SweepCellSpec(_cluster("pareto",
+                                            {"shape": 1.8, "scale": 0.5}),
+                                   0, 1.0)]
+        calls = executor.STATS["sweep_calls"]
+        out = api.run_sweep_cells(prob, m, cells, num_outer=4, batch="map",
+                                  shard="none")
+        assert executor.STATS["sweep_calls"] == calls + 1
+        np.testing.assert_array_equal(out[0].result.w, out[1].result.w)
+        assert out[0].delay == "constant" and out[1].delay == "pareto"
+        assert out[0].rounds[0].sim_time != out[1].rounds[0].sim_time
+
+    def test_lag_cells_match_run_sweep(self):
+        prob = _problem_spec().build()
+        m = baselines.acpd_lag(K, D, B=2, T=2, rho_d=32, gamma=0.5, H=8)
+        cl = _cluster("pareto", {"shape": 1.8, "scale": 0.5})
+        grid = api.run_sweep(prob, m, cl, num_outer=2, seeds=(0, 3),
+                             batch="map", shard="none")
+        explicit = api.run_sweep_cells(
+            prob, m, [api.SweepCellSpec(cl, 0), api.SweepCellSpec(cl, 3)],
+            num_outer=2, batch="map", shard="none")
+        for a, b in zip(grid, explicit):
+            np.testing.assert_array_equal(a.result.w, b.result.w)
+            assert ([r.sim_time for r in a.result.records]
+                    == [r.sim_time for r in b.result.records])
+            assert b.rounds is not None
+
+    def test_rejects_wrong_worker_count(self):
+        prob = _problem_spec().build()
+        m = baselines.cocoa_plus(K, H=8)
+        with pytest.raises(ValueError, match="num_workers=8"):
+            api.run_sweep_cells(
+                prob, m, [api.SweepCellSpec(ClusterModel(num_workers=8), 0)],
+                num_outer=2)
+
+    def test_rejects_group_protocols_and_empty(self):
+        prob = _problem_spec().build()
+        with pytest.raises(ValueError, match="scan-capable"):
+            api.run_sweep_cells(prob, baselines.acpd(K, D),
+                                [api.SweepCellSpec(_cluster(), 0)],
+                                num_outer=2)
+        with pytest.raises(ValueError, match="empty"):
+            api.run_sweep_cells(prob, baselines.cocoa_plus(K, H=8), [],
+                                num_outer=2)
+
+
+# ---------------------------------------------------------------------------
+# Admission: validation + backpressure (satellite 1 + 3).
+# ---------------------------------------------------------------------------
+
+
+class TestAdmission:
+    def test_unknown_problem_rejected_at_enqueue(self):
+        svc = ExperimentService(_policy())
+        spec = _spec()
+        bad = dataclasses.replace(
+            spec, problem=dataclasses.replace(spec.problem, kind="nope"))
+        with pytest.raises(SpecValidationError, match="linear_synthetic"):
+            svc.submit("a", bad)
+        # the bad spec never reached any queue
+        assert svc.stats()["pending_batched"] == 0
+        assert svc.counters["rejected_validation"] == 1
+
+    def test_unknown_registry_names_list_entries(self):
+        svc = ExperimentService(_policy())
+        spec = _spec(method=dataclasses.replace(
+            baselines.cocoa_plus(K, H=8), compressor="zstd"))
+        with pytest.raises(SpecValidationError, match="topk_q8"):
+            svc.submit("a", spec)
+        spec = _spec(cluster=_cluster().__class__(num_workers=K,
+                                                  delay_model="wat"))
+        with pytest.raises(SpecValidationError, match="pareto"):
+            svc.submit("a", spec)
+
+    def test_unknown_method_selector(self):
+        svc = ExperimentService(_policy())
+        with pytest.raises(SpecValidationError, match="no method named"):
+            svc.submit("a", _spec(), method="nope")
+
+    def test_multi_method_spec_needs_selector(self):
+        spec = _spec()
+        multi = dataclasses.replace(
+            spec, methods=spec.methods + (api.MethodEntry(
+                baselines.cocoa_v1(K, H=8), 4),))
+        svc = ExperimentService(_policy())
+        with pytest.raises(SpecValidationError, match="method=<name>"):
+            svc.submit("a", multi)
+        h = svc.submit("a", multi, method="CoCoA+")
+        svc.drain()
+        assert h.result().method.name == "CoCoA+"
+
+    def test_validate_catches_structural_errors(self):
+        spec = _spec()
+        bad_b = dataclasses.replace(
+            spec, methods=(api.MethodEntry(dataclasses.replace(
+                spec.methods[0].config, B=99), 4),))
+        with pytest.raises(ValueError, match="B=99"):
+            bad_b.validate()
+        with pytest.raises(ValueError, match="eval_every"):
+            dataclasses.replace(spec, eval_every=0).validate()
+
+    def test_backpressure_typed_rejection_not_hang(self):
+        svc = ExperimentService(_policy(max_tenant_depth=2))
+        svc.submit("a", _spec())
+        svc.submit("a", _spec())
+        with pytest.raises(BackpressureError, match="max_tenant_depth=2"):
+            svc.submit("a", _spec())
+        # another tenant is unaffected
+        svc.submit("b", _spec())
+        assert svc.counters["rejected_backpressure"] == 1
+        svc.drain()
+        # depth frees up after completion
+        h = svc.submit("a", _spec())
+        svc.drain()
+        assert h.done()
+
+
+# ---------------------------------------------------------------------------
+# Coalescing correctness: shared compile + bit-identical streams.
+# ---------------------------------------------------------------------------
+
+
+class TestCoalescing:
+    def test_two_tenants_share_one_dispatch_and_compile(self):
+        """The acceptance-criteria contract: compatible tenant requests run
+        as ONE sweep call mapping to ONE jit cache key, and each stream is
+        bit-identical to the tenant's solo Session run."""
+        svc = ExperimentService(_policy())
+        m = baselines.cocoa_plus(K, H=8)
+        sa = _spec("alice-exp", method=m)
+        sb = _spec("bob-exp", method=dataclasses.replace(m, gamma=0.5),
+                   cluster=_cluster("shifted_exponential",
+                                    {"tail_mean": 1.0}))
+        calls, traces = (executor.STATS["sweep_calls"],
+                         executor.STATS["sweep_traces"])
+        ha = svc.submit("alice", sa)
+        hb = svc.submit("bob", sb)
+        svc.drain()
+        assert executor.STATS["sweep_calls"] == calls + 1  # ONE dispatch
+        assert svc.counters["batches"] == 1
+        assert svc.counters["batched_requests"] == 2
+        assert svc.stats()["coalesce_factor"] == 2.0
+
+        # identical jit cache key for both requests (PR-6 contract style)
+        prob = svc._problem_for(sa)
+        plan = api.resolve_shard("none", protocol=m.protocol, num_workers=K)
+        keys = [sweep_cache_key(prob, s.methods[0].config, 2, num_outer=4,
+                                eval_every=2, batch="map", plan=plan)
+                for s in (sa, sb)]
+        assert keys[0] == keys[1]
+
+        for spec, handle in ((sa, ha), (sb, hb)):
+            solo_events, solo_result = _solo_events(spec, m.name)
+            served = list(handle.events())
+            assert served == solo_events  # bit-identical, same order/types
+            np.testing.assert_array_equal(handle.result().w, solo_result.w)
+        # the second identical batch shape is a warm-cache hit
+        assert executor.STATS["sweep_traces"] >= traces
+
+    def test_warm_cache_hit_on_repeat_batch_shape(self):
+        svc = ExperimentService(_policy())
+        for _ in range(2):
+            svc.submit("a", _spec())
+            svc.submit("b", _spec(seed=0, cluster=_cluster(sigma=2.0)))
+            svc.drain()
+        cs = svc.compile_cache.stats()
+        assert cs == {"entries": 1, "hits": 1, "misses": 1, "hit_rate": 0.5}
+
+    def test_cache_mirror_agrees_with_jit_traces(self):
+        """The CompileCache key mirror is honest: a mirrored hit means jit
+        did NOT retrace (STATS sweep_traces unchanged)."""
+        svc = ExperimentService(_policy())
+        svc.submit("a", _spec())
+        svc.submit("b", _spec(cluster=_cluster(sigma=2.0)))
+        svc.drain()
+        traces = executor.STATS["sweep_traces"]
+        svc.submit("a", _spec(seed=5))
+        svc.submit("b", _spec(seed=6))
+        svc.drain()
+        assert svc.compile_cache.hits == 1
+        assert executor.STATS["sweep_traces"] == traces  # no retrace
+
+    def test_incompatible_keys_do_not_coalesce(self):
+        svc = ExperimentService(_policy())
+        svc.submit("a", _spec(num_outer=4))
+        svc.submit("b", _spec(num_outer=6))  # different round budget
+        svc.drain()
+        assert svc.counters["batches"] == 2
+        assert svc.stats()["coalesce_factor"] == 1.0
+
+    def test_lag_tenants_coalesce_across_delay_models(self):
+        m = baselines.acpd_lag(K, D, B=2, T=2, rho_d=32, gamma=0.5, H=8)
+        sa = _spec("a", method=m,
+                   cluster=_cluster("pareto", {"shape": 1.8, "scale": 0.5}))
+        sb = _spec("b", method=m,
+                   cluster=_cluster("shifted_exponential",
+                                    {"tail_mean": 1.0}))
+        svc = ExperimentService(_policy())
+        lag_calls = executor.STATS["sweep_lag_calls"]
+        ha = svc.submit("a", sa)
+        hb = svc.submit("b", sb)
+        svc.drain()
+        assert executor.STATS["sweep_lag_calls"] == lag_calls + 1
+        for spec, handle in ((sa, ha), (sb, hb)):
+            solo_events, solo_result = _solo_events(spec, m.name)
+            assert list(handle.events()) == solo_events
+            np.testing.assert_array_equal(handle.result().w, solo_result.w)
+
+    def test_solo_lane_group_protocol_and_early_stop(self):
+        svc = ExperimentService(_policy())
+        hg = svc.submit("a", _spec(method=baselines.acpd(K, D)))  # group
+        hs = svc.submit("a", _spec(target_gap=1e-12))  # early stop
+        svc.drain()
+        assert svc.counters["solo_requests"] == 2
+        assert svc.counters["batches"] == 0
+        events = list(hg.events())
+        assert isinstance(events[-1], StopEvent)
+        assert hs.result().records  # ran, streamed, finished
+
+    def test_failed_batch_raises_not_hangs(self):
+        svc = ExperimentService(_policy())
+        h = svc.submit("a", _spec())
+
+        def boom(*a, **k):
+            raise RuntimeError("synthetic executor failure")
+
+        import repro.serve.service as service_mod
+        orig = service_mod.run_sweep_cells
+        service_mod.run_sweep_cells = boom
+        try:
+            svc.drain()
+        finally:
+            service_mod.run_sweep_cells = orig
+        with pytest.raises(RuntimeError, match="synthetic"):
+            h.result(timeout=1.0)
+        assert svc.counters["failed"] == 1
+        # tenant depth was released: a new submit is admitted
+        svc.submit("a", _spec())
+        svc.drain()
+
+
+# ---------------------------------------------------------------------------
+# Fairness.
+# ---------------------------------------------------------------------------
+
+
+class TestFairness:
+    def test_round_robin_across_tenants(self):
+        """A tenant with a deep backlog cannot starve another: with
+        max_batch=4 and queues slow=[6 reqs] fast=[1 req], the closing batch
+        interleaves tenants instead of draining `slow` first."""
+        reqs = []
+        spec = _spec()
+        for i in range(6):
+            reqs.append(Request("slow", spec, spec.methods[0], None, i))
+        reqs.append(Request("fast", spec, spec.methods[0], None, 6))
+        picked = form_batch(reqs, max_batch=4)
+        # fast's single request made it into the first batch of 4
+        assert [r.tenant for r in picked].count("fast") == 1
+        # oldest-first within each tenant
+        slow_orders = [r.order for r in picked if r.tenant == "slow"]
+        assert slow_orders == sorted(slow_orders) == [0, 1, 2]
+
+    def test_fast_tenant_not_starved_end_to_end(self):
+        svc = ExperimentService(_policy(max_batch=2, max_tenant_depth=8))
+        slow = [svc.submit("slow", _spec(seed=i)) for i in range(4)]
+        fast = svc.submit("fast", _spec(seed=9))
+        # first dispatched batch (max_batch=2) must contain fast's request
+        svc._dispatch_once(flush=True)
+        assert fast.done()
+        assert sum(h.done() for h in slow) == 1  # one slot went to slow
+        svc.drain()
+        assert all(h.done() for h in slow)
+
+    def test_batch_key_groups_what_should_group(self):
+        pol = _policy()
+        spec_a = _spec("a")
+        spec_b = _spec("b", cluster=_cluster("pareto",
+                                             {"shape": 1.8, "scale": 0.5}),
+                       seed=3)
+        gamma_var = _spec("c", method=dataclasses.replace(
+            baselines.cocoa_plus(K, H=8), gamma=0.25, name="other"))
+        assert (batch_key(spec_a, spec_a.methods[0], policy=pol)
+                == batch_key(spec_b, spec_b.methods[0], policy=pol)
+                == batch_key(gamma_var, gamma_var.methods[0], policy=pol))
+        h_var = _spec("d", method=baselines.cocoa_plus(K, H=16))
+        assert (batch_key(spec_a, spec_a.methods[0], policy=pol)
+                != batch_key(h_var, h_var.methods[0], policy=pol))
+
+
+# ---------------------------------------------------------------------------
+# Streams + HTTP front end.
+# ---------------------------------------------------------------------------
+
+
+class TestStreamsAndHttp:
+    def test_event_stream_types_and_order(self):
+        svc = ExperimentService(_policy())
+        h = svc.submit("a", _spec())
+        svc.drain()
+        events = list(h.events(timeout=5.0))
+        kinds = [type(e) for e in events]
+        assert kinds[0] is RoundEvent
+        assert kinds[-1] is StopEvent
+        assert SyncEvent in kinds and EvalEvent in kinds
+        # deferred-eval contract: evals arrive after the last round event
+        last_round = max(i for i, k in enumerate(kinds) if k is RoundEvent)
+        first_eval = min(i for i, k in enumerate(kinds) if k is EvalEvent)
+        assert first_eval > last_round
+
+    def test_dispatcher_thread_end_to_end(self):
+        svc = ExperimentService(CoalescePolicy(
+            max_batch=8, max_wait_s=0.02, max_tenant_depth=8,
+            batch="map", shard="none")).start()
+        try:
+            ha = svc.submit("alice", _spec())
+            hb = svc.submit("bob", _spec(seed=1))
+            ra, rb = ha.result(timeout=120), hb.result(timeout=120)
+            assert ra.records and rb.records
+            assert svc.counters["batches"] >= 1
+        finally:
+            svc.stop()
+
+    def test_http_round_trip(self):
+        svc = ExperimentService(_policy()).start()
+        server = serve_http(svc, "127.0.0.1", 0)
+        port = server.server_address[1]
+        t = threading.Thread(target=server.serve_forever, daemon=True)
+        t.start()
+        base = f"http://127.0.0.1:{port}"
+        try:
+            body = json.dumps({"tenant": "alice",
+                               "spec": _spec().to_dict()}).encode()
+            req = urllib.request.Request(f"{base}/submit", data=body,
+                                         method="POST")
+            with urllib.request.urlopen(req, timeout=30) as r:
+                job = json.loads(r.read())
+            assert job["tenant"] == "alice"
+            with urllib.request.urlopen(f"{base}/events/{job['job_id']}",
+                                        timeout=120) as r:
+                payload = json.loads(r.read())
+            kinds = [e["type"] for e in payload["events"]]
+            assert kinds[0] == "round" and kinds[-1] == "stop"
+            assert "eval" in kinds
+            with urllib.request.urlopen(f"{base}/stats", timeout=30) as r:
+                stats = json.loads(r.read())
+            assert stats["submitted"] >= 1
+            assert "compile_cache" in stats and "devices" in stats
+        finally:
+            server.shutdown()
+            svc.stop()
+
+    def test_http_rejects_bad_spec_with_listing(self):
+        svc = ExperimentService(_policy()).start()
+        server = serve_http(svc, "127.0.0.1", 0)
+        port = server.server_address[1]
+        threading.Thread(target=server.serve_forever, daemon=True).start()
+        try:
+            spec = _spec().to_dict()
+            spec["problem"]["kind"] = "nope"
+            body = json.dumps({"tenant": "a", "spec": spec}).encode()
+            req = urllib.request.Request(
+                f"http://127.0.0.1:{port}/submit", data=body, method="POST")
+            with pytest.raises(urllib.error.HTTPError) as ei:
+                urllib.request.urlopen(req, timeout=30)
+            assert ei.value.code == 400
+            err = json.loads(ei.value.read())["error"]
+            assert "linear_synthetic" in err  # full known-entry listing
+        finally:
+            server.shutdown()
+            svc.stop()
