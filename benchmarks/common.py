@@ -75,7 +75,8 @@ def append_trajectory(entry: dict) -> None:
     factor are policy-dominated, so the quick serve cell is a real data
     point and the trajectory captures it alongside the full-scale numbers.
     """
-    has_perf = "executor" in entry or "sweep" in entry or "serve" in entry
+    has_perf = ("executor" in entry or "sweep" in entry or "serve" in entry
+                or "straggler_zoo" in entry)
     if not has_perf or (entry.get("quick") and "serve" not in entry):
         return
     doc = []
@@ -136,6 +137,20 @@ def trajectory_entry(quick: bool, failures: list,
         entry["sweep"] = {
             regime: {k: row[k] for k in keep if k in row}
             for regime, row in rows.items()}
+    zoo_path = OUT_DIR / "straggler_zoo.json"
+    if ("benchmarks.bench_straggler_zoo" in fresh and zoo_path.exists()
+            and not quick):
+        # Sim-time-to-gap is a model quantity, not a wall-clock, but it IS
+        # the zoo's headline claim (partial_work harvests stragglers); only
+        # full-scale runs are trustworthy, quick grids stop too early.
+        data = json.loads(zoo_path.read_text())["data"]
+        ttg = data.get("time_to_gap") or {}
+        if ttg:
+            entry["straggler_zoo"] = {
+                delay: {k: row.get(k) for k in
+                        ("target_gap", "group_s", "partial_s",
+                         "sim_time_speedup")}
+                for delay, row in ttg.items()}
     serve_path = OUT_DIR / "serve.json"
     if "benchmarks.bench_serve" in fresh and serve_path.exists():
         data = json.loads(serve_path.read_text())["data"]

@@ -26,6 +26,10 @@ contracts over the source AST -- no imports, no tracing, no device:
 * ``registry-hooks``     -- every ``@register_protocol`` / compressor /
   delay / solver entry implements the abstract hooks its base class
   declares (the Protocol hook-contract docstrings, statically enforced).
+  Protocol entries must additionally state ``default_sigma_prime`` and
+  ``coalesce_supported`` in their own class chain: both are concrete on
+  the base, so inheriting them silently means nobody decided the new
+  entry's safety parameter or its serve-batching eligibility.
 
 Rules are registry entries (:func:`register_rule`), mirroring the protocol /
 compressor / delay registries: subclass :class:`Rule`, decorate, and the rule
@@ -805,20 +809,29 @@ class RegistryHooksRule(Rule):
     base's abstract hooks (the Protocol hook-contract docstrings)."""
 
     description = ("flags @register_protocol/compressor/delay classes missing "
-                   "abstract hooks of their base, and register_solver entries "
-                   "off the solver signature")
+                   "abstract hooks of their base (plus the protocol registry's "
+                   "explicit extras: default_sigma_prime, coalesce_supported), "
+                   "and register_solver entries off the solver signature")
 
-    # decorator canonical name -> (base module, base class, fallback hooks)
+    # decorator canonical name ->
+    #   (base module, base class, fallback hooks, extra required hooks).
+    # Extras are hooks the base implements CONCRETELY (so they cannot be
+    # auto-derived from NotImplementedError bodies) but that every registered
+    # entry must still state in its own chain: sigma' is the safety parameter
+    # of the entry's aggregation rule, and coalesce eligibility decides
+    # whether the serve layer may batch the entry's runs -- inheriting either
+    # silently from Protocol means nobody decided them for the new entry.
     REGISTRIES = {
         "repro.core.engine.register_protocol":
             ("repro.core.engine", "Protocol",
              ("num_rounds", "initial_messages", "arrivals_needed",
-              "process_round", "snapshot", "finalize")),
+              "process_round", "snapshot", "finalize"),
+             ("default_sigma_prime", "coalesce_supported")),
         "repro.core.compress.register_compressor":
             ("repro.core.compress", "Compressor",
-             ("compress", "compress_grouped")),
+             ("compress", "compress_grouped"), ()),
         "repro.core.delays.register_delay":
-            ("repro.core.delays", "DelayModel", ("compute_time",)),
+            ("repro.core.delays", "DelayModel", ("compute_time",), ()),
     }
     SOLVER_REGISTRAR = "repro.core.solvers.register_solver"
     SOLVER_MIN_ARGS = 9  # w_eff, alpha, X, y, norms_sq, lam, n, sigma', key
@@ -897,9 +910,9 @@ class RegistryHooksRule(Rule):
                 reg = self.REGISTRIES.get(canon or "")
                 if reg is None:
                     continue
-                base_mod, base_cls, fallback = reg
+                base_mod, base_cls, fallback, extra = reg
                 required = self._abstract_hooks(project, base_mod, base_cls,
-                                                fallback)
+                                                fallback) + tuple(extra)
                 defined = self._defined_hooks(project, module, cls, base_cls)
                 missing = sorted(set(required) - defined)
                 if missing:

@@ -189,6 +189,15 @@ def straggler_zoo(delay: str = "pareto", quick: bool = False,
                     3 if quick else 12),
         MethodEntry(baselines.acpd_lag(K, d, B=2, T=10, rho_d=64, gamma=0.5,
                                        H=H), 3 if quick else 12),
+        # Equal byte budget with the acpd() row by construction: n_chunks
+        # chunks of rho_d/n_chunks coordinates each per full pass.
+        MethodEntry(baselines.acpd_partial_work(K, d, B=2, T=10, rho_d=64,
+                                                gamma=0.5, H=H, n_chunks=4),
+                    3 if quick else 12),
+        MethodEntry(baselines.acpd_hierarchical(K, d, T=10, rho_d=64,
+                                                gamma=0.5, H=H, n_racks=2,
+                                                rack_b=1),
+                    3 if quick else 12),
         MethodEntry(baselines.acpd_async(K, d, T=10, rho_d=64, gamma=0.5,
                                          H=H), 10 if quick else 40),
         MethodEntry(baselines.cocoa_v1(K, H=H), 10 if quick else 60),

@@ -26,6 +26,8 @@ def _cluster_to_dict(c: ClusterModel) -> dict[str, Any]:
     # Normalized (name, value) pairs -> a plain JSON object; ClusterModel's
     # __post_init__ re-normalizes on the way back in.
     d["delay_params"] = dict(c.delay_params)
+    # (worker, drop, rejoin) triples -> JSON [worker, drop, rejoin-or-null].
+    d["membership"] = [list(e) for e in c.membership]
     return d
 
 
@@ -33,6 +35,8 @@ def _cluster_from_dict(d: Mapping[str, Any]) -> ClusterModel:
     kw = dict(d)
     if "straggler_workers" in kw:
         kw["straggler_workers"] = tuple(kw["straggler_workers"])
+    if "membership" in kw:
+        kw["membership"] = tuple(tuple(e) for e in kw["membership"])
     return ClusterModel(**kw)
 
 
@@ -170,6 +174,54 @@ class ExperimentSpec:
             if not 1 <= cfg.B <= self.cluster.num_workers:
                 errors.append(
                     f"{where}: B={cfg.B} outside [1, K={self.cluster.num_workers}]")
+            if cfg.n_chunks < 1:
+                errors.append(f"{where}: n_chunks must be >= 1, got "
+                              f"{cfg.n_chunks}")
+            elif cfg.n_chunks > cfg.H:
+                errors.append(
+                    f"{where}: n_chunks={cfg.n_chunks} exceeds H={cfg.H}: "
+                    f"every chunk needs at least one local step")
+            if cfg.pw_quantum is not None and cfg.pw_quantum <= 0:
+                errors.append(f"{where}: pw_quantum must be > 0, got "
+                              f"{cfg.pw_quantum}")
+            K = self.cluster.num_workers
+            if cfg.protocol == "hierarchical_b":
+                if not 1 <= cfg.n_racks <= K:
+                    errors.append(f"{where}: n_racks={cfg.n_racks} outside "
+                                  f"[1, K={K}]")
+                else:
+                    sizes = [sum(1 for k in range(K)
+                                 if k * cfg.n_racks // K == r)
+                             for r in range(cfg.n_racks)]
+                    if not 1 <= cfg.rack_b <= min(sizes):
+                        errors.append(
+                            f"{where}: rack_b={cfg.rack_b} outside "
+                            f"[1, min rack size={min(sizes)}] (racks of "
+                            f"{sizes})")
+            if self.cluster.membership:
+                try:
+                    proto_cls = engine_lib.get_protocol(cfg.protocol)
+                except ValueError:
+                    proto_cls = None  # unknown protocol: reported above
+                if proto_cls is not None and not getattr(
+                        proto_cls, "supports_membership", False):
+                    errors.append(
+                        f"{where}: protocol {cfg.protocol!r} does not "
+                        f"support the cluster's elastic membership schedule "
+                        f"(supporting protocols declare supports_membership)")
+        for entry in self.cluster.membership:
+            k, drop, rejoin = entry
+            if not 0 <= k < self.cluster.num_workers:
+                errors.append(
+                    f"membership entry {list(entry)}: worker {k} outside "
+                    f"[0, K={self.cluster.num_workers})")
+            if drop < 0:
+                errors.append(f"membership entry {list(entry)}: drop time "
+                              f"must be >= 0")
+            if rejoin is not None and rejoin <= drop:
+                errors.append(
+                    f"membership entry {list(entry)}: rejoin time must be "
+                    f"> drop time (use null for never-rejoins)")
         if self.eval_every <= 0:
             errors.append(f"eval_every must be >= 1, got {self.eval_every}")
         if self.executor not in ("auto", "event", "scan"):

@@ -170,7 +170,16 @@ def resolve_shard(shard: str, *, protocol: str, num_workers: int,
 
 def sweep_supported(method: MethodConfig,
                     cluster: ClusterModel) -> tuple[bool, str]:
-    """Can (method, cluster) batch into :func:`run_sweep`?  (ok, why-not)."""
+    """Can (method, cluster) batch into :func:`run_sweep`?  (ok, why-not).
+
+    Strictly narrower than ``executor.scan_supported``: ``partial_work``
+    scans solo (per-chunk carries are per-run state) but does not batch
+    into shared sweep cells."""
+    if method.protocol not in executor.SWEEP_PROTOCOLS:
+        return False, (
+            f"protocol {method.protocol!r} does not batch into shared sweep "
+            f"cells (sweep-batchable: {executor.SWEEP_PROTOCOLS}); run it "
+            f"one Session per cell")
     return executor.scan_supported(method, cluster)
 
 
@@ -399,11 +408,12 @@ def run_sweep(
     ``Session(executor="scan")`` run -- and therefore to the event engine
     (pinned by tests/test_sweep.py).
     """
-    if method.protocol not in executor.SCAN_PROTOCOLS:
+    if method.protocol not in executor.SWEEP_PROTOCOLS:
         raise ValueError(
-            f"sweep batching needs a scan-capable protocol "
-            f"{executor.SCAN_PROTOCOLS}, got {method.protocol!r}; run "
-            f"group-family methods one Session per cell")
+            f"sweep batching needs a sweep-batchable (shared-cell "
+            f"scan-capable) protocol {executor.SWEEP_PROTOCOLS}, got "
+            f"{method.protocol!r}; run other protocols one Session per "
+            f"cell")
     if batch not in ("vmap", "map"):
         raise ValueError(f"unknown batch mode {batch!r}; 'vmap' or 'map'")
     if num_outer <= 0:
@@ -670,11 +680,12 @@ def run_sweep_cells(
     per-round accounting (``SweepVariant.rounds``) so callers can replay
     the cell's complete Round/Sync/Eval/Stop event stream.
     """
-    if method.protocol not in executor.SCAN_PROTOCOLS:
+    if method.protocol not in executor.SWEEP_PROTOCOLS:
         raise ValueError(
-            f"sweep batching needs a scan-capable protocol "
-            f"{executor.SCAN_PROTOCOLS}, got {method.protocol!r}; run "
-            f"group-family methods one Session per cell")
+            f"sweep batching needs a sweep-batchable (shared-cell "
+            f"scan-capable) protocol {executor.SWEEP_PROTOCOLS}, got "
+            f"{method.protocol!r}; run other protocols one Session per "
+            f"cell")
     if batch not in ("vmap", "map"):
         raise ValueError(f"unknown batch mode {batch!r}; 'vmap' or 'map'")
     if num_outer <= 0:

@@ -78,6 +78,21 @@ class MethodConfig:
     adaptive_quantile: float = 0.5
     adaptive_ewma: float = 0.25
     b_min: int = 1
+    # Chunk streaming (protocol="partial_work"): each local pass of H steps
+    # is split into ``n_chunks`` pieces, streamed to the server as they
+    # finish; the server harvests every chunk that arrived by its deadline
+    # (the B-th FULL arrival, or a fixed ``pw_quantum`` of simulated seconds
+    # when set), so stragglers contribute partial work instead of being
+    # discarded (Ozfatura et al., arXiv:2004.04948).
+    n_chunks: int = 1
+    pw_quantum: float | None = None
+    # Two-level rack-aware aggregation (protocol="hierarchical_b"): workers
+    # are split into ``n_racks`` contiguous racks and a round waits for the
+    # ``rack_b``-th arrival in EVERY rack before the cross-rack merge --
+    # per-rack B-of-k on per-rack links (pair with the ``bandwidth_coupled``
+    # delay model for slow-rack links).
+    n_racks: int = 2
+    rack_b: int = 1
 
     def resolved_sigma_prime(self, K: int) -> float:
         """sigma' when unset: delegated to the protocol registry entry.

@@ -91,6 +91,40 @@ def cocoa_plus_solver(K: int, H: int = 1000, gamma: float = 1.0,
                         local_solver=local_solver)
 
 
+def acpd_partial_work(K: int, d: int, *, B: int | None = None, T: int = 20,
+                      rho_d: int = 1000, gamma: float = 0.5, H: int = 1000,
+                      n_chunks: int = 4,
+                      pw_quantum: float | None = None) -> MethodConfig:
+    """Straggler-UTILIZING chunk streaming (engine.PartialWorkProtocol):
+    each local pass splits into ``n_chunks`` streamed partial updates, and
+    the server harvests whatever chunks arrived by its B-th-full-arrival
+    deadline (or every ``pw_quantum`` simulated seconds when set).
+
+    Equal-byte-budget by construction: the per-chunk sparsity is
+    ``rho_d / n_chunks`` coordinates, so one FULL pass ships exactly the
+    bytes of one ``acpd()`` round -- comparisons against ``group`` isolate
+    the harvest-partial-work effect from the communication budget.
+    """
+    B = B if B is not None else max(1, K // 2)
+    return MethodConfig(name="ACPD-partial", protocol="partial_work", B=B,
+                        T=T, rho=min(1.0, rho_d / (max(1, n_chunks) * d)),
+                        gamma=gamma, H=H, n_chunks=n_chunks,
+                        pw_quantum=pw_quantum)
+
+
+def acpd_hierarchical(K: int, d: int, *, T: int = 20, rho_d: int = 1000,
+                      gamma: float = 0.5, H: int = 1000, n_racks: int = 2,
+                      rack_b: int = 1) -> MethodConfig:
+    """Two-level rack-aware aggregation (engine.HierarchicalBProtocol):
+    per-rack ``rack_b``-of-k deadlines, then one cross-rack merge.  ``B`` is
+    ignored by the arrival rule (the per-rack quotas replace it) but kept at
+    the group default so sigma'-resolution and spec validation see a
+    consistent config."""
+    return MethodConfig(name="ACPD-hier", protocol="hierarchical_b",
+                        B=max(1, K // 2), T=T, rho=min(1.0, rho_d / d),
+                        gamma=gamma, H=H, n_racks=n_racks, rack_b=rack_b)
+
+
 def acpd_adaptive(K: int, d: int, *, T: int = 20, rho_d: int = 1000,
                   gamma: float = 0.5, H: int = 1000, quantile: float = 0.5,
                   b_min: int = 1) -> MethodConfig:
@@ -111,6 +145,8 @@ ALL_PRESETS = {
     "acpd_dense": acpd_dense,
     "acpd_async": acpd_async,
     "acpd_lag": acpd_lag,
+    "acpd_partial_work": acpd_partial_work,
+    "acpd_hierarchical": acpd_hierarchical,
     "cocoa_v1": cocoa_v1,
     "cocoa_plus_solver": cocoa_plus_solver,
     "acpd_adaptive": acpd_adaptive,

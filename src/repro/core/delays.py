@@ -218,6 +218,30 @@ class DelayModel:
         return np.stack([self.sample_round(H, rng)
                          for _ in range(num_rounds)])
 
+    def sample_chunks(self, chunk_steps: tuple[int, ...],
+                      rng: np.random.Generator) -> np.ndarray:
+        """One chunked round's compute times: ``(n_chunks, K)``, chunk-major.
+
+        Chunk-streaming protocols (``partial_work``) split one local pass of
+        ``H`` steps into ``chunk_steps`` pieces; each chunk's duration is an
+        independent ``sample_round`` draw at that chunk's step count, taken
+        chunk-major so that with ONE chunk the draw is exactly the single
+        ``sample_round(H)`` the group family makes -- the bit-identity the
+        ``n_chunks=1`` degradation tests pin.
+        """
+        return np.stack([self.sample_round(h, rng) for h in chunk_steps])
+
+    def sample_chunk_stream(self, num_waves: int, chunk_steps: tuple[int, ...],
+                            rng: np.random.Generator) -> np.ndarray | None:
+        """Pre-sample ``num_waves`` chunked launch waves:
+        ``(num_waves, n_chunks, K)``, or ``None`` when per-``(wave, chunk,
+        worker)`` cells cannot reproduce the event executor's stream (same
+        eligibility rule as non-lockstep ``sample_stream``)."""
+        if not (self.vector_sampled or self.deterministic):
+            return None
+        return np.stack([self.sample_chunks(chunk_steps, rng)
+                         for _ in range(num_waves)])
+
     @property
     def deterministic(self) -> bool:
         """True when ``compute_time`` never touches the RNG."""

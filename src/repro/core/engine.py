@@ -119,10 +119,11 @@ class Message:
     """An in-flight worker->server message (payload stays on device)."""
 
     __slots__ = ("arrival", "worker", "payload", "alpha_snapshot", "nbytes",
-                 "seq", "applied")
+                 "seq", "applied", "chunk", "final")
 
     def __init__(self, arrival: float, worker: int, payload, alpha_snapshot,
-                 nbytes: int, seq: int, applied: bool = True):
+                 nbytes: int, seq: int, applied: bool = True,
+                 chunk: int = 0, final: bool = True):
         self.arrival = arrival
         self.worker = worker
         self.payload = payload
@@ -130,6 +131,8 @@ class Message:
         self.nbytes = nbytes
         self.seq = seq
         self.applied = applied  # False for LAG heartbeats (skipped uploads)
+        self.chunk = chunk  # chunk index within the sender's local pass
+        self.final = final  # last chunk of the pass (non-chunked: always)
 
     def __lt__(self, other: "Message") -> bool:
         return (self.arrival, self.seq) < (other.arrival, other.seq)
@@ -197,6 +200,78 @@ def _worker_rounds_fused(key, w_local, alpha, residual, X, y, norms_sq, idxs,
     (key, alpha, residual), (alpha_rows, sents) = jax.lax.scan(
         body, (key, alpha, residual), idxs)
     return key, alpha, residual, alpha_rows, sents
+
+
+@partial(jax.jit, static_argnames=("loss", "chunk_steps", "comp"),
+         donate_argnums=(0, 2, 3))
+def _worker_chunk_rounds_fused(key, w_local, alpha, residual, X, y, norms_sq,
+                               idxs, lam, n, sigma_p, gamma, *, loss,
+                               chunk_steps, comp):
+    """A group of CHUNKED local passes (partial_work) as ONE donated dispatch.
+
+    Each launched worker runs ``len(chunk_steps)`` sequential sub-rounds of
+    the shared Alg. 2 body against its fixed ``w_local`` row (the model does
+    not change mid-pass -- the server only replies at relaunch), carrying its
+    dual/residual state from chunk to chunk and compressing EVERY chunk's
+    delta independently (residual feedback chains through, so un-harvested
+    chunk mass is never lost).  With ``chunk_steps == (H,)`` the op sequence
+    -- including the one key split per worker -- degenerates to exactly
+    :func:`_worker_rounds_fused`, which the n_chunks=1 bit-identity tests
+    pin.  Returns per-worker per-chunk dual snapshots, payloads, and
+    post-chunk residuals (``(G, C, n_k)`` / ``(G, C, d)``, arrival order).
+    """
+
+    def body(carry, k):
+        key, alpha, residual = carry
+        alpha_k, res_k = alpha[k], residual[k]
+        snaps, sents, resids = [], [], []
+        for h in chunk_steps:
+            key, alpha_k, res_k, _, sent = _local_round(
+                key, w_local, alpha_k, res_k, X[k], y[k], norms_sq[k], k,
+                lam, n, sigma_p, gamma, loss=loss, num_steps=h, comp=comp)
+            snaps.append(alpha_k)
+            sents.append(sent)
+            resids.append(res_k)
+        carry = (key, alpha.at[k].set(alpha_k), residual.at[k].set(res_k))
+        return carry, (jnp.stack(snaps), jnp.stack(sents), jnp.stack(resids))
+
+    (key, alpha, residual), (alpha_rows, sents, resids) = jax.lax.scan(
+        body, (key, alpha, residual), idxs)
+    return key, alpha, residual, alpha_rows, sents, resids
+
+
+# Only dw_tilde/w_local are donated: w_server and alpha_applied may be held
+# by deferred eval snapshots, which donation would invalidate.
+@partial(jax.jit, donate_argnums=(1, 2))
+def _server_apply_partial(w_server, dw_tilde, w_local, alpha_applied,
+                          snap_idxs, snapshots, payloads, reply_idxs, gamma):
+    """Partial-work server round: harvest whatever chunks arrived, reply only
+    to the workers being relaunched.
+
+    ``payloads`` is every harvested chunk in arrival order (the summation
+    order matters bit-for-bit); ``snap_idxs``/``snapshots`` carry ONE dual
+    snapshot per harvested worker -- the host pre-selects each worker's LAST
+    harvested chunk so the scatter has unique indices.  ``reply_idxs`` are
+    the workers receiving a catch-up reply this round (completed workers in
+    final-arrival order, then rejoining members): unlike the group fused
+    apply, mid-pass stragglers get NO reply -- their ``dw_tilde`` rows keep
+    accruing until their own pass completes.  With one chunk per pass the
+    returned values equal :func:`_server_apply_fused` on the same arrivals.
+    """
+    total = jnp.zeros_like(w_server)
+    for p in payloads:
+        total = total + p
+    w_server = w_server + gamma * total
+    dw_tilde = dw_tilde + gamma * total[None, :]
+    if snapshots:
+        alpha_applied = alpha_applied.at[snap_idxs].set(
+            jnp.stack(list(snapshots)))
+    replies = dw_tilde[reply_idxs]
+    reply_nnz = jnp.sum(replies != 0, axis=1)
+    reply_sq = jnp.sum(replies * replies, axis=1)
+    w_local = w_local.at[reply_idxs].add(replies)
+    dw_tilde = dw_tilde.at[reply_idxs].set(0.0)
+    return w_server, dw_tilde, w_local, alpha_applied, reply_nnz, reply_sq
 
 
 def _lag_reference(ref_buf_k, ref_len_k, xi):
@@ -494,6 +569,11 @@ class Protocol:
     """
 
     protocol_name = "abstract"
+    # True for protocols that honor ClusterModel.membership (elastic worker
+    # dropout/rejoin schedules).  Protocols that do not understand
+    # membership reject a non-empty schedule at construction rather than
+    # silently simulating a full-strength cluster.
+    supports_membership = False
 
     @classmethod
     def default_sigma_prime(cls, method: MethodConfig, K: int) -> float:
@@ -505,8 +585,31 @@ class Protocol:
         """
         return method.gamma * method.B
 
+    @classmethod
+    def coalesce_supported(cls, method: MethodConfig,
+                           cluster: ClusterModel) -> tuple[bool, str]:
+        """May runs of this protocol join a coalesced sweep batch
+        (:mod:`repro.serve`)?  Returns ``(ok, reason)``.
+
+        The base rule delegates to the executor's scan eligibility -- a run
+        the scan executor can express IS expressible as one sweep cell.
+        Protocols whose scan path is not the shared lockstep/lag cell
+        machinery (e.g. ``partial_work``'s per-chunk carries) override this
+        with an explicit refusal so the serve layer routes them to the solo
+        lane instead of silently mis-batching.
+        """
+        from repro.core import executor  # late import: executor imports us
+
+        return executor.scan_supported(method, cluster)
+
     def __init__(self, problem: objectives.Problem, method: MethodConfig,
                  cluster: ClusterModel, *, seed: int):
+        if cluster.membership and not self.supports_membership:
+            raise ValueError(
+                f"protocol {self.protocol_name!r} does not support elastic "
+                f"membership; ClusterModel.membership is non-empty. Use a "
+                f"protocol declaring supports_membership (e.g. "
+                f"'partial_work') or clear the membership schedule.")
         self.problem = problem
         self.method = method
         self.cluster = cluster
@@ -553,6 +656,19 @@ class GroupProtocol(Protocol):
     """Algorithms 1+2: straggler-agnostic B-of-K server with catch-up buffers."""
 
     full_sync_period: bool = True  # every T-th round is a K-barrier
+
+    @classmethod
+    def default_sigma_prime(cls, method: MethodConfig, K: int) -> float:
+        # The paper's rule: sigma' covers the B updates a round aggregates.
+        return method.gamma * method.B
+
+    @classmethod
+    def coalesce_supported(cls, method: MethodConfig,
+                           cluster: ClusterModel) -> tuple[bool, str]:
+        # Group runs coalesce exactly when the scan executor can express
+        # them as shared sweep cells (the base delegation, stated here so
+        # the registry-hooks rule records the decision per family).
+        return super().coalesce_supported(method, cluster)
 
     def __init__(self, problem, method, cluster, *, seed):
         super().__init__(problem, method, cluster, seed=seed)
@@ -808,6 +924,13 @@ class SyncProtocol(Protocol):
         # "Adding" aggregation over all K partitions (Ma et al. 2015).
         return method.gamma * K
 
+    @classmethod
+    def coalesce_supported(cls, method: MethodConfig,
+                           cluster: ClusterModel) -> tuple[bool, str]:
+        # Lockstep rounds are the sweep machinery's native shape; defer to
+        # the executor's scan eligibility for the delay-model fine print.
+        return super().coalesce_supported(method, cluster)
+
     def __init__(self, problem, method, cluster, *, seed):
         super().__init__(problem, method, cluster, seed=seed)
         dt = problem.X.dtype
@@ -1009,9 +1132,325 @@ class AdaptiveBProtocol(GroupProtocol):
                                   self._b_lo, self._b_hi))
 
 
-# ---------------------------------------------------------------------------
-# The engine loop.
-# ---------------------------------------------------------------------------
+@register_protocol("partial_work")
+class PartialWorkProtocol(GroupProtocol):
+    """Straggler-UTILIZING group rounds: harvest chunk-level partial work.
+
+    The paper's B-of-K server discards whatever stragglers computed after
+    the B-th arrival; Ozfatura et al. (arXiv:2004.04948, arXiv:1808.02240)
+    show that streaming chunk-level PARTIAL updates dominates discard-based
+    schemes exactly in high-delay-variance regimes.  Here each local pass of
+    ``H`` SDCA steps is split into ``MethodConfig.n_chunks`` chunks; the
+    worker compresses and uploads EVERY chunk as it finishes (each chunk
+    billed through the one compressor formula, ``wire_bytes``), and the
+    server's round deadline is the ``B``-th FULL arrival (a worker's last
+    chunk) -- or a fixed ``pw_quantum`` of simulated seconds when set.  The
+    server folds every chunk that arrived by the deadline into the catch-up
+    buffers, so a straggler at chunk 3 of 4 has contributed 3/4 of its round
+    instead of nothing.  Only COMPLETED workers are replied to and
+    relaunched; stragglers keep computing undisturbed (their ``dw_tilde``
+    rows accrue until their own pass completes).  With ``n_chunks=1`` the
+    discipline degrades bit-for-bit to ``group`` (pinned by tests).
+
+    Elasticity: this is the protocol family honoring
+    ``ClusterModel.membership`` (worker drop/rejoin schedules).  A dropping
+    worker's unsent chunks are rolled back to its last sent chunk (error
+    feedback keeps the mass accounted), its bytes stop accruing, and the
+    B-of-K deadline shrinks with the live membership (``b_eff = min(B,
+    pending full passes)``) so dropouts can never hang the barrier.  A
+    rejoining worker receives a dense catch-up reply and re-enters the
+    launch RNG stream at its rejoin round, deterministically.
+    """
+
+    supports_membership = True
+
+    @classmethod
+    def default_sigma_prime(cls, method: MethodConfig, K: int) -> float:
+        # The group family's gamma * B, by mass conservation: a round's
+        # deadline is the B-th FULL arrival, and a completing worker's
+        # earlier chunks were already harvested in PRIOR rounds, so the
+        # round folds B pass-equivalents of update mass in steady state --
+        # straggler chunks SUBSTITUTE for the completers' already-applied
+        # mass rather than adding to it.  Chunking redistributes when mass
+        # lands, not how much lands per apply.  min(B, K) is what the
+        # elastic ``_live_sigma`` rescaling needs: with L < B live workers
+        # the deadline shrinks to the L-th full arrival.
+        return method.gamma * min(method.B, K)
+
+    @classmethod
+    def coalesce_supported(cls, method: MethodConfig,
+                           cluster: ClusterModel) -> tuple[bool, str]:
+        return (False, "protocol 'partial_work' streams per-chunk arrivals "
+                       "(per-chunk scan carries); its runs are not "
+                       "expressible as shared lockstep/lag sweep cells")
+
+    def __init__(self, problem, method, cluster, *, seed):
+        if method.n_chunks < 1:
+            raise ValueError(f"n_chunks must be >= 1, got {method.n_chunks}")
+        if method.n_chunks > method.H:
+            raise ValueError(
+                f"n_chunks={method.n_chunks} exceeds H={method.H}: every "
+                f"chunk needs at least one local step")
+        if method.pw_quantum is not None and method.pw_quantum <= 0:
+            raise ValueError(
+                f"pw_quantum must be > 0 (simulated seconds per harvest "
+                f"tick), got {method.pw_quantum}")
+        super().__init__(problem, method, cluster, seed=seed)
+        self._chunk_steps = chunk_steps(method.H, method.n_chunks)
+        # Host mirror of the in-flight queue: seq -> (arrival, worker,
+        # final).  arrivals_needed computes pop counts from it, so the
+        # session's generic "pop N" loop never needs protocol-specific
+        # peeking.
+        self._pending: dict[int, tuple[float, int, bool]] = {}
+        # Rejoin schedule, time-ascending; popped as the clock passes each.
+        self._rejoins = sorted(
+            (r, k) for k, _, r in cluster.membership if r is not None)
+
+    # -- arrival rule ------------------------------------------------------
+
+    def initial_messages(self):
+        return self._launch_chunks(
+            [(k, 0.0) for k in range(self.K)
+             if self.cluster.live_at(k, 0.0)])
+
+    def arrivals_needed(self, round_index: int) -> int:
+        T = self.method.T
+        if self.full_sync_period and round_index % T == T - 1:
+            return len(self._pending)  # barrier: drain every in-flight chunk
+        if not self._pending:
+            return 0  # starved (all live workers dropped): see process_round
+        if self.method.pw_quantum is not None:
+            deadline = self.sim_time + self.method.pw_quantum
+            return sum(1 for a, _, _ in self._pending.values()
+                       if a <= deadline)
+        fulls = sorted((a, s) for s, (a, _, f) in self._pending.items() if f)
+        if not fulls:
+            return len(self._pending)  # only orphan chunks left: drain them
+        b_eff = min(self.method.B, len(fulls))  # deadline shrinks with
+        cut = fulls[b_eff - 1]                  # the live membership
+        return sum(1 for s, (a, _, _) in self._pending.items()
+                   if (a, s) <= cut)
+
+    # -- aggregation + reply rules -----------------------------------------
+
+    def process_round(self, round_index, arrived):
+        m = self.method
+        T = m.T
+        barrier = self.full_sync_period and round_index % T == T - 1
+        quantum = m.pw_quantum is not None and not barrier
+        for msg in arrived:
+            del self._pending[msg.seq]
+        if quantum:
+            server_time = self.sim_time + m.pw_quantum  # fixed harvest tick
+        elif arrived:
+            server_time = max(msg.arrival for msg in arrived)
+        elif self._rejoins:
+            # Starved: every live worker dropped mid-pass. Jump the clock to
+            # the next rejoin so elasticity can never hang the round loop.
+            server_time = max(self.sim_time, self._rejoins[0][0])
+        else:
+            return []  # permanently starved; remaining rounds are no-ops
+        completed = [msg.worker for msg in arrived if msg.final
+                     and self.cluster.live_at(msg.worker, server_time)]
+        rejoiners = [k for k in self._collect_rejoiners(server_time)
+                     if self.cluster.live_at(k, server_time)
+                     and k not in completed]
+        reply_to = completed + rejoiners
+        nnz_host = None
+        if arrived or reply_to:
+            last = {}  # worker -> LAST harvested chunk's dual snapshot
+            for msg in arrived:
+                last[msg.worker] = msg.alpha_snapshot
+            (self.w_server, self.dw_tilde, self.w_local, self.alpha_applied,
+             reply_nnz, reply_sq) = _server_apply_partial(
+                self.w_server, self.dw_tilde, self.w_local,
+                self.alpha_applied,
+                jnp.asarray(list(last.keys()), jnp.int32),
+                tuple(last.values()),
+                tuple(msg.payload for msg in arrived),
+                jnp.asarray(reply_to, jnp.int32), m.gamma)
+            self._last_reply_sq = reply_sq
+            if not self.dense and reply_to:
+                nnz_host = np.asarray(reply_nnz)
+        starts, billing = [], []
+        for j, k in enumerate(reply_to):
+            rbytes, down_time = self._reply_billing(j, k, nnz_host)
+            starts.append((k, server_time + down_time))
+            billing.append((rbytes, down_time))
+        self.sim_time = server_time
+        return self._launch_chunks(starts, pre_account=billing)
+
+    def _collect_rejoiners(self, upto: float) -> list[int]:
+        out = []
+        while self._rejoins and self._rejoins[0][0] <= upto:
+            out.append(self._rejoins.pop(0)[1])
+        return out
+
+    def _live_sigma(self) -> float:
+        """sigma' for the next launch wave: membership-scaled when elastic
+        (the default formula evaluated at the LIVE worker count), the run's
+        resolved sigma' otherwise."""
+        if self.method.sigma_prime is not None or not self.cluster.membership:
+            return self.sigma_p
+        live = max(1, sum(self.cluster.live_at(k, self.sim_time)
+                          for k in range(self.K)))
+        return self.default_sigma_prime(self.method, live)
+
+    # -- the fused chunked launch ------------------------------------------
+
+    def _launch_chunks(self, starts, pre_account=None):
+        """Launch chunked local passes for ``starts = [(worker, start), ...]``
+        as ONE fused dispatch, then account each SENT chunk host-side.
+
+        Per-chunk durations come from ``DelayModel.sample_chunks`` (one
+        chunk-major draw per wave) for ``vector_sampled`` models and from
+        per-(worker, chunk) scalar draws otherwise; with one chunk both
+        reduce to the group family's per-wave draw, bit-for-bit.  A chunk is
+        sent only if its compute finishes strictly before the worker's next
+        scheduled drop; a truncated pass rolls the worker's dual/residual
+        back to its last sent chunk (durable state), so dropped bytes stop
+        accruing and no update mass is silently lost.
+        """
+        if not starts:
+            return []
+        m = self.method
+        C = len(self._chunk_steps)
+        if self.delay.vector_sampled:
+            sampled = self.delay.sample_chunks(self._chunk_steps, self.rng)
+            durations = [[sampled[c][k] for c in range(C)]
+                         for k, _ in starts]
+        else:
+            durations = [[self.delay.compute_time(k, h, self.rng)
+                          for h in self._chunk_steps] for k, _ in starts]
+        finishes, n_sent = [], []
+        for j, (k, start) in enumerate(starts):
+            drop = self.cluster.next_drop_after(k, start)
+            fin, t = [], start
+            for c in range(C):
+                t = t + durations[j][c]
+                fin.append(t)
+            finishes.append(fin)
+            n_sent.append(sum(1 for t in fin if t < drop))
+        # Pre-capture rows for passes that will be FULLY truncated: the
+        # fused call donates alpha/residual, so their pre-launch values must
+        # be materialized first (rare -- only drop-before-first-chunk).
+        saved = {j: (self.alpha[k], self.residual[k])
+                 for j, (k, _) in enumerate(starts) if n_sent[j] == 0}
+        idxs = jnp.asarray([k for k, _ in starts], jnp.int32)
+        (self.key, self.alpha, self.residual, alpha_rows, sents,
+         resids) = _worker_chunk_rounds_fused(
+            self.key, self.w_local, self.alpha, self.residual,
+            self.problem.X, self.problem.y, self.norms_sq, idxs,
+            self.problem.lam, self.n, self._live_sigma(), m.gamma,
+            loss=self.problem.loss, chunk_steps=self._chunk_steps,
+            comp=self.comp)
+        out = []
+        for j, (k, start) in enumerate(starts):
+            if pre_account is not None:
+                rbytes, down_time = pre_account[j]
+                self.bytes_down += rbytes
+                self.comm_time += down_time
+            for c in range(n_sent[j]):
+                nbytes = self.up_bytes  # the one compressor formula, per chunk
+                up_time = self.delay.p2p_time(nbytes, k)
+                self.compute_time += durations[j][c]
+                self.comm_time += up_time
+                self.bytes_up += nbytes
+                self.seq += 1
+                msg = Message(finishes[j][c] + up_time, k, sents[j, c],
+                              alpha_rows[j, c], nbytes, self.seq,
+                              chunk=c, final=(c == C - 1))
+                self._pending[self.seq] = (msg.arrival, k, msg.final)
+                out.append(msg)
+            if n_sent[j] < C:
+                if n_sent[j] == 0:
+                    row_a, row_r = saved[j]
+                else:
+                    row_a = alpha_rows[j, n_sent[j] - 1]
+                    row_r = resids[j, n_sent[j] - 1]
+                self.alpha = self.alpha.at[k].set(row_a)
+                self.residual = self.residual.at[k].set(row_r)
+        return out
+
+
+def chunk_steps(H: int, n_chunks: int) -> tuple[int, ...]:
+    """Split ``H`` local steps into ``n_chunks`` near-equal chunk sizes
+    (earlier chunks take the remainder; sums to exactly ``H``)."""
+    base, rem = divmod(H, n_chunks)
+    return tuple(base + (1 if i < rem else 0) for i in range(n_chunks))
+
+
+@register_protocol("hierarchical_b")
+class HierarchicalBProtocol(GroupProtocol):
+    """Two-level rack-aware aggregation: per-rack B-of-k, then cross-rack.
+
+    Workers are split into ``MethodConfig.n_racks`` contiguous racks (worker
+    ``k`` belongs to rack ``k * n_racks // K``).  A round's deadline is the
+    first simulated instant at which EVERY rack has at least ``rack_b``
+    arrivals in flight past its top-of-rack link -- per-rack B-of-k on
+    per-rack links, then one cross-rack merge (the inherited arrival-order
+    catch-up aggregation; the merge is associative so the two levels fold
+    into one fused apply).  Pair with the ``bandwidth_coupled`` delay model
+    (``ClusterModel.straggler_workers`` = the slow rack's members) to model
+    a rack behind an oversubscribed uplink: the discipline then waits for
+    ``rack_b`` arrivals from the slow rack instead of letting the fast racks
+    outvote it -- per-rack representation at B-of-K cost.
+
+    The T-periodic full barrier is kept (Assumption 3's staleness bound is
+    rack-agnostic).  sigma' covers ``n_racks * rack_b`` aggregated passes.
+    """
+
+    @classmethod
+    def default_sigma_prime(cls, method: MethodConfig, K: int) -> float:
+        return method.gamma * max(1, method.n_racks * method.rack_b)
+
+    @classmethod
+    def coalesce_supported(cls, method: MethodConfig,
+                           cluster: ClusterModel) -> tuple[bool, str]:
+        return (False, "protocol 'hierarchical_b' pops rack-dependent "
+                       "arrival counts (host-adaptive control flow); its "
+                       "runs are not expressible as shared sweep cells")
+
+    def __init__(self, problem, method, cluster, *, seed):
+        K = problem.X.shape[0]
+        if not 1 <= method.n_racks <= K:
+            raise ValueError(
+                f"n_racks must be in [1, K={K}], got {method.n_racks}")
+        self._rack_of = [k * method.n_racks // K for k in range(K)]
+        rack_sizes = [self._rack_of.count(r) for r in range(method.n_racks)]
+        if not 1 <= method.rack_b <= min(rack_sizes):
+            raise ValueError(
+                f"rack_b must be in [1, min rack size={min(rack_sizes)}] "
+                f"(racks of {rack_sizes}), got {method.rack_b}")
+        super().__init__(problem, method, cluster, seed=seed)
+        # One in-flight message per worker at all times (the group-family
+        # relaunch invariant); recorded at launch so the arrival rule can
+        # count the per-rack prefix without peeking at the session's heap.
+        self._pending: dict[int, tuple[float, int, int]] = {}
+
+    def _observe_launch(self, k, start, arrival):
+        self._pending[self.seq] = (arrival, self.seq, k)
+
+    def arrivals_needed(self, round_index: int) -> int:
+        T = self.method.T
+        if self.full_sync_period and round_index % T == T - 1:
+            return self.K
+        need = [self.method.rack_b] * self.method.n_racks
+        outstanding = sum(need)
+        for count, (_, _, k) in enumerate(
+                sorted(self._pending.values()), start=1):
+            r = self._rack_of[k]
+            if need[r] > 0:
+                need[r] -= 1
+                outstanding -= 1
+                if outstanding == 0:
+                    return count
+        return len(self._pending)  # unreachable under the launch invariant
+
+    def process_round(self, round_index, arrived):
+        for msg in arrived:
+            del self._pending[msg.seq]
+        return super().process_round(round_index, arrived)
 
 
 def _materialize_records(snaps: list[_Snapshot], problem: objectives.Problem,

@@ -9,7 +9,7 @@ a single ``lax.scan`` over rounds.  This module is that second execution
 backend -- selected via ``Session(executor="scan")`` or automatically under
 ``executor="auto"`` (the default).
 
-Two scan paths:
+Three scan paths:
 
 * **Lockstep** (``sync`` / ``cocoa`` / ``cocoa_plus``): every round is a
   K-barrier with static byte accounting, so timing is fully host-computable.
@@ -32,10 +32,21 @@ Two scan paths:
   ``markov`` and jittered ``constant`` cannot, and ``executor="auto"`` falls
   back to the event queue for them.
 
+* **partial_work** (``partial_work``): the lag machinery generalized to
+  per-CHUNK carries -- every in-flight chunk's payload/arrival/seq lives in
+  the scan state, the round deadline is the B-th *full* arrival (a lex sort
+  over final-chunk keys), and harvested chunks fold in via a flattened
+  ``K x n_chunks`` arrival-order sort.  Eligible when the delay model can
+  pre-sample a (round, chunk, worker) stream
+  (:meth:`repro.core.delays.DelayModel.sample_chunk_stream`), there is no
+  elastic membership schedule, and no ``pw_quantum`` harvest tick (both are
+  host-adaptive and keep the event queue).
+
 Protocols with genuinely host-adaptive control flow (``group``'s
 interleaved accounting pins, ``async``, ``adaptive_b``'s observed-latency
-feedback) keep the event queue -- they still benefit from the engine's fused
-multi-arrival server apply and one-dispatch group relaunches.
+feedback, ``hierarchical_b``'s rack-dependent pop counts) keep the event
+queue -- they still benefit from the engine's fused multi-arrival server
+apply and one-dispatch group relaunches.
 
 ``target_gap`` early stop is scan-capable for lockstep runs: the duality-gap
 certificate moves in-graph and a ``done`` flag in the carry freezes the
@@ -70,7 +81,12 @@ from repro.core.acpd import MethodConfig, RunResult
 from repro.core.simulate import ClusterModel
 
 LOCKSTEP_PROTOCOLS = ("sync", "cocoa", "cocoa_plus")
-SCAN_PROTOCOLS = LOCKSTEP_PROTOCOLS + ("lag",)
+# Protocols whose traced run bodies batch into shared sweep cells
+# (repro.api.sweep / the serve coalescer): one computation, many variants.
+SWEEP_PROTOCOLS = LOCKSTEP_PROTOCOLS + ("lag",)
+# Protocols with a single-run scan backend.  partial_work scans solo (its
+# per-chunk carries are per-run state) but does NOT batch into sweep cells.
+SCAN_PROTOCOLS = SWEEP_PROTOCOLS + ("partial_work",)
 
 # target_gap runs on the scan backend compute-and-mask: every budgeted round
 # executes even after the target is hit, so for huge budgets the masked tail
@@ -87,6 +103,7 @@ GAP_SCAN_AUTO_MAX_ROUNDS = 4096
 STATS = {"lockstep_calls": 0, "lockstep_traces": 0,
          "lockstep_gap_calls": 0, "lockstep_gap_traces": 0,
          "lag_calls": 0, "lag_traces": 0,
+         "partial_calls": 0, "partial_traces": 0,
          "sweep_calls": 0, "sweep_traces": 0,
          "sweep_lag_calls": 0, "sweep_lag_traces": 0}
 
@@ -138,6 +155,20 @@ def scan_supported(method: MethodConfig, cluster: ClusterModel, *,
             f"delay model {cluster.delay_model!r} draws per-launch host "
             f"randomness in arrival order, which cannot be pre-sampled "
             f"into a (round, worker) stream")
+    if method.protocol == "partial_work":
+        if cluster.membership:
+            return False, ("elastic membership drop/rejoin schedules are "
+                           "host-adaptive control flow (event loop only)")
+        if method.pw_quantum is not None:
+            return False, ("pw_quantum harvest ticks pop clock-dependent "
+                           "arrival counts (event loop only)")
+        model = cluster.make_delay()
+        if model.vector_sampled or model.deterministic:
+            return True, ""
+        return False, (
+            f"delay model {cluster.delay_model!r} draws per-launch host "
+            f"randomness in arrival order, which cannot be pre-sampled "
+            f"into a (round, chunk, worker) stream")
     return False, (
         f"protocol {method.protocol!r} has host-adaptive control flow "
         f"(scan-capable protocols: {SCAN_PROTOCOLS})")
@@ -155,6 +186,13 @@ def coalesce_supported(method: MethodConfig, cluster: ClusterModel, *,
     would either truncate or pad every cohort cell), even though a solo
     lockstep ``target_gap`` run can scan.  Ineligible requests are still
     servable, one :class:`repro.api.Session` per request (the solo lane).
+
+    Per-protocol eligibility is the registry's
+    :meth:`repro.core.engine.Protocol.coalesce_supported` hook (the
+    ``registry-hooks`` analyzer rule requires it on new entries), so a new
+    protocol states its own batching story instead of inheriting a silent
+    default here -- ``partial_work`` scans solo but declines coalescing (its
+    per-chunk carries are per-run state, not shared sweep cells).
     """
     if target_gap is not None:
         return False, ("target_gap early stop makes the round count "
@@ -163,7 +201,8 @@ def coalesce_supported(method: MethodConfig, cluster: ClusterModel, *,
     if time_budget is not None:
         return False, ("time_budget early stop needs the per-round event "
                        "loop -- served per-request instead")
-    return scan_supported(method, cluster)
+    return engine.get_protocol(method.protocol).coalesce_supported(
+        method, cluster)
 
 
 # ---------------------------------------------------------------------------
@@ -275,6 +314,10 @@ def run_scan(problem: objectives.Problem, method: MethodConfig,
     if method.protocol == "lag":
         return _run_lag(problem, method, cluster, num_outer=num_outer,
                         seed=seed, eval_every=eval_every, norms_sq=norms_sq)
+    if method.protocol == "partial_work":
+        return _run_partial(problem, method, cluster, num_outer=num_outer,
+                            seed=seed, eval_every=eval_every,
+                            norms_sq=norms_sq)
     raise ValueError(f"protocol {method.protocol!r} is not scan-capable "
                      f"(supported: {SCAN_PROTOCOLS})")
 
@@ -843,6 +886,329 @@ def _run_lag(problem, method, cluster, *, num_outer, seed, eval_every,
 
     ws, alpha_applied_rows, sim, bu, bd, ct, cm = ys
     rounds = lag_accounts(needs, T, sim, bu, bd, ct, cm)
+    evals = _eval_indices(R, eval_every)
+    idx = jnp.asarray(evals, jnp.int32)
+    return ScanRun(method, rounds, evals, ws[idx], alpha_applied_rows[idx],
+                   state["w_server"], state["alpha"],
+                   alpha_applied=state["alpha_applied"])
+
+
+# ---------------------------------------------------------------------------
+# partial_work path: the per-CHUNK B-of-K event queue in-graph.
+# ---------------------------------------------------------------------------
+
+
+def partial_run_traced(key, X, y, norms_sq, lam, n, sigma_p, gamma, durations,
+                       needs, up_bytes, latency, bandwidth, link_factors, *,
+                       loss, chunk_steps, comp, length, dense_reply_bytes):
+    """The whole partial_work run as a traced computation.
+
+    The lag scan's per-worker arrival/seq carries generalize to per-CHUNK
+    ``(K, C)`` state: every in-flight chunk's payload, dual snapshot, arrival
+    time and sequence number live in the carry, alongside a ``harvested``
+    mask marking chunks the server already folded in.  Each round:
+
+    * the round deadline is the ``need``-th FULL arrival -- a lexicographic
+      ``lax.sort`` over the final chunks' ``(arrival, seq)`` keys (without an
+      elastic membership schedule every worker always has its final chunk in
+      flight, so the per-round pop counts are the host-computable
+      ``lag_needs`` stream and scan eligibility holds);
+    * every un-harvested chunk whose key is lex-<= the deadline key is
+      aggregated, in global arrival order (a flattened ``K*C`` lex sort
+      driving a where-masked ``fori_loop``, so the float summation order is
+      exactly the event heap's pop order -- masked-out entries select the old
+      accumulator rather than adding zeros, keeping the op stream identical);
+    * only the ``need`` COMPLETED workers get catch-up replies and relaunch
+      (the event path's ``_server_apply_partial`` + ``_launch_chunks`` op
+      sequence: per rank, reply billing then per-chunk compute/up billing,
+      one PRNG split per chunk, j-major chunk-minor).
+
+    Must be traced under ``enable_x64`` like the lag path; model math stays
+    float32, so the trajectory is bit-identical to the event executor's
+    (pinned by tests/test_partial_work.py).
+    """
+    K, n_k, d = X.shape
+    dt = X.dtype
+    f64 = jnp.float64
+    i64 = jnp.int64
+    C = len(chunk_steps)
+    KC = K * C
+    iota = jnp.arange(K, dtype=i64)
+    kiota = jnp.arange(KC, dtype=i64)
+
+    def launch(args, *, initial):
+        """Rank-scan relaunching whole chunked passes for the first ``need``
+        ranks of ``order`` (the completed workers, final-arrival order)."""
+        (key, alpha, residual, payload, snaps, arrival, seq, harvested,
+         seq_ctr, bytes_up, bytes_down, compute_t, comm_t, w_local, need,
+         order, starts, reply_bytes, down_times, dur_wave) = args
+
+        def do_launch(carry, xs):
+            (key, alpha, residual, payload, snaps, arrival, seq, harvested,
+             compute_t, comm_t, bytes_up, bytes_down) = carry
+            j, k, start, rbytes, down_t = xs
+            # Host accounting replica: reply billing first, then per chunk
+            # compute/up billing (the event loop's float accumulation order).
+            bytes_down = bytes_down + rbytes
+            comm_t = comm_t + down_t
+            up_t = latency + up_bytes * link_factors[k] / bandwidth
+            alpha_k, res_k = alpha[k], residual[k]
+            t = start
+            pays, snps, arrs, seqs = [], [], [], []
+            for c, h in enumerate(chunk_steps):
+                key, alpha_k, res_k, _, sent = engine._local_round(
+                    key, w_local, alpha_k, res_k, X[k], y[k], norms_sq[k],
+                    k, lam, n, sigma_p, gamma, loss=loss, num_steps=h,
+                    comp=comp)
+                dur = dur_wave[c, k]
+                compute_t = compute_t + dur
+                comm_t = comm_t + up_t
+                bytes_up = bytes_up + up_bytes
+                t = t + dur
+                pays.append(sent)
+                snps.append(alpha_k)
+                arrs.append(t + up_t)
+                seqs.append(seq_ctr + j * C + c + 1)
+            alpha = alpha.at[k].set(alpha_k)
+            residual = residual.at[k].set(res_k)
+            payload = payload.at[k].set(jnp.stack(pays))
+            snaps = snaps.at[k].set(jnp.stack(snps))
+            arrival = arrival.at[k].set(jnp.stack(arrs))
+            seq = seq.at[k].set(jnp.stack(seqs))
+            harvested = harvested.at[k].set(jnp.zeros((C,), bool))
+            return (key, alpha, residual, payload, snaps, arrival, seq,
+                    harvested, compute_t, comm_t, bytes_up, bytes_down), None
+
+        def no_op(carry, xs):
+            return carry, None
+
+        def rank_body(carry, xs):
+            return jax.lax.cond(xs[0] < need, do_launch, no_op, carry, xs)
+
+        init = (key, alpha, residual, payload, snaps, arrival, seq,
+                harvested, compute_t, comm_t, bytes_up, bytes_down)
+        if initial:
+            # No ambiguity on the first launch: every worker, worker order.
+            out, _ = jax.lax.scan(do_launch, init,
+                                  (iota, order, starts, reply_bytes,
+                                   down_times))
+        else:
+            out, _ = jax.lax.scan(rank_body, init,
+                                  (iota, order, starts, reply_bytes,
+                                   down_times))
+        (key, alpha, residual, payload, snaps, arrival, seq, harvested,
+         compute_t, comm_t, bytes_up, bytes_down) = out
+        return (key, alpha, residual, payload, snaps, arrival, seq,
+                harvested, seq_ctr + need * C, bytes_up, bytes_down,
+                compute_t, comm_t)
+
+    # --- initial state + the t=0 launch wave ------------------------------
+    zero64 = jnp.zeros((), f64)
+    state = dict(
+        key=key,
+        w_server=jnp.zeros((d,), dt),
+        dw_tilde=jnp.zeros((K, d), dt),
+        w_local=jnp.zeros((K, d), dt),
+        alpha=jnp.zeros((K, n_k), dt),
+        alpha_applied=jnp.zeros((K, n_k), dt),
+        residual=jnp.zeros((K, d), dt),
+        payload=jnp.zeros((K, C, d), dt),
+        snaps=jnp.zeros((K, C, n_k), dt),
+        arrival=jnp.zeros((K, C), f64),
+        seq=jnp.zeros((K, C), i64),
+        harvested=jnp.zeros((K, C), bool),
+        seq_ctr=jnp.zeros((), i64),
+        bytes_up=jnp.zeros((), i64),
+        bytes_down=jnp.zeros((), i64),
+        compute_t=zero64,
+        comm_t=zero64,
+        sim_time=zero64,
+    )
+    (state["key"], state["alpha"], state["residual"], state["payload"],
+     state["snaps"], state["arrival"], state["seq"], state["harvested"],
+     state["seq_ctr"], state["bytes_up"], state["bytes_down"],
+     state["compute_t"], state["comm_t"]) = launch(
+        (state["key"], state["alpha"], state["residual"], state["payload"],
+         state["snaps"], state["arrival"], state["seq"], state["harvested"],
+         state["seq_ctr"], state["bytes_up"], state["bytes_down"],
+         state["compute_t"], state["comm_t"], state["w_local"],
+         jnp.asarray(K, i64), iota, jnp.zeros((K,), f64),
+         jnp.zeros((K,), i64), jnp.zeros((K,), f64), durations[0]),
+        initial=True)
+
+    # --- the round loop ---------------------------------------------------
+
+    def round_step(carry, xs):
+        s = dict(carry)
+        need, dur_wave = xs
+        need = need.astype(i64)
+        # Deadline: the need-th FULL arrival, lex (arrival, seq) -- the host
+        # heap's order over final chunks (always in flight, see above).
+        arr_fin = s["arrival"][:, C - 1]
+        seq_fin = s["seq"][:, C - 1]
+        _, _, perm = jax.lax.sort((arr_fin, seq_fin, iota), num_keys=2)
+        sorted_arr = arr_fin[perm]
+        sorted_seq = seq_fin[perm]
+        server_time = sorted_arr[need - 1]
+        cut_s = sorted_seq[need - 1]
+        # Harvest: every pending chunk at or before the deadline key.
+        take = ~s["harvested"] & (
+            (s["arrival"] < server_time)
+            | ((s["arrival"] == server_time) & (s["seq"] <= cut_s)))
+
+        # Aggregation in global arrival order over the harvested chunks:
+        # flattened lex sort, where-masked accumulation (event pop order).
+        _, _, fperm = jax.lax.sort(
+            (s["arrival"].reshape(KC), s["seq"].reshape(KC), kiota),
+            num_keys=2)
+        take_f = take.reshape(KC)
+        pay_f = s["payload"].reshape(KC, d)
+
+        def agg(j, tot):
+            p = fperm[j]
+            return jnp.where(take_f[p], tot + pay_f[p], tot)
+
+        total = jax.lax.fori_loop(0, KC, agg, jnp.zeros((d,), dt))
+        w_server = s["w_server"] + gamma * total
+        dw_tilde = s["dw_tilde"] + gamma * total[None, :]
+
+        # alpha_applied: each harvesting worker's LAST harvested chunk.
+        any_k = jnp.any(take, axis=1)
+        last = (C - 1) - jnp.argmax(take[:, ::-1], axis=1)
+        snap_last = s["snaps"][jnp.arange(K), last]
+        alpha_applied = jnp.where(any_k[:, None], snap_last,
+                                  s["alpha_applied"])
+
+        # Catch-up replies to the `need` COMPLETED workers only (the event
+        # path's _server_apply_partial op order: replies read dw_tilde AFTER
+        # this round's harvest landed).
+        sel = iota < need
+        replies = dw_tilde[perm]
+        reply_nnz = jnp.sum(replies != 0, axis=1)
+        w_rows = s["w_local"][perm]
+        w_local = s["w_local"].at[perm].set(
+            jnp.where(sel[:, None], w_rows + replies, w_rows))
+        dw_tilde = dw_tilde.at[perm].set(
+            jnp.where(sel[:, None], jnp.zeros_like(replies), dw_tilde[perm]))
+
+        # Reply billing per rank (same arithmetic as DelayModel.p2p_time).
+        if dense_reply_bytes:
+            reply_bytes = jnp.full((K,), dense_reply_bytes, i64)
+        else:
+            reply_bytes = (reply_nnz * 8).astype(i64)
+        factors = link_factors[perm]
+        down_times = latency + reply_bytes * factors / bandwidth
+        starts = server_time + down_times
+
+        harvested = s["harvested"] | take
+        (key, alpha, residual, payload, snaps, arrival, seq, harvested,
+         seq_ctr, bytes_up, bytes_down, compute_t, comm_t) = launch(
+            (s["key"], s["alpha"], s["residual"], s["payload"], s["snaps"],
+             s["arrival"], s["seq"], harvested, s["seq_ctr"], s["bytes_up"],
+             s["bytes_down"], s["compute_t"], s["comm_t"], w_local, need,
+             perm, starts, reply_bytes, down_times, dur_wave),
+            initial=False)
+
+        s.update(key=key, w_server=w_server, dw_tilde=dw_tilde,
+                 w_local=w_local, alpha=alpha, alpha_applied=alpha_applied,
+                 residual=residual, payload=payload, snaps=snaps,
+                 arrival=arrival, seq=seq, harvested=harvested,
+                 seq_ctr=seq_ctr, bytes_up=bytes_up, bytes_down=bytes_down,
+                 compute_t=compute_t, comm_t=comm_t, sim_time=server_time)
+        ys = (w_server, alpha_applied, server_time, bytes_up, bytes_down,
+              compute_t, comm_t, jnp.sum(take).astype(i64))
+        return s, ys
+
+    state, ys = jax.lax.scan(round_step, state,
+                             (needs, durations[1:]), length=length)
+    return state, ys
+
+
+@partial(jax.jit,
+         static_argnames=("loss", "chunk_steps", "comp", "length",
+                          "dense_reply_bytes"))
+def _partial_scan(key, X, y, norms_sq, lam, n, sigma_p, gamma, durations,
+                  needs, up_bytes, latency, bandwidth, link_factors, *, loss,
+                  chunk_steps, comp, length, dense_reply_bytes):
+    """One partial_work run = one dispatch (jit over
+    :func:`partial_run_traced`)."""
+    STATS["partial_traces"] += 1  # trace-time side effect, not per call
+    return partial_run_traced(key, X, y, norms_sq, lam, n, sigma_p, gamma,
+                              durations, needs, up_bytes, latency, bandwidth,
+                              link_factors, loss=loss,
+                              chunk_steps=chunk_steps, comp=comp,
+                              length=length,
+                              dense_reply_bytes=dense_reply_bytes)
+
+
+def partial_durations(method: MethodConfig, cluster: ClusterModel, *,
+                      num_rounds: int, seed: int):
+    """Pre-sample a partial_work run's per-chunk compute stream; returns
+    ``(durations (num_rounds+1, C, K), delay)``.
+
+    Row 0 feeds the t=0 launch wave, row 1+r feeds round r -- exactly the
+    event executor's one-``sample_chunks``-per-``_launch_chunks``
+    consumption (without a membership schedule every round launches, so the
+    wave count is static).  Raises when the delay model cannot pre-sample
+    (callers normally check :func:`scan_supported` first).
+    """
+    steps = engine.chunk_steps(method.H, method.n_chunks)
+    delay = cluster.make_delay()
+    rng = np.random.default_rng(seed)
+    durations = delay.sample_chunk_stream(num_rounds + 1, steps, rng)
+    if durations is None:
+        raise ValueError(
+            f"delay model {cluster.delay_model!r} cannot pre-sample a "
+            f"(round, chunk, worker) stream; use executor='event'")
+    return durations, delay
+
+
+def _run_partial(problem, method, cluster, *, num_outer, seed, eval_every,
+                 norms_sq):
+    from jax.experimental import enable_x64
+
+    K, n_k, d = problem.X.shape
+    T = method.T
+    R = num_outer * T
+    if R == 0:
+        dt = problem.X.dtype
+        return ScanRun(method, [], [], None, None, jnp.zeros((d,), dt),
+                       jnp.zeros((K, n_k), dt),
+                       alpha_applied=jnp.zeros((K, n_k), dt))
+    durations, delay = partial_durations(method, cluster, num_rounds=R,
+                                         seed=seed)
+    # Relaunch counts are the lag stream: the round deadline is the B-th
+    # full arrival (K on the T-periodic barrier) and, membership-free, the
+    # completed-worker count IS the deadline rank.
+    needs = lag_needs(method, K, R)
+    comp = compress_lib.for_method(method, d)
+    dense = isinstance(comp, compress_lib.Dense)
+    up_bytes = comp.wire_bytes(d)
+    sigma_p = method.resolved_sigma_prime(K)
+
+    STATS["partial_calls"] += 1
+    with enable_x64():
+        state, ys = _partial_scan(
+            jax.random.key(seed), problem.X, problem.y, norms_sq,
+            jnp.float32(problem.lam), jnp.int32(K * n_k),
+            jnp.float32(sigma_p), jnp.float32(method.gamma),
+            jnp.asarray(durations, jnp.float64),
+            jnp.asarray(needs, jnp.int64),
+            jnp.asarray(up_bytes, jnp.int64),
+            jnp.asarray(cluster.latency, jnp.float64),
+            jnp.asarray(cluster.bandwidth, jnp.float64),
+            jnp.asarray(delay.link_factors(), jnp.float64),
+            loss=problem.loss,
+            chunk_steps=engine.chunk_steps(method.H, method.n_chunks),
+            comp=comp, length=R, dense_reply_bytes=d * 4 if dense else 0)
+
+    ws, alpha_applied_rows, sim, bu, bd, ct, cm, harv = ys
+    sim, ct, cm = np.asarray(sim), np.asarray(ct), np.asarray(cm)
+    bu, bd, harv = np.asarray(bu), np.asarray(bd), np.asarray(harv)
+    rounds = [RoundAccount(int(harv[r]), r % T == T - 1, float(sim[r]),
+                           int(bu[r]), int(bd[r]), float(ct[r]),
+                           float(cm[r]))
+              for r in range(R)]
     evals = _eval_indices(R, eval_every)
     idx = jnp.asarray(evals, jnp.int32)
     return ScanRun(method, rounds, evals, ws[idx], alpha_applied_rows[idx],

@@ -49,6 +49,13 @@ class ClusterModel:
     bandwidth: float = 1.25e8  # bytes/sec (~1 Gb Ethernet, t2.medium-ish)
     delay_model: str = "constant"  # repro.core.delays registry entry
     delay_params: tuple = ()  # model kwargs as (name, value) pairs (or a dict)
+    # Elastic membership schedule: ``(worker, drop_time, rejoin_time)``
+    # triples in simulated seconds (``rejoin_time=None`` = never rejoins).
+    # A dropped worker is masked out of aggregation and stops accruing
+    # bytes/compute until its rejoin.  Only protocols declaring
+    # ``supports_membership`` accept a non-empty schedule (Protocol.__init__
+    # rejects it loudly otherwise).
+    membership: tuple = ()
 
     def __post_init__(self):
         params = self.delay_params
@@ -57,6 +64,13 @@ class ClusterModel:
         object.__setattr__(
             self, "delay_params",
             tuple(sorted((str(k), v) for k, v in params)))
+        norm = []
+        for entry in self.membership:
+            k, drop, rejoin = entry
+            norm.append((int(k), float(drop),
+                         None if rejoin is None else float(rejoin)))
+        object.__setattr__(self, "membership", tuple(sorted(
+            norm, key=lambda e: (e[1], e[0]))))
 
     def sigmas(self) -> np.ndarray:
         s = np.ones(self.num_workers)
@@ -64,6 +78,31 @@ class ClusterModel:
             if 0 <= k < self.num_workers:
                 s[k] = self.straggler_sigma
         return s
+
+    def live_at(self, k: int, t: float) -> bool:
+        """Is worker ``k`` a cluster member at simulated time ``t``?
+
+        A worker is dead during ``[drop, rejoin)`` of any of its membership
+        entries (``rejoin=None`` = forever).
+        """
+        for w, drop, rejoin in self.membership:
+            if w == k and drop <= t and (rejoin is None or t < rejoin):
+                return False
+        return True
+
+    def next_drop_after(self, k: int, t: float) -> float:
+        """The first drop time of worker ``k`` strictly after ``t``
+        (``inf`` when it never drops again)."""
+        drops = [drop for w, drop, _ in self.membership
+                 if w == k and drop > t]
+        return min(drops) if drops else math.inf
+
+    def next_rejoin_after(self, t: float) -> float:
+        """The earliest rejoin time strictly after ``t`` across all workers
+        (``inf`` if none) -- the starvation horizon for elastic protocols."""
+        rejoins = [r for _, _, r in self.membership
+                   if r is not None and r > t]
+        return min(rejoins) if rejoins else math.inf
 
     def make_delay(self):
         """A fresh :class:`repro.core.delays.DelayModel` for one run."""

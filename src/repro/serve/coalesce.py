@@ -9,12 +9,22 @@ freely:
 ===================  =====================================================
 shared (batch key)   problem entry + params, protocol family statics
                      (H, T, B, rho, compressor, local solver, lag window,
-                     lag xi), ``num_outer``, eval cadence, batch mode,
+                     lag xi, chunking: n_chunks / pw_quantum / n_racks /
+                     rack_b), ``num_outer``, eval cadence, batch mode,
                      resolved shard plan
 per cell (free)      ``cluster`` (the WHOLE delay axis: model, params,
-                     latency, bandwidth, stragglers), ``seed``, ``gamma``,
-                     ``sigma_prime``
+                     latency, bandwidth, stragglers, membership), ``seed``,
+                     ``gamma``, ``sigma_prime``
 ===================  =====================================================
+
+WHETHER a request may coalesce at all is the protocol registry's own call:
+the service's admission gate (``executor.coalesce_supported``) delegates to
+:meth:`repro.core.engine.Protocol.coalesce_supported`, so e.g.
+``partial_work`` (per-chunk scan carries) and ``hierarchical_b``
+(rack-dependent pop counts) decline batching and ride the solo lane -- one
+:class:`repro.api.Session` per request -- while still being admitted.  An
+elastic ``membership`` schedule forces the event loop, which only the solo
+lane runs.
 
 The per-cell column is what makes coalescing pay off: lockstep timing is
 host-side accounting and the lag executor consumes per-cell delay streams as

@@ -14,7 +14,6 @@ Usage in test modules::
 
 from __future__ import annotations
 
-import functools
 import itertools
 
 try:  # pragma: no cover - exercised implicitly by which branch imports
@@ -71,16 +70,37 @@ except ImportError:
 
     st = _Strategies()  # type: ignore[assignment]
 
-    def given(*strategies):  # type: ignore[misc]
+    def given(*strategies, **kw_strategies):  # type: ignore[misc]
+        # The shim's contract: a property decorated with @given is ALWAYS
+        # exercised -- at least one deterministic example -- or the
+        # decoration fails loudly.  (An earlier version accepted only
+        # positional strategies; keyword-strategy tests then swept zero
+        # columns and every case silently passed without running.)
+        if not strategies and not kw_strategies:
+            raise TypeError("given() requires at least one strategy")
+        for s in itertools.chain(strategies, kw_strategies.values()):
+            if not hasattr(s, "examples"):
+                raise TypeError(
+                    f"unsupported strategy {s!r}: the fallback shim only "
+                    f"implements st.integers / st.floats / st.sampled_from; "
+                    f"install hypothesis for the full strategy language")
+
         def decorate(fn):
             # No functools.wraps: pytest must see a ZERO-arg signature, or it
             # would try to resolve the property arguments as fixtures.
             def wrapper():
-                n = getattr(wrapper, "_compat_max_examples", _DEFAULT_MAX_EXAMPLES)
+                n = max(1, getattr(wrapper, "_compat_max_examples",
+                                   _DEFAULT_MAX_EXAMPLES))
                 rng = np.random.default_rng(0)
-                columns = [s.examples(rng, n) for s in strategies]
-                for case in zip(*columns):
-                    fn(*case)
+                pos_cols = [s.examples(rng, n) for s in strategies]
+                names = list(kw_strategies)
+                kw_cols = [kw_strategies[k].examples(rng, n) for k in names]
+                ran = 0
+                for case in zip(*(pos_cols + kw_cols)):
+                    fn(*case[:len(pos_cols)],
+                       **dict(zip(names, case[len(pos_cols):])))
+                    ran += 1
+                assert ran >= 1, "fallback @given swept zero examples"
 
             wrapper.__name__ = fn.__name__
             wrapper.__doc__ = fn.__doc__
@@ -90,7 +110,7 @@ except ImportError:
 
     def settings(*, max_examples: int = _DEFAULT_MAX_EXAMPLES, **_ignored):  # type: ignore[misc]
         def decorate(fn):
-            fn._compat_max_examples = max_examples
+            fn._compat_max_examples = max(1, max_examples)
             return fn
 
         return decorate

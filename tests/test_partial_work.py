@@ -1,0 +1,288 @@
+"""partial_work chunk streaming + elastic membership: unit pins.
+
+The protocol-wide contracts (clock monotonicity, byte formulas, scan parity
+across the registry) live in ``test_protocol_invariants.py``; this module
+pins the partial_work-specific behaviors:
+
+* ``n_chunks=1`` degrades BIT-FOR-BIT to the ``group`` protocol it extends;
+* chunk conservation under ``constant`` delays: every billed chunk is
+  harvested exactly once (the final T-barrier drains the queue), so
+  ``sum(arrivals) * wire_bytes == bytes_up`` -- the closed-form total;
+* ``pw_quantum`` harvest ticks advance the server clock by exactly the
+  quantum between non-barrier rounds;
+* elasticity: a dropout can never hang the B-of-K barrier (including the
+  whole-cluster dropout worst case), a rejoin re-enters the RNG stream
+  deterministically (same spec + seed => identical trajectory), and a
+  dropped worker's bytes stop accruing;
+* routing: membership / pw_quantum force the event loop, partial_work rides
+  the serve layer's solo lane, and non-supporting protocols reject a
+  membership schedule loudly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.api.problems import ProblemSpec
+from repro.api.spec import ExperimentSpec, MethodEntry
+from repro.api import sweep as sweep_lib
+from repro.core import baselines
+from repro.core import compress as compress_lib
+from repro.core import engine
+from repro.core import executor as executor_lib
+from repro.core.simulate import ClusterModel
+
+K, D, H, T = 4, 48, 8, 4
+
+
+def _problem():
+    return ProblemSpec("linear_synthetic",
+                       {"num_workers": K, "n_per_worker": 24, "d": D,
+                        "nnz_per_row": 6, "seed": 3, "lam": 1e-2,
+                        "loss": "ridge"})
+
+
+def _cluster(delay="constant", params=(), membership=()):
+    return ClusterModel(num_workers=K, straggler_sigma=3.0,
+                        delay_model=delay, delay_params=tuple(params),
+                        membership=tuple(membership))
+
+
+def _pw(n_chunks=2, pw_quantum=None, rho_d=8):
+    return baselines.acpd_partial_work(K, D, B=2, T=T, rho_d=rho_d, H=H,
+                                       n_chunks=n_chunks,
+                                       pw_quantum=pw_quantum)
+
+
+def _spec(cfg, cluster, *, num_outer=2, seed=0, executor="auto"):
+    return ExperimentSpec(name=f"pw-{cfg.name}", problem=_problem(),
+                          cluster=cluster,
+                          methods=(MethodEntry(cfg, num_outer),),
+                          eval_every=num_outer * T, seed=seed,
+                          executor=executor).validate()
+
+
+def _run(spec):
+    """Drain one session; returns (session, RoundEvents, SyncEvent iters)."""
+    session = api.Experiment(spec).session(spec.methods[0])
+    rounds, syncs = [], set()
+    for ev in session.events():
+        if isinstance(ev, api.RoundEvent):
+            rounds.append(ev)
+        elif isinstance(ev, api.SyncEvent):
+            syncs.add(ev.iteration)
+    return session, rounds, syncs
+
+
+def _assert_identical(a, b):
+    assert len(a.records) == len(b.records)
+    for ra, rb in zip(a.records, b.records):
+        for f in dataclasses.fields(ra):
+            va, vb = getattr(ra, f.name), getattr(rb, f.name)
+            assert va == vb, (f.name, va, vb)
+    assert np.array_equal(np.asarray(a.w), np.asarray(b.w))
+    assert np.array_equal(np.asarray(a.alpha), np.asarray(b.alpha))
+
+
+# ---------------------------------------------------------------------------
+# Chunked arrivals.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("delay,params", [
+    ("constant", ()),
+    ("shifted_exponential", (("tail_mean", 0.8),)),
+    ("markov", (("p_slow", 0.2), ("p_recover", 0.5), ("slow_factor", 4.0))),
+])
+def test_one_chunk_degrades_to_group_bitwise(delay, params):
+    """n_chunks=1 is the group protocol, bit-for-bit: same records, same
+    final arrays, same per-round arrivals/bytes, under every delay family
+    (vector-sampled, stateful, deterministic)."""
+    group_cfg = baselines.acpd(K, D, B=2, T=T, rho_d=8, H=H)
+    pw_cfg = dataclasses.replace(_pw(n_chunks=1), rho=group_cfg.rho)
+    runs, rounds = {}, {}
+    for name, cfg in (("group", group_cfg), ("pw", pw_cfg)):
+        spec = _spec(cfg, _cluster(delay, params), executor="event")
+        session, revs, _ = _run(spec)
+        runs[name], rounds[name] = session.result(), revs
+    _assert_identical(runs["group"], runs["pw"])
+    for eg, ep in zip(rounds["group"], rounds["pw"]):
+        assert (eg.arrivals, eg.bytes_up, eg.bytes_down, eg.sim_time) == \
+               (ep.arrivals, ep.bytes_up, ep.bytes_down, ep.sim_time)
+
+
+@pytest.mark.parametrize("n_chunks", [2, 4])
+def test_constant_delay_chunk_conservation(n_chunks):
+    """Closed-form harvest total under constant delays: every billed chunk
+    is harvested exactly once, except the final barrier's relaunch wave.
+    The run ends on a T-barrier, which drains every in-flight chunk (so all
+    K workers complete) and then relaunches all K chunked passes; those
+    K * n_chunks chunks are the ONLY launches never harvested.  Hence
+    ``(sum(arrivals) + K * n_chunks) * wire == bytes_up``, exactly.
+    Constant delays are RNG-free, so the arrival sequence is
+    seed-independent."""
+    cfg = _pw(n_chunks=n_chunks)
+    wire = compress_lib.for_method(cfg, D).wire_bytes(D)
+    seq = {}
+    for seed in (0, 11):
+        _, rounds, _ = _run(_spec(cfg, _cluster(), seed=seed,
+                                  executor="event"))
+        total = sum(ev.arrivals for ev in rounds)
+        assert (total + K * n_chunks) * wire == rounds[-1].bytes_up
+        seq[seed] = [ev.arrivals for ev in rounds]
+    assert seq[0] == seq[11]  # deterministic: no RNG in the timing path
+
+
+def test_quantum_ticks_advance_clock_exactly():
+    """pw_quantum mode: every non-barrier round's server clock advances by
+    exactly the quantum (the fixed harvest tick); barriers jump to the
+    drained arrival max."""
+    q = 2.5e-3
+    spec = _spec(_pw(pw_quantum=q), _cluster(), executor="auto")
+    session, rounds, syncs = _run(spec)
+    assert session.executor == "event"  # quantum mode is event-only
+    prev = 0.0
+    for ev in rounds:
+        if ev.iteration in syncs:
+            assert ev.sim_time >= prev
+        else:
+            assert ev.sim_time == pytest.approx(prev + q, abs=0.0)
+        prev = ev.sim_time
+
+
+# ---------------------------------------------------------------------------
+# Elasticity.
+# ---------------------------------------------------------------------------
+
+
+def _timescale():
+    """(mid, late) sim-times of the membership-free reference run."""
+    _, rounds, _ = _run(_spec(_pw(), _cluster(), executor="event"))
+    return rounds[len(rounds) // 3].sim_time, rounds[-1].sim_time
+
+
+def test_dropout_never_hangs_barrier():
+    """A worker dropping mid-run (never rejoining) shrinks the B-of-K
+    deadline instead of hanging it: the session still completes every
+    scheduled round, monotonically."""
+    t_mid, _ = _timescale()
+    spec = _spec(_pw(), _cluster(membership=((1, t_mid, None),)),
+                 num_outer=2, executor="event")
+    session, rounds, _ = _run(spec)
+    assert len(rounds) == 2 * T  # every round ran; nothing hung
+    assert all(b.sim_time >= a.sim_time
+               for a, b in zip(rounds, rounds[1:]))
+    session.result()  # finalized
+
+
+def test_whole_cluster_dropout_is_starvation_not_deadlock():
+    """Worst case: EVERY worker drops and never rejoins.  Remaining rounds
+    become no-ops (zero arrivals) rather than a hang, and accounting
+    freezes."""
+    t_mid, _ = _timescale()
+    membership = tuple((k, t_mid, None) for k in range(K))
+    spec = _spec(_pw(), _cluster(membership=membership), executor="event")
+    _, rounds, _ = _run(spec)
+    assert len(rounds) == 2 * T
+    assert rounds[-1].arrivals == 0  # starved tail rounds are no-ops
+    frozen = [ev for ev in rounds if ev.arrivals == 0]
+    assert frozen, "whole-cluster dropout never starved a round"
+    assert frozen[-1].bytes_up == frozen[0].bytes_up
+
+
+def test_rejoin_is_deterministic_and_reenters_rng_stream():
+    """Same spec + seed => identical trajectory THROUGH a drop/rejoin cycle
+    (the rejoin re-enters the launch RNG stream at a deterministic point),
+    and the rejoined worker demonstrably works again: more bytes than the
+    never-rejoins variant of the same schedule."""
+    t_mid, t_late = _timescale()
+    rejoin = _cluster(delay="shifted_exponential", params=(("tail_mean", 0.8),),
+                      membership=((1, t_mid, 0.6 * t_late),))
+    results = []
+    for _ in range(2):
+        session, rounds, _ = _run(_spec(_pw(), rejoin, num_outer=2,
+                                        executor="event"))
+        results.append((session.result(), rounds))
+    _assert_identical(results[0][0], results[1][0])
+    for ea, eb in zip(results[0][1], results[1][1]):
+        assert (ea.sim_time, ea.arrivals, ea.bytes_up) == \
+               (eb.sim_time, eb.arrivals, eb.bytes_up)
+    gone = dataclasses.replace(rejoin, membership=((1, t_mid, None),))
+    _, rounds_gone, _ = _run(_spec(_pw(), gone, num_outer=2,
+                                   executor="event"))
+    assert rounds_gone[-1].bytes_up < results[0][1][-1].bytes_up
+
+
+def test_dropped_worker_bytes_stop_accruing():
+    """With worker 1 dropped forever, total uplink bytes fall strictly below
+    the full-strength run, and the deficit is a whole number of chunk
+    messages (truncated passes roll back to the last SENT chunk; nothing is
+    half-billed)."""
+    t_mid, _ = _timescale()
+    cfg = _pw()
+    wire = compress_lib.for_method(cfg, D).wire_bytes(D)
+    _, full, _ = _run(_spec(cfg, _cluster(), executor="event"))
+    _, dropped, _ = _run(_spec(cfg, _cluster(membership=((1, t_mid, None),)),
+                               executor="event"))
+    assert dropped[-1].bytes_up < full[-1].bytes_up
+    assert dropped[-1].bytes_up % wire == 0
+
+
+# ---------------------------------------------------------------------------
+# Routing: executor / sweep / serve lanes.
+# ---------------------------------------------------------------------------
+
+
+def test_membership_and_quantum_force_event_loop():
+    ok, why = executor_lib.scan_supported(
+        _pw(), _cluster(membership=((1, 1e-3, None),)))
+    assert not ok and "membership" in why
+    ok, why = executor_lib.scan_supported(_pw(pw_quantum=1e-3), _cluster())
+    assert not ok and "quantum" in why
+
+
+def test_partial_work_declines_sweep_and_coalesce():
+    ok, why = sweep_lib.sweep_supported(_pw(), _cluster())
+    assert not ok and "sweep" in why
+    ok, why = executor_lib.coalesce_supported(_pw(), _cluster())
+    assert not ok and "chunk" in why
+    ok, why = executor_lib.coalesce_supported(
+        baselines.acpd_hierarchical(K, D, T=T, rho_d=8, H=H), _cluster())
+    assert not ok and why
+
+
+def test_membership_rejected_by_nonsupporting_protocols():
+    cluster = _cluster(membership=((1, 1e-3, None),))
+    cfg = baselines.acpd(K, D, B=2, T=T, rho_d=8, H=H)
+    with pytest.raises(ValueError, match="membership"):
+        _spec(cfg, cluster).validate()
+    with pytest.raises(ValueError, match="supports_membership"):
+        api.Experiment(dataclasses.replace(
+            _spec(_pw(), cluster), methods=(MethodEntry(cfg, 1),)
+        )).session(MethodEntry(cfg, 1))
+
+
+def test_membership_schedule_validation():
+    bad = [((9, 1e-3, None), "worker 9"),
+           ((1, -1.0, None), "drop time"),
+           ((1, 2e-3, 1e-3), "rejoin time")]
+    for entry, match in bad:
+        with pytest.raises(ValueError, match=match):
+            _spec(_pw(), _cluster(membership=(entry,)))
+
+
+def test_hierarchical_b_rack_quota():
+    """Two racks, rack_b=1: every non-barrier round waits for at least one
+    arrival from EACH rack, so arrivals >= n_racks * rack_b."""
+    cfg = baselines.acpd_hierarchical(K, D, T=T, rho_d=8, H=H,
+                                      n_racks=2, rack_b=1)
+    spec = _spec(cfg, _cluster(), executor="event")
+    _, rounds, syncs = _run(spec)
+    assert len(rounds) == 2 * T
+    for ev in rounds:
+        if ev.iteration not in syncs:
+            assert ev.arrivals >= 2, ev

@@ -1,0 +1,281 @@
+"""Property-based invariants over the WHOLE protocol registry.
+
+Every test auto-discovers ``engine.available_protocols()`` (minus doc-example
+entries), so a newly registered server discipline is pinned to the engine
+contract the moment it lands, without editing this file:
+
+* clock/accounting monotonicity -- ``sim_time`` is nondecreasing and the
+  byte/time totals are cumulative (the Protocol.process_round contract);
+* per-round uplink bytes follow the ONE compressor formula
+  (``Compressor.wire_bytes``) for every family whose billing is closed-form:
+  lockstep allreduce phases, group-family arrivals x wire, LAG's
+  heartbeat/payload mixture, partial_work's per-chunk streaming;
+* sigma'-safety -- every registry entry resolves a positive, finite sigma'
+  covering at least one aggregated contribution (>= gamma), and an explicit
+  ``MethodConfig.sigma_prime`` always wins;
+* event-vs-scan trajectory parity on randomized small specs wherever the
+  protocol declares scan support (``executor.scan_supported``) -- the
+  bit-identical-backends contract.
+
+Runs under real hypothesis when installed (CI) and under the deterministic
+fallback shim otherwise (see ``_hypothesis_compat``); either way every
+property sweeps at least one example.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+from _hypothesis_compat import given, settings, st
+
+from repro import api
+from repro.api.problems import ProblemSpec
+from repro.api.spec import ExperimentSpec, MethodEntry
+from repro.core import baselines
+from repro.core import compress as compress_lib
+from repro.core import engine
+from repro.core import executor as executor_lib
+from repro.core.simulate import ClusterModel
+
+# One tiny shape shared by every example so jit caches hit across the sweep
+# (seeds/B/delay params are data, not static arguments).
+K, D, H, T = 4, 48, 8, 4
+N_CHUNKS = 2
+
+# Delay models cheap enough for property sweeps; markov exercises the
+# stateful/host-adaptive lane, the others the vectorized lane.
+_DELAYS = (
+    ("constant", ()),
+    ("shifted_exponential", (("tail_mean", 0.8),)),
+    ("pareto", (("shape", 2.2), ("scale", 0.4))),
+    ("markov", (("p_slow", 0.2), ("p_recover", 0.5), ("slow_factor", 4.0))),
+)
+
+
+def _registry_protocols() -> tuple[str, ...]:
+    """Every registered protocol except doc-walkthrough examples."""
+    return tuple(p for p in engine.available_protocols()
+                 if not p.endswith(("_example", "-example")))
+
+
+def _method_for(proto: str):
+    """A small, valid MethodConfig for ``proto``.
+
+    Known families use their baselines builder; an unknown (future) registry
+    entry falls back to group-shaped defaults -- if those are invalid for it,
+    the protocol's own __init__ raises and the test fails loudly, which is
+    the correct prompt to teach this helper about the new family.
+    """
+    builders = {
+        "sync": lambda: baselines.cocoa_plus(K, H=H),
+        "cocoa": lambda: baselines.cocoa_v1(K, H=H),
+        "cocoa_plus": lambda: baselines.cocoa_plus_solver(K, H=H),
+        "group": lambda: baselines.acpd(K, D, B=2, T=T, rho_d=8, H=H),
+        "async": lambda: baselines.acpd_async(K, D, T=T, rho_d=8, H=H),
+        "lag": lambda: baselines.acpd_lag(K, D, B=2, T=T, rho_d=8, H=H),
+        "adaptive_b": lambda: baselines.acpd_adaptive(K, D, T=T, rho_d=8,
+                                                      H=H),
+        "partial_work": lambda: baselines.acpd_partial_work(
+            K, D, B=2, T=T, rho_d=8, H=H, n_chunks=N_CHUNKS),
+        "hierarchical_b": lambda: baselines.acpd_hierarchical(
+            K, D, T=T, rho_d=8, H=H, n_racks=2, rack_b=1),
+    }
+    if proto in builders:
+        return builders[proto]()
+    return dataclasses.replace(baselines.acpd(K, D, B=2, T=T, rho_d=8, H=H),
+                               name=f"gen-{proto}", protocol=proto)
+
+
+def _spec(proto: str, *, seed: int, delay: str, delay_params=(),
+          num_outer: int = 2, executor: str = "event") -> ExperimentSpec:
+    cfg = _method_for(proto)
+    return ExperimentSpec(
+        name=f"inv-{proto}-{delay}",
+        problem=ProblemSpec("linear_synthetic",
+                            {"num_workers": K, "n_per_worker": 24, "d": D,
+                             "nnz_per_row": 6, "seed": 3, "lam": 1e-2,
+                             "loss": "ridge"}),
+        cluster=ClusterModel(num_workers=K, straggler_sigma=3.0,
+                             delay_model=delay,
+                             delay_params=tuple(delay_params)),
+        methods=(MethodEntry(cfg, num_outer),),
+        eval_every=num_outer * T, seed=seed, executor=executor).validate()
+
+
+def _run_rounds(spec: ExperimentSpec):
+    """Drain one session; returns (RoundEvents, RunResult, entry)."""
+    entry = spec.methods[0]
+    session = api.Experiment(spec).session(entry)
+    rounds = [e for e in session.events() if isinstance(e, api.RoundEvent)]
+    return rounds, session.result(), entry
+
+
+# ---------------------------------------------------------------------------
+# Clock + accounting monotonicity.
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(0, len(_DELAYS) - 1))
+def test_clock_and_accounting_monotone(seed, delay_idx):
+    """sim_time is nondecreasing and every total is cumulative, for every
+    registry protocol under every sweep delay model."""
+    delay, params = _DELAYS[delay_idx]
+    for proto in _registry_protocols():
+        rounds, _, _ = _run_rounds(_spec(proto, seed=seed, delay=delay,
+                                         delay_params=params))
+        assert rounds, proto
+        prev = None
+        for ev in rounds:
+            assert ev.sim_time >= 0.0 and math.isfinite(ev.sim_time), proto
+            assert ev.bytes_up >= 0 and ev.bytes_down >= 0, proto
+            assert ev.compute_time >= 0.0 and ev.comm_time >= 0.0, proto
+            if prev is not None:
+                assert ev.sim_time >= prev.sim_time, proto
+                assert ev.bytes_up >= prev.bytes_up, proto
+                assert ev.bytes_down >= prev.bytes_down, proto
+                assert ev.compute_time >= prev.compute_time, proto
+                assert ev.comm_time >= prev.comm_time, proto
+            prev = ev
+
+
+# ---------------------------------------------------------------------------
+# Per-round bytes == the compressor formula.
+# ---------------------------------------------------------------------------
+
+
+def _expected_initial_bytes(cls, cfg, wire: int) -> int:
+    """Uplink bytes billed by ``initial_messages`` (before round 0)."""
+    if issubclass(cls, engine.SyncProtocol):
+        return 0  # lockstep tokens carry no payload
+    if issubclass(cls, engine.PartialWorkProtocol):
+        return K * max(1, cfg.n_chunks) * wire
+    return K * wire  # group family: one full launch per worker
+
+
+@settings(max_examples=3, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(0, len(_DELAYS) - 1))
+def test_round_bytes_follow_compressor_formula(seed, delay_idx):
+    """Each round's uplink byte delta is the closed-form consequence of the
+    method's compressor: wire_bytes per launched message, family by family.
+    A family without a closed form still must bill nonnegatively."""
+    delay, params = _DELAYS[delay_idx]
+    for proto in _registry_protocols():
+        spec = _spec(proto, seed=seed, delay=delay, delay_params=params)
+        cfg = spec.methods[0].config
+        cls = engine.get_protocol(proto)
+        wire = compress_lib.for_method(cfg, D).wire_bytes(D)
+        rounds, _, _ = _run_rounds(spec)
+        prev_up = _expected_initial_bytes(cls, cfg, wire)
+        assert rounds[0].bytes_up >= prev_up, proto
+        for ev in rounds:
+            delta = ev.bytes_up - prev_up
+            prev_up = ev.bytes_up
+            if issubclass(cls, engine.SyncProtocol):
+                # Ring allreduce: reduce-scatter == all-gather phase, both
+                # directions, every round.
+                phase = (K - 1) * D * 4
+                assert delta == phase, (proto, delta)
+            elif issubclass(cls, engine.PartialWorkProtocol):
+                # Every relaunched worker streams all n_chunks chunks, each
+                # billed through the one compressor formula.
+                per_pass = max(1, cfg.n_chunks) * wire
+                assert delta % per_pass == 0, (proto, delta, per_pass)
+                assert 0 <= delta <= K * per_pass, (proto, delta)
+            elif issubclass(cls, engine.LagProtocol):
+                # arrivals split into payloads (wire) and heartbeats (8B).
+                hb = engine.LagProtocol.HEARTBEAT_BYTES
+                lo, hi = ev.arrivals * hb, ev.arrivals * wire
+                assert lo <= delta <= hi, (proto, delta, lo, hi)
+                if wire != hb:
+                    assert (delta - lo) % (wire - hb) == 0, (proto, delta)
+            elif issubclass(cls, engine.GroupProtocol):
+                # One full relaunch per arrival (group/async/adaptive_b/
+                # hierarchical_b all share the reply-and-relaunch rule).
+                assert delta == ev.arrivals * wire, (proto, delta,
+                                                     ev.arrivals, wire)
+            else:
+                assert delta >= 0, (proto, delta)
+
+
+# ---------------------------------------------------------------------------
+# sigma'-safety.
+# ---------------------------------------------------------------------------
+
+
+def test_sigma_prime_safety():
+    """Every registry entry resolves a positive finite sigma' covering at
+    least one aggregated contribution (>= gamma); explicit overrides win."""
+    for proto in _registry_protocols():
+        cls = engine.get_protocol(proto)
+        cfg = _method_for(proto)
+        default = cls.default_sigma_prime(cfg, K)
+        assert math.isfinite(default) and default > 0.0, (proto, default)
+        assert default >= cfg.gamma - 1e-12, (proto, default, cfg.gamma)
+        resolved = cfg.resolved_sigma_prime(K)
+        if cfg.sigma_prime is not None:
+            assert resolved == cfg.sigma_prime, proto
+        else:
+            assert resolved == default, (proto, resolved, default)
+        forced = dataclasses.replace(cfg, sigma_prime=7.5)
+        assert forced.resolved_sigma_prime(K) == 7.5, proto
+
+
+def test_registry_hooks_present():
+    """The registry contract the analyzer's registry-hooks rule enforces
+    statically, checked dynamically: every entry answers the
+    default_sigma_prime and coalesce_supported hooks with sane types."""
+    for proto in _registry_protocols():
+        cls = engine.get_protocol(proto)
+        cfg = _method_for(proto)
+        ok, why = cls.coalesce_supported(cfg, ClusterModel(num_workers=K))
+        assert isinstance(ok, bool) and isinstance(why, str), proto
+        assert ok or why, f"{proto}: refusal must carry a reason"
+
+
+# ---------------------------------------------------------------------------
+# Event-vs-scan trajectory parity.
+# ---------------------------------------------------------------------------
+
+
+def _assert_same_run(proto, a, b):
+    assert len(a.records) == len(b.records), proto
+    for ra, rb in zip(a.records, b.records):
+        for f in dataclasses.fields(ra):
+            va, vb = getattr(ra, f.name), getattr(rb, f.name)
+            assert va == vb, (proto, f.name, va, vb)
+    assert np.array_equal(np.asarray(a.w), np.asarray(b.w)), proto
+    assert np.array_equal(np.asarray(a.alpha), np.asarray(b.alpha)), proto
+    if a.alpha_applied is not None or b.alpha_applied is not None:
+        assert np.array_equal(np.asarray(a.alpha_applied),
+                              np.asarray(b.alpha_applied)), proto
+
+
+@settings(max_examples=3, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(0, len(_DELAYS) - 1))
+def test_event_scan_parity(seed, delay_idx):
+    """Wherever a protocol declares scan support for the spec's cluster,
+    the two backends produce identical trajectories -- records AND final
+    arrays.  Unsupported combinations must say why."""
+    delay, params = _DELAYS[delay_idx]
+    covered = 0
+    for proto in _registry_protocols():
+        spec = _spec(proto, seed=seed, delay=delay, delay_params=params)
+        ok, why = executor_lib.scan_supported(spec.methods[0].config,
+                                              spec.cluster)
+        if not ok:
+            assert why, proto  # a refusal always carries its reason
+            continue
+        covered += 1
+        results = {}
+        for ex in ("event", "scan"):
+            s = api.Experiment(dataclasses.replace(spec, executor=ex)
+                               ).session(spec.methods[0])
+            s.run()
+            assert s.executor == ex, proto
+            results[ex] = s.result()
+        _assert_same_run(proto, results["event"], results["scan"])
+    if delay != "markov":  # markov is event-only by design
+        assert covered > 0, "no scan-capable protocol exercised"

@@ -227,6 +227,18 @@ _EXPECTED_EXECUTOR = {
     "adaptive_b": dict.fromkeys(
         ["constant", "shifted_exponential", "pareto", "markov",
          "bandwidth_coupled"], "event"),
+    # partial_work scans solo when the (round, chunk, worker) duration
+    # stream is pre-sampleable (lag's rule, per chunk); markov's stateful
+    # per-launch draws keep the event queue.  Membership schedules and
+    # pw_quantum also force event, but the matrix row is the static-cluster
+    # default (those cases are pinned in tests/test_partial_work.py).
+    "partial_work": {"constant": "scan", "shifted_exponential": "scan",
+                     "pareto": "scan", "bandwidth_coupled": "scan",
+                     "markov": "event"},
+    # Rack-dependent pop counts are host-adaptive: always the event queue.
+    "hierarchical_b": dict.fromkeys(
+        ["constant", "shifted_exponential", "pareto", "markov",
+         "bandwidth_coupled"], "event"),
 }
 
 _ZOO_PARAMS = {
@@ -247,6 +259,10 @@ _MATRIX_METHODS = {
     "group": lambda: baselines.acpd(K, D, B=2, T=4, rho_d=32, H=16),
     "async": lambda: baselines.acpd_async(K, D, T=4, rho_d=32, H=16),
     "adaptive_b": lambda: baselines.acpd_adaptive(K, D, T=4, rho_d=32, H=16),
+    "partial_work": lambda: baselines.acpd_partial_work(
+        K, D, B=2, T=4, rho_d=32, H=16, n_chunks=2),
+    "hierarchical_b": lambda: baselines.acpd_hierarchical(
+        K, D, T=4, rho_d=32, H=16, n_racks=2, rack_b=1),
 }
 
 
@@ -279,8 +295,14 @@ def test_eligibility_matrix_executor_routing(small_problem, protocol):
         session = api.Session(small_problem, method, cluster, num_outer=1,
                               executor="auto")
         assert session.executor == want, (protocol, delay)
-        # Sweep eligibility follows the same predicate.
-        assert api.sweep_supported(method, cluster)[0] == ok
+        # Sweep eligibility follows the same predicate, except for
+        # partial_work: it scans SOLO (per-chunk carries are per-run state)
+        # but never batches into shared sweep cells.
+        if protocol == "partial_work":
+            swept, why = api.sweep_supported(method, cluster)
+            assert not swept and "sweep" in why
+        else:
+            assert api.sweep_supported(method, cluster)[0] == ok
 
 
 def test_eligibility_matrix_shard_routing():
