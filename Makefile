@@ -5,7 +5,7 @@
 PY ?= python
 
 .PHONY: check test docs-check analyze bench-quick bench-engine-quick \
-	bench-sweep-quick serve-smoke bench
+	bench-sweep-quick serve-smoke chaos-smoke bench
 
 check: test docs-check analyze bench-quick
 
@@ -50,6 +50,17 @@ serve-smoke:
 		$(PY) -m benchmarks.run --quick --only serve
 	XLA_FLAGS=--xla_force_host_platform_device_count=4 PYTHONPATH=src \
 		$(PY) examples/serve_experiments.py --quick
+
+# Self-healing smoke under the PINNED composite fault schedule
+# (benchmarks/bench_chaos.py + the tests/test_chaos.py suite): injected
+# deadline overrun, transient fault, and NaN-poisoned cell; gates retry /
+# bisect / breaker / masking / checkpoint-resume with zero hung jobs
+# (docs/fault-tolerance.md).
+chaos-smoke:
+	XLA_FLAGS=--xla_force_host_platform_device_count=4 PYTHONPATH=src \
+		$(PY) -m pytest -x -q tests/test_chaos.py tests/test_faults.py
+	XLA_FLAGS=--xla_force_host_platform_device_count=4 PYTHONPATH=src \
+		$(PY) -m benchmarks.run --quick --only chaos
 
 bench:
 	PYTHONPATH=src $(PY) -m benchmarks.run

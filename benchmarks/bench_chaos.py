@@ -1,0 +1,272 @@
+"""Chaos bench: serving goodput and recovery latency under injected faults.
+
+Drives a live :class:`repro.serve.ExperimentService` exactly like
+benchmarks/bench_serve.py -- open-loop arrivals, dispatcher thread started --
+but under the PINNED composite ``chaos`` fault schedule
+(:mod:`repro.core.faults`): the first batch dispatch overruns its execution
+deadline (watchdog -> solo-lane requeue), the second faults transiently
+(backoff retry), and one coalesced cell is NaN-poisoned (masked per-cell by
+the finite certificates).  Every waiter tolerates typed errors, so the bench
+measures what a tenant actually experiences while the service self-heals:
+
+* ``goodput_req_per_s``    -- SUCCESSFUL results delivered per wall-second
+  (failed-by-design poison cells excluded: they are the fault, not the
+  service);
+* ``hung_jobs``            -- handles that never reached a terminal state
+  within the window (the zero-hung-jobs contract; must be 0);
+* the service's self-healing counters (retries, timeouts, requeued_solo,
+  masked_cells, ...) for the window.
+
+The second scenario measures **checkpoint recovery latency**: a resumable
+run is killed at a segment boundary by ``worker_crash(crash_round=...)``,
+then resubmitted to a FRESH service over the same checkpoint directory; the
+resumed completion is timed against a from-scratch run and verified
+bit-identical.
+
+Output: CSV rows plus ``experiments/bench/chaos.json``; the driver folds the
+headline numbers into BENCH_SWEEP.json (quick runs included -- like serving
+latency, recovery behavior is policy-dominated, not problem-size-dominated).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import pathlib
+import shutil
+import threading
+import time
+
+import numpy as np
+
+from benchmarks.common import OUT_DIR, dump, emit
+
+TENANTS = ("alice", "bob", "carol", "dave")
+K = 4
+
+
+def _spec(seed: int, *, quick: bool, checkpoint_every: int | None = None):
+    from repro import api
+    from repro.core import baselines
+    from repro.core.simulate import ClusterModel
+
+    d, n_per_worker = (512, 64) if quick else (2048, 192)
+    num_outer = 4 if quick else 8
+    return api.ExperimentSpec(
+        name=f"chaos-{seed}",
+        problem=api.ProblemSpec("rcv1_like", {"K": K, "seed": 7, "d": d,
+                                              "n_per_worker": n_per_worker}),
+        cluster=ClusterModel(num_workers=K, straggler_sigma=2.0),
+        methods=(api.MethodEntry(baselines.cocoa_plus(K, H=8), num_outer),),
+        eval_every=2, seed=seed,
+        checkpoint_every=checkpoint_every)
+
+
+def _drive(service, *, n_requests: int, rate_hz: float, quick: bool,
+           rng: np.random.Generator):
+    """Open-loop submits with typed-error-tolerant waiters.
+
+    Returns (wall_s, outcomes, hung): ``outcomes`` is one
+    ``(ok, error_type, latency_s)`` per completed wait; ``hung`` counts
+    waiters that never saw a terminal state (the contract says 0).
+    """
+    from repro.serve import BackpressureError
+
+    outcomes: list[tuple[bool, str | None, float]] = []
+    lock = threading.Lock()
+    waiters: list[threading.Thread] = []
+    rejected = 0
+    t_start = time.perf_counter()
+    due = 0.0
+    for i in range(n_requests):
+        due += rng.exponential(1.0 / rate_hz)
+        lead = due - (time.perf_counter() - t_start)
+        if lead > 0:
+            time.sleep(lead)
+        spec = _spec(int(rng.integers(16)), quick=quick)
+        t0 = time.perf_counter()
+        try:
+            handle = service.submit(TENANTS[i % len(TENANTS)], spec)
+        except BackpressureError:
+            rejected += 1
+            continue
+
+        def _wait(h=handle, t0=t0):
+            try:
+                h.result(timeout=600)
+                row = (True, None, time.perf_counter() - t0)
+            except TimeoutError:
+                return  # leaves the thread countable as hung below
+            except Exception as e:  # noqa: BLE001 - typed failures ARE data here
+                row = (False, type(e).__name__, time.perf_counter() - t0)
+            with lock:
+                outcomes.append(row)
+
+        th = threading.Thread(target=_wait, daemon=True)
+        th.start()
+        waiters.append(th)
+    for th in waiters:
+        th.join(timeout=600)
+    hung = sum(th.is_alive() for th in waiters) + rejected * 0
+    return time.perf_counter() - t_start, outcomes, hung, rejected
+
+
+def _chaos_window(quick: bool) -> dict:
+    """Scenario 1: open-loop load under the pinned ``chaos`` schedule."""
+    from repro.core import faults
+    from repro.serve import CoalescePolicy, ExperimentService, RecoveryPolicy
+
+    policy = CoalescePolicy(max_batch=8, max_wait_s=0.05,
+                            max_tenant_depth=64, batch="map")
+
+    # Warmup on a fault-free service: populates the process-wide jit cache
+    # and calibrates the batch deadline against a genuinely WARM dispatch,
+    # so the chaos overrun is the injected sleep, never a cold compile.
+    warm_svc = ExperimentService(policy)
+    h = warm_svc.submit("warmup", _spec(0, quick=quick))
+    warm_svc.submit("warmup", _spec(1, quick=quick))
+    t0 = time.perf_counter()
+    warm_svc.drain()
+    warm_wall = time.perf_counter() - t0
+    h.result(timeout=600)
+    deadline = max(1.0, 4.0 * warm_wall)
+
+    fault = faults.get_fault("chaos")(seed=0, delay_s=2.0 * deadline,
+                                      poison=1)
+    service = ExperimentService(
+        policy,
+        recovery=RecoveryPolicy(max_attempts=3, backoff_base_s=0.02,
+                                batch_deadline_s=deadline),
+        fault=fault)
+    service.start()
+    try:
+        n_requests = 10 if quick else 32
+        rate_hz = 20.0 if quick else 40.0
+        wall_s, outcomes, hung, rejected = _drive(
+            service, n_requests=n_requests, rate_hz=rate_hz, quick=quick,
+            rng=np.random.default_rng(0))
+        stats = service.stats()
+    finally:
+        service.stop()
+
+    ok = [o for o in outcomes if o[0]]
+    failed = [o for o in outcomes if not o[0]]
+    by_error: dict[str, int] = {}
+    for _, etype, _ in failed:
+        by_error[etype] = by_error.get(etype, 0) + 1
+    lats = sorted(lat for _, _, lat in ok)
+    return {
+        "n_requests": n_requests,
+        "offered_rate_hz": rate_hz,
+        "rejected_backpressure": rejected,
+        "window_wall_s": wall_s,
+        "succeeded": len(ok),
+        "failed": len(failed),
+        "failed_by_error": by_error,
+        "hung_jobs": hung,  # the zero-hung-jobs contract
+        "goodput_req_per_s": len(ok) / wall_s if wall_s else 0.0,
+        "latency_p50_s": float(np.percentile(lats, 50)) if lats else None,
+        "latency_p99_s": float(np.percentile(lats, 99)) if lats else None,
+        "batch_deadline_s": deadline,
+        "fault": fault.spec(),
+        "counters": {k: stats[k] for k in (
+            "retries", "bisects", "quarantined", "timeouts", "requeued_solo",
+            "masked_cells", "breaker_rejected", "batches",
+            "batched_requests", "solo_requests")},
+        "policy": dataclasses.asdict(service.policy),
+    }
+
+
+def _recovery_scenario(quick: bool) -> dict:
+    """Scenario 2: kill a checkpointed run mid-flight, resume on a fresh
+    service, time the resumed completion against a from-scratch run."""
+    from repro import api
+    from repro.core import executor, faults
+    from repro.serve import ExperimentService
+
+    ckpt_dir = OUT_DIR / "chaos_ckpt"
+    shutil.rmtree(ckpt_dir, ignore_errors=True)
+    num_outer = 6 if quick else 12
+    every = 2 if quick else 3
+    crash_round = num_outer - every  # killed at the LAST segment boundary
+    spec = dataclasses.replace(_spec(3, quick=quick), name="chaos-resume",
+                               checkpoint_every=every)
+
+    # run 1: killed by the injected crash after its last pre-crash snapshot
+    svc1 = ExperimentService(
+        checkpoint_dir=str(ckpt_dir),
+        fault=faults.get_fault("worker_crash")(crashes=0,
+                                               crash_round=crash_round))
+    h1 = svc1.submit("alice", spec)
+    t0 = time.perf_counter()
+    svc1.drain()
+    kill_wall = time.perf_counter() - t0
+    killed_as = None
+    try:
+        h1.result(timeout=1.0)
+    except Exception as e:  # noqa: BLE001 - the injected kill IS the scenario
+        killed_as = type(e).__name__
+
+    # run 2: fresh service, same checkpoint dir -> resume + finish
+    segs_before = executor.STATS["lockstep_segment_calls"]
+    svc2 = ExperimentService(checkpoint_dir=str(ckpt_dir))
+    h2 = svc2.submit("alice", spec)
+    t0 = time.perf_counter()
+    svc2.drain()
+    resume_wall = time.perf_counter() - t0
+    resumed = h2.result(timeout=600)
+    segments_resumed = executor.STATS["lockstep_segment_calls"] - segs_before
+
+    # baseline: the same run from scratch, no checkpointing, warm caches
+    plain = dataclasses.replace(spec, checkpoint_every=None)
+    entry = plain.methods[0]
+    t0 = time.perf_counter()
+    sess = api.Session(plain.problem.build(), entry.config, plain.cluster,
+                       num_outer=entry.num_outer, seed=plain.seed,
+                       eval_every=plain.eval_every, executor="scan")
+    fresh = sess.run()
+    fresh_wall = time.perf_counter() - t0
+
+    checkpoints = sorted(p.name for p in ckpt_dir.rglob("ckpt_*.npz"))
+    bit_identical = bool(
+        np.array_equal(np.asarray(resumed.w), np.asarray(fresh.w))
+        and [r.gap for r in resumed.records]
+        == [r.gap for r in fresh.records])
+    shutil.rmtree(ckpt_dir, ignore_errors=True)
+    return {
+        "num_outer": num_outer,
+        "checkpoint_every": every,
+        "crash_round": crash_round,
+        "killed_as": killed_as,
+        "kill_wall_s": kill_wall,
+        "resume_wall_s": resume_wall,
+        "fresh_wall_s": fresh_wall,
+        "recovery_speedup_vs_fresh": (fresh_wall / resume_wall
+                                      if resume_wall else 0.0),
+        "segments_resumed": segments_resumed,
+        "checkpoints_written": checkpoints,
+        "resume_bit_identical": bit_identical,
+    }
+
+
+def main(quick: bool = False) -> None:
+    window = _chaos_window(quick)
+    recovery = _recovery_scenario(quick)
+    data = {"window": window, "recovery": recovery}
+
+    emit("chaos/goodput",
+         window["window_wall_s"] * 1e6 / max(window["succeeded"], 1),
+         f"{window['goodput_req_per_s']:.1f}req/s "
+         f"hung={window['hung_jobs']} masked="
+         f"{window['counters']['masked_cells']}")
+    emit("chaos/healing", 0.0,
+         f"retries={window['counters']['retries']} "
+         f"timeouts={window['counters']['timeouts']} "
+         f"requeued={window['counters']['requeued_solo']}")
+    emit("chaos/recovery", recovery["resume_wall_s"] * 1e6,
+         f"x{recovery['recovery_speedup_vs_fresh']:.2f}_vs_fresh "
+         f"bit_identical={recovery['resume_bit_identical']}")
+    dump("chaos", data, seed=0)
+
+
+if __name__ == "__main__":
+    main()

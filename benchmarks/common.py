@@ -76,8 +76,9 @@ def append_trajectory(entry: dict) -> None:
     point and the trajectory captures it alongside the full-scale numbers.
     """
     has_perf = ("executor" in entry or "sweep" in entry or "serve" in entry
-                or "straggler_zoo" in entry)
-    if not has_perf or (entry.get("quick") and "serve" not in entry):
+                or "straggler_zoo" in entry or "chaos" in entry)
+    if not has_perf or (entry.get("quick") and "serve" not in entry
+                        and "chaos" not in entry):
         return
     doc = []
     if TRAJECTORY.exists():
@@ -158,6 +159,20 @@ def trajectory_entry(quick: bool, failures: list,
             "sustained_req_per_s", "latency_p50_s", "latency_p99_s",
             "coalesce_factor", "compile_cache_hit_rate", "n_requests",
             "offered_rate_hz", "batches", "solo_requests")}
+    chaos_path = OUT_DIR / "chaos.json"
+    if "benchmarks.bench_chaos" in fresh and chaos_path.exists():
+        data = json.loads(chaos_path.read_text())["data"]
+        window, recovery = data.get("window", {}), data.get("recovery", {})
+        entry["chaos"] = {
+            **{k: window.get(k) for k in (
+                "goodput_req_per_s", "hung_jobs", "succeeded", "failed",
+                "latency_p50_s", "n_requests")},
+            "counters": window.get("counters"),
+            "resume_wall_s": recovery.get("resume_wall_s"),
+            "recovery_speedup_vs_fresh":
+                recovery.get("recovery_speedup_vs_fresh"),
+            "resume_bit_identical": recovery.get("resume_bit_identical"),
+        }
     return entry
 
 

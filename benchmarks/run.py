@@ -44,15 +44,17 @@ def main(argv: list[str] | None = None) -> None:
                         help="substring filter on benchmark module names")
     args = parser.parse_args(argv)
 
-    from benchmarks import (bench_engine, bench_fig3_convergence,
-                            bench_fig4a_rho, bench_fig4b_scaling,
-                            bench_fig5_realenv, bench_serve,
-                            bench_straggler_zoo, bench_sweep_scaling,
-                            bench_table1, common, roofline)
+    from benchmarks import (bench_chaos, bench_engine,
+                            bench_fig3_convergence, bench_fig4a_rho,
+                            bench_fig4b_scaling, bench_fig5_realenv,
+                            bench_serve, bench_straggler_zoo,
+                            bench_sweep_scaling, bench_table1, common,
+                            roofline)
 
     mods = [bench_table1, bench_fig3_convergence, bench_fig4a_rho,
             bench_fig4b_scaling, bench_fig5_realenv, bench_straggler_zoo,
-            bench_engine, bench_sweep_scaling, bench_serve, roofline]
+            bench_engine, bench_sweep_scaling, bench_serve, bench_chaos,
+            roofline]
     if args.only:
         mods = [m for m in mods if args.only in m.__name__]
         if not mods:

@@ -39,10 +39,18 @@ def _cmd_run(args) -> int:
         spec = dataclasses.replace(spec, target_gap=args.target_gap)
     if args.time_budget is not None:
         spec = dataclasses.replace(spec, time_budget=args.time_budget)
+    if args.checkpoint_every is not None:
+        spec = dataclasses.replace(spec, checkpoint_every=args.checkpoint_every)
+    if spec.checkpoint_every is not None and args.checkpoint_dir is None:
+        print("error: spec sets checkpoint_every; pass --checkpoint-dir for "
+              "the snapshots", file=sys.stderr)
+        return 2
     print(f"# spec {spec.name!r}: {len(spec.methods)} method(s), "
           f"problem={spec.problem.kind}, K={spec.cluster.num_workers}, "
-          f"target_gap={spec.target_gap}, time_budget={spec.time_budget}")
-    exp = api.Experiment(spec)
+          f"target_gap={spec.target_gap}, time_budget={spec.time_budget}"
+          + (f", checkpoint_every={spec.checkpoint_every}"
+             if spec.checkpoint_every is not None else ""))
+    exp = api.Experiment(spec, checkpoint_dir=args.checkpoint_dir)
     results = {}
     for entry in spec.methods:
         name = entry.config.name
@@ -128,6 +136,13 @@ def main(argv: list[str] | None = None) -> int:
                        help="override the spec's simulated-time budget (s)")
     p_run.add_argument("--verbose", action="store_true",
                        help="also stream per-round and sync events")
+    p_run.add_argument("--checkpoint-every", type=int, default=None,
+                       help="snapshot the run state every N rounds "
+                            "(resumable; overrides the spec's "
+                            "checkpoint_every)")
+    p_run.add_argument("--checkpoint-dir", default=None,
+                       help="where checkpoint snapshots live; re-running "
+                            "the same spec resumes from the latest one")
     p_run.set_defaults(fn=_cmd_run)
 
     p_spec = sub.add_parser("spec", help="print a preset spec as JSON")

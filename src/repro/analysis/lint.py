@@ -114,7 +114,8 @@ class Rule:
 # ---------------------------------------------------------------------------
 
 _PRAGMA_RE = re.compile(r"#\s*analysis:\s*([a-z0-9_\-\[\],\s*]+)")
-_PRAGMA_ALIASES = {"host-ok": "traced-host-sync", "x64-ok": "f64-without-x64"}
+_PRAGMA_ALIASES = {"host-ok": "traced-host-sync", "x64-ok": "f64-without-x64",
+                   "fail-fast-ok": "typed-errors"}
 
 
 def _parse_pragmas(lines: list[str]) -> dict[int, set[str]]:
@@ -949,6 +950,52 @@ class RegistryHooksRule(Rule):
                     f"signature (>= {self.SOLVER_MIN_ARGS} positional args + "
                     f"keyword-only {sorted(self.SOLVER_KWONLY)}; see "
                     f"repro.core.solvers)"))
+        return out
+
+
+@register_rule("typed-errors")
+class TypedErrorsRule(Rule):
+    """Serve-layer error discipline: no silent broad excepts.
+
+    The serve layer's whole failure contract is TYPED errors delivered
+    through streams and the pinned HTTP status table -- a broad
+    ``except Exception`` that neither re-raises nor is explicitly marked
+    swallows a failure into a hang or an untyped 500 (the PR-9 bugfixes).
+    This rule flags every ``except Exception`` / ``except BaseException``
+    handler under ``serve/`` whose body contains no ``raise``; handlers that
+    deliberately terminate the error path (delivering it to a tenant handle,
+    mapping it to a status code, poisoning streams on teardown) carry
+    ``# analysis: fail-fast-ok`` with a parenthesized why.
+    """
+
+    description = ("flags except Exception/BaseException without a re-raise "
+                   "under serve/; convert to a typed error or mark the "
+                   "handler '# analysis: fail-fast-ok (why)'")
+
+    BROAD = ("Exception", "BaseException")
+
+    def check(self, module, project):
+        if "serve" not in module.relpath:
+            return []
+        out = []
+        for node in ast.walk(module.tree):
+            if not isinstance(node, ast.ExceptHandler) or node.type is None:
+                continue
+            names = []
+            if isinstance(node.type, ast.Tuple):
+                names = [_dotted(e) for e in node.type.elts]
+            else:
+                names = [_dotted(node.type)]
+            if not any(n in self.BROAD for n in names if n):
+                continue
+            if any(isinstance(n, ast.Raise) for n in ast.walk(node)):
+                continue
+            out.append(module.finding(
+                self.rule_name, node.lineno,
+                f"broad except {', '.join(n for n in names if n)} swallows "
+                f"the error; re-raise a typed serve error "
+                f"(repro.serve.recovery) or mark the handler "
+                f"'# analysis: fail-fast-ok (why)'"))
         return out
 
 

@@ -133,7 +133,22 @@ class Session:
                  eval_every: int = 1, eval_mode: str = "batched",
                  target_gap: float | None = None,
                  time_budget: float | None = None,
-                 executor: str = "auto"):
+                 executor: str = "auto",
+                 checkpoint_dir=None, checkpoint_every: int | None = None,
+                 _segment_hook=None):
+        if (checkpoint_every is None) != (checkpoint_dir is None):
+            raise ValueError("checkpoint_dir and checkpoint_every come "
+                             "together: set both or neither")
+        if checkpoint_every is not None:
+            if checkpoint_every < 1:
+                raise ValueError(
+                    f"checkpoint_every must be >= 1, got {checkpoint_every}")
+            ok, why = executor_lib.checkpoint_supported(
+                method, cluster, target_gap=target_gap,
+                time_budget=time_budget)
+            if not ok:
+                raise ValueError(f"run cannot checkpoint: {why}")
+            executor = "scan"  # segments are a scan-backend construct
         if target_gap is not None:
             eval_mode = "stream"  # gap early-stop needs live certificates
         if eval_mode not in ("batched", "replay", "stream"):
@@ -179,6 +194,9 @@ class Session:
         self.eval_mode = eval_mode
         self.target_gap = target_gap
         self.time_budget = time_budget
+        self.checkpoint_dir = checkpoint_dir
+        self.checkpoint_every = checkpoint_every
+        self._segment_hook = _segment_hook
         self._result: RunResult | None = None
         self._events: Iterator[SessionEvent] | None = None
 
@@ -293,11 +311,23 @@ class Session:
         were computed in-graph) the replay interleaves ``EvalEvent``\\ s at
         their boundaries, exactly like the live event loop; deferred modes
         keep the emit-evals-at-the-end contract."""
-        run = executor_lib.run_scan(self.problem, self.method, self.cluster,
-                                    num_outer=self.num_outer, seed=self.seed,
-                                    eval_every=self.eval_every,
-                                    norms_sq=self.proto.norms_sq,
-                                    target_gap=self.target_gap)
+        if self.checkpoint_every is not None:
+            run = executor_lib.run_lockstep_checkpointed(
+                self.problem, self.method, self.cluster,
+                num_outer=self.num_outer, seed=self.seed,
+                eval_every=self.eval_every,
+                checkpoint_dir=self.checkpoint_dir,
+                checkpoint_every=self.checkpoint_every,
+                norms_sq=self.proto.norms_sq,
+                segment_hook=self._segment_hook)
+        else:
+            run = executor_lib.run_scan(self.problem, self.method,
+                                        self.cluster,
+                                        num_outer=self.num_outer,
+                                        seed=self.seed,
+                                        eval_every=self.eval_every,
+                                        norms_sq=self.proto.norms_sq,
+                                        target_gap=self.target_gap)
         records = run.materialize_records(self.problem, self.eval_mode)
         streaming = self.eval_mode == "stream"
         rec_iter = iter(records)
@@ -333,13 +363,18 @@ class Experiment:
     Builds the dataset once; hands out one :class:`Session` per method entry.
     """
 
-    def __init__(self, spec):
+    def __init__(self, spec, *, checkpoint_dir=None):
+        if spec.checkpoint_every is not None and checkpoint_dir is None:
+            raise ValueError(
+                "spec sets checkpoint_every: pass checkpoint_dir to "
+                "Experiment (where should the snapshots live?)")
         self.spec = spec
         self.problem = spec.problem.build()
         self.cluster = spec.cluster
+        self.checkpoint_dir = checkpoint_dir
 
     def session(self, entry, *, eval_mode: str | None = None,
-                executor: str | None = None) -> Session:
+                executor: str | None = None, _segment_hook=None) -> Session:
         spec = self.spec
         if entry.config.exact_dual_feedback:
             raise ValueError(
@@ -348,13 +383,18 @@ class Experiment:
                 "repro.core.acpd.run_method")
         if eval_mode is None:
             eval_mode = "stream" if spec.target_gap is not None else "batched"
+        ckpt_every = spec.checkpoint_every
         return Session(self.problem, entry.config, self.cluster,
                        num_outer=entry.num_outer, seed=spec.seed,
                        eval_every=spec.eval_every, eval_mode=eval_mode,
                        target_gap=spec.target_gap,
                        time_budget=spec.time_budget,
                        executor=spec.executor if executor is None
-                       else executor)
+                       else executor,
+                       checkpoint_dir=(self.checkpoint_dir
+                                       if ckpt_every is not None else None),
+                       checkpoint_every=ckpt_every,
+                       _segment_hook=_segment_hook)
 
     def run_entry(self, entry) -> RunResult:
         if entry.config.exact_dual_feedback:

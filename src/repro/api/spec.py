@@ -97,6 +97,14 @@ class ExperimentSpec:
     time_budget: float | None = None
     executor: str = "auto"
     shard: str = "auto"
+    # Checkpoint cadence (rounds): with it set, sessions for this spec run
+    # as resumable scan segments and snapshot the carry every N rounds
+    # (``repro.core.executor.run_lockstep_checkpointed``); the snapshot
+    # location is execution state, not spec state, so it travels separately
+    # (``Experiment(spec, checkpoint_dir=...)`` / the service's
+    # ``checkpoint_dir``).  ``None`` (the default -- old spec JSONs keep
+    # their meaning) never checkpoints.
+    checkpoint_every: int | None = None
 
     def __post_init__(self):
         object.__setattr__(self, "methods", tuple(self.methods))
@@ -224,6 +232,19 @@ class ExperimentSpec:
                     f"> drop time (use null for never-rejoins)")
         if self.eval_every <= 0:
             errors.append(f"eval_every must be >= 1, got {self.eval_every}")
+        if self.checkpoint_every is not None:
+            from repro.core import executor as executor_lib
+
+            if self.checkpoint_every < 1:
+                errors.append(f"checkpoint_every must be >= 1, got "
+                              f"{self.checkpoint_every}")
+            for entry in self.methods:
+                ok, why = executor_lib.checkpoint_supported(
+                    entry.config, self.cluster, target_gap=self.target_gap,
+                    time_budget=self.time_budget)
+                if not ok:
+                    errors.append(
+                        f"method {entry.config.name!r}: {why}")
         if self.executor not in ("auto", "event", "scan"):
             errors.append(f"unknown executor {self.executor!r}; expected "
                           f"'auto', 'event' or 'scan'")
@@ -250,6 +271,7 @@ class ExperimentSpec:
             "time_budget": self.time_budget,
             "executor": self.executor,
             "shard": self.shard,
+            "checkpoint_every": self.checkpoint_every,
         }
 
     @classmethod
@@ -265,6 +287,7 @@ class ExperimentSpec:
             time_budget=d.get("time_budget"),
             executor=d.get("executor", "auto"),
             shard=d.get("shard", "auto"),
+            checkpoint_every=d.get("checkpoint_every"),
         )
 
     def to_json(self, indent: int = 2) -> str:

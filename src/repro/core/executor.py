@@ -68,6 +68,8 @@ and retrace events so tests can assert the one-dispatch-per-run contract.
 from __future__ import annotations
 
 import dataclasses
+import pathlib
+import zlib
 from functools import partial
 
 import jax
@@ -102,6 +104,7 @@ GAP_SCAN_AUTO_MAX_ROUNDS = 4096
 # covers every scan-family entry point.
 STATS = {"lockstep_calls": 0, "lockstep_traces": 0,
          "lockstep_gap_calls": 0, "lockstep_gap_traces": 0,
+         "lockstep_segment_calls": 0, "lockstep_segment_traces": 0,
          "lag_calls": 0, "lag_traces": 0,
          "partial_calls": 0, "partial_traces": 0,
          "sweep_calls": 0, "sweep_traces": 0,
@@ -1214,3 +1217,227 @@ def _run_partial(problem, method, cluster, *, num_outer, seed, eval_every,
     return ScanRun(method, rounds, evals, ws[idx], alpha_applied_rows[idx],
                    state["w_server"], state["alpha"],
                    alpha_applied=state["alpha_applied"])
+
+
+# ---------------------------------------------------------------------------
+# Divergence certificates + checkpointed lockstep runs (PR 9).
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def _finite_cells(ws, alphas):
+    """Per-cell finiteness over stacked final iterates: (C, ...) -> (C,)."""
+    fw = jnp.isfinite(ws).reshape(ws.shape[0], -1).all(axis=1)
+    fa = jnp.isfinite(alphas).reshape(alphas.shape[0], -1).all(axis=1)
+    return fw & fa
+
+
+def finite_certificates(variants) -> np.ndarray:
+    """Per-cell finite certificates over sweep results.
+
+    ONE jitted reduction over the stacked per-cell final ``(w, alpha)``
+    (the compute-and-mask idiom of :func:`lockstep_run_gap_traced`, applied
+    across the cell axis): a NaN-poisoned cell only corrupts its own vmap
+    lane, so the batch itself completes -- this certificate tells the serve
+    layer which cells to mask out of delivery and report per-cell
+    (``CellDivergenceError``) instead of failing the whole cohort.
+
+    A deliberately SEPARATE tiny jit: folding the certificate into the
+    sweep computation would change the batched jit signatures that
+    :func:`repro.serve.cache.sweep_cache_key` mirrors and every trace
+    counter pin in tests/test_sweep.py.
+    """
+    ws = jnp.stack([jnp.asarray(v.result.w) for v in variants])
+    alphas = jnp.stack([jnp.asarray(v.result.alpha) for v in variants])
+    return np.asarray(_finite_cells(ws, alphas))
+
+
+def checkpoint_supported(method: MethodConfig, cluster: ClusterModel, *,
+                         target_gap: float | None = None,
+                         time_budget: float | None = None) -> tuple[bool, str]:
+    """Can this run checkpoint/resume bit-identically?  (ok, why-not).
+
+    Checkpointed runs execute as fixed-length scan SEGMENTS
+    (:func:`run_lockstep_checkpointed`), so they need the lockstep scan
+    path with a static round count: early stop makes the segment boundary
+    data-dependent, and the non-lockstep scan protocols thread pre-sampled
+    whole-run operand streams (lag durations, partial_work chunk grids)
+    whose mid-run state is not a small carry.
+    """
+    if method.exact_dual_feedback:
+        return False, ("exact_dual_feedback needs a host lstsq per round "
+                       "(reference path only)")
+    if target_gap is not None or time_budget is not None:
+        return False, ("early stop (target_gap/time_budget) makes the "
+                       "checkpoint boundary data-dependent; run without a "
+                       "stop target to checkpoint")
+    if method.protocol not in LOCKSTEP_PROTOCOLS:
+        return False, (
+            f"checkpoint segments scan from a (key, w, alpha) carry, which "
+            f"only the lockstep protocols {LOCKSTEP_PROTOCOLS} expose; "
+            f"{method.protocol!r} threads whole-run operand streams")
+    return True, ""
+
+
+def lockstep_segment_traced(key, w, alpha, X, y, norms_sq, lam, n, sigma_p,
+                            gamma, *, loss, num_steps, solver, length):
+    """``length`` lockstep rounds scanned FROM a given ``(key, w, alpha)``
+    carry (vs :func:`lockstep_run_traced`'s zero init): the resumable unit
+    of a checkpointed run.  The round body is the same shared
+    ``engine._lockstep_round``, and ``lax.scan`` is sequential in the
+    carry, so chaining segments is bit-identical to one whole scan."""
+
+    def step(carry, _):
+        key, w, alpha = carry
+        key, w, alpha = engine._lockstep_round(
+            key, w, alpha, X, y, norms_sq, lam, n, sigma_p, gamma, loss=loss,
+            num_steps=num_steps, solver=solver)
+        return (key, w, alpha), (w, alpha)
+
+    (key, w, alpha), (ws, alphas) = jax.lax.scan(
+        step, (key, w, alpha), None, length=length)
+    return key, w, alpha, ws, alphas
+
+
+@partial(jax.jit, static_argnames=("loss", "num_steps", "solver", "length"))
+def _lockstep_segment_scan(key, w, alpha, X, y, norms_sq, lam, n, sigma_p,
+                           gamma, *, loss, num_steps, solver, length):
+    STATS["lockstep_segment_traces"] += 1  # trace-time side effect
+    return lockstep_segment_traced(key, w, alpha, X, y, norms_sq, lam, n,
+                                   sigma_p, gamma, loss=loss,
+                                   num_steps=num_steps, solver=solver,
+                                   length=length)
+
+
+def checkpoint_run_id(problem, method: MethodConfig, cluster: ClusterModel,
+                      *, seed: int, num_outer: int, eval_every: int) -> str:
+    """Stable per-run subdirectory name: a digest of everything that shapes
+    the run's trajectory.  Resuming under a different configuration would
+    silently splice two different runs; the id check makes that loud."""
+    sig = (dataclasses.asdict(method), dataclasses.asdict(cluster),
+           tuple(problem.X.shape), str(problem.X.dtype), problem.loss,
+           float(problem.lam), int(seed), int(num_outer), int(eval_every))
+    return f"run_{zlib.crc32(repr(sig).encode()):08x}"
+
+
+def run_lockstep_checkpointed(problem, method: MethodConfig,
+                              cluster: ClusterModel, *, num_outer: int,
+                              seed: int, eval_every: int, checkpoint_dir,
+                              checkpoint_every: int, norms_sq=None,
+                              segment_hook=None) -> ScanRun:
+    """A lockstep run executed in resumable segments of ``checkpoint_every``
+    rounds, serializing the scan carry after every segment.
+
+    After each segment the carry (RNG key data, ``w``, ``alpha``) plus the
+    eval-boundary snapshots gathered so far land in
+    ``checkpoint_dir/<run id>/ckpt_<round>.npz``
+    (:mod:`repro.checkpoint`); a killed process re-invoked with the same
+    arguments resumes from the latest snapshot and executes ONLY the
+    remaining segments.  Bit-identity with the unsegmented
+    :func:`_run_lockstep` run holds by construction: segments chain the
+    sequential scan carry exactly, host accounting is recomputed
+    deterministically from ``seed``, and ALL certificate evaluation stays
+    deferred to one bucketed call over the identical stacked snapshots at
+    ``materialize_records`` time.
+
+    ``segment_hook(start_round)`` is called before each segment executes --
+    the serve layer wires fault injection (``kind="segment"``) through it,
+    and a hook that raises kills the run AFTER the previous segment's
+    checkpoint was durably written.
+    """
+    if checkpoint_every < 1:
+        raise ValueError(
+            f"checkpoint_every must be >= 1, got {checkpoint_every}")
+    ok, why = checkpoint_supported(method, cluster)
+    if not ok:
+        raise ValueError(f"run cannot checkpoint: {why}")
+    from repro.checkpoint import checkpoint as ckpt_lib
+
+    if norms_sq is None:
+        norms_sq = jnp.sum(problem.X * problem.X, axis=-1)
+    K, n_k, d = problem.X.shape
+    dt = problem.X.dtype
+    R = num_outer
+    if R == 0:
+        return ScanRun(method, [], [], None, None, jnp.zeros((d,), dt),
+                       jnp.zeros((K, n_k), dt))
+    run_id = checkpoint_run_id(problem, method, cluster, seed=seed,
+                               num_outer=R, eval_every=eval_every)
+    cdir = pathlib.Path(checkpoint_dir) / run_id
+    evals = _eval_indices(R, eval_every)
+    rounds = lockstep_accounts(method, cluster, d, num_rounds=R, seed=seed)
+    sigma_p = method.resolved_sigma_prime(K)
+    solver = lockstep_solver(method)
+
+    key = jax.random.key(seed)
+    key_dt = jax.random.key_data(key).dtype
+    key_shape = jax.random.key_data(key).shape
+    w = jnp.zeros((d,), dt)
+    alpha = jnp.zeros((K, n_k), dt)
+    snap_ws: list = []  # eval-boundary snapshots gathered so far
+    snap_alphas: list = []
+    start = 0
+
+    latest = ckpt_lib.latest_step(cdir)
+    if latest is not None:
+        if not 0 < latest <= R:
+            raise ValueError(
+                f"checkpoint at round {latest} is outside this run's "
+                f"budget of {R} rounds ({cdir})")
+        n_done = sum(1 for e in evals if e < latest)
+        reference = {
+            "key": np.zeros(key_shape, key_dt),
+            "w": np.zeros((d,), dt),
+            "alpha": np.zeros((K, n_k), dt),
+            "eval_ws": np.zeros((n_done, d), dt),
+            "eval_alphas": np.zeros((n_done, K, n_k), dt),
+        }
+        tree, extra = ckpt_lib.load_checkpoint(cdir, reference, latest)
+        if extra.get("run") != run_id or extra.get("round") != latest:
+            raise ValueError(
+                f"checkpoint manifest under {cdir} does not match this run "
+                f"(expected run={run_id!r} round={latest}, got "
+                f"run={extra.get('run')!r} round={extra.get('round')!r})")
+        key = jax.random.wrap_key_data(jnp.asarray(tree["key"]))
+        w = jnp.asarray(tree["w"])
+        alpha = jnp.asarray(tree["alpha"])
+        if n_done:
+            snap_ws.append(jnp.asarray(tree["eval_ws"]))
+            snap_alphas.append(jnp.asarray(tree["eval_alphas"]))
+        start = latest
+
+    def stacked():
+        if not snap_ws:
+            return (jnp.zeros((0, d), dt), jnp.zeros((0, K, n_k), dt))
+        if len(snap_ws) == 1:
+            return snap_ws[0], snap_alphas[0]
+        return jnp.concatenate(snap_ws), jnp.concatenate(snap_alphas)
+
+    while start < R:
+        if segment_hook is not None:
+            segment_hook(start)
+        length = min(checkpoint_every, R - start)
+        STATS["lockstep_segment_calls"] += 1
+        key, w, alpha, ws, alphas = _lockstep_segment_scan(
+            key, w, alpha, problem.X, problem.y, norms_sq, problem.lam,
+            K * n_k, sigma_p, method.gamma, loss=problem.loss,
+            num_steps=method.H, solver=solver, length=length)
+        seg_evals = [e - start for e in evals if start <= e < start + length]
+        if seg_evals:
+            idx = jnp.asarray(seg_evals, jnp.int32)
+            snap_ws.append(ws[idx])
+            snap_alphas.append(alphas[idx])
+        start += length
+        eval_ws, eval_alphas = stacked()
+        ckpt_lib.save_checkpoint(
+            cdir, start,
+            {"key": jax.random.key_data(key), "w": w, "alpha": alpha,
+             "eval_ws": eval_ws, "eval_alphas": eval_alphas},
+            extra={"run": run_id, "round": start, "seed": int(seed),
+                   "num_outer": int(R), "eval_every": int(eval_every),
+                   "sim_time": rounds[start - 1].sim_time})
+
+    eval_ws, eval_alphas = stacked()
+    if not evals:
+        eval_ws = eval_alphas = None
+    return ScanRun(method, rounds, evals, eval_ws, eval_alphas, w, alpha)

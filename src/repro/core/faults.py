@@ -1,0 +1,351 @@
+"""Pluggable fault-injection models: the chaos axis of the serve layer.
+
+The paper's claim is straggler *agnosticism* (arXiv:1910.04235), and the
+delay registry (:mod:`repro.core.delays`) covers the slow-worker half of
+that story.  This module covers the broken-worker half: a ``FaultModel`` is
+a seeded, deterministic, spec-round-trippable schedule of injected failures
+that the multi-tenant experiment service (:mod:`repro.serve`) consults at
+every dispatch, so the recovery machinery -- quarantine-and-bisect retry,
+execution deadlines, the per-key circuit breaker, divergence masking and
+checkpoint/resume (:mod:`repro.serve.recovery`) -- can be exercised and
+benchmarked under a *pinned* fault schedule instead of ad-hoc monkeypatching.
+
+A fault model answers two questions:
+
+* ``on_dispatch(kind, key, attempt)`` -- called immediately before the
+  service executes work. ``kind`` is the lane (``"batch"`` for a coalesced
+  cohort, ``"solo"`` for a per-request Session, ``"segment"`` for one
+  checkpoint segment of a resumable run, where ``attempt`` is the 0-based
+  starting round of the segment), ``key`` is a stable hashable identity for
+  the work (the coalescer's batch key, or a per-request tuple), ``attempt``
+  the 0-based retry count.  The model may **raise** a typed
+  :class:`InjectedFault` (crash / transient error / compile failure) or
+  **sleep** (slow-batch overrun); returning normally means no fault.
+* ``poison_cells(n_cells, key)`` -- which cell indices of a coalesced batch
+  get a NaN-poisoned operand (the service substitutes ``gamma = NaN`` for
+  those cells, so divergence is *real* in the compiled run and the per-cell
+  finite certificates must genuinely catch it).  Must be attempt-stable:
+  the poison travels with the request, not with the retry.
+
+Registry entries:
+
+* ``none``               -- the default: never faults.
+* ``transient_executor`` -- the first ``failures`` attempts of every batch
+  raise :class:`TransientExecutorError` (transient: the service retries the
+  whole cohort with exponential backoff + deterministic jitter).
+* ``worker_crash``       -- a worker process dies mid-batch: the first
+  ``crashes`` attempts of every batch raise :class:`WorkerCrashError`
+  (transient); with ``crash_round`` set, a checkpointed solo run is killed
+  at that segment boundary (persistent for that run -- the tenant resubmits
+  and the run resumes from the last checkpoint, bit-identically).
+* ``compile_failure``    -- every attempt of every batch raises
+  :class:`CompileFailureError` (persistent: retries cannot help, so
+  repeated failures on one batch key open the circuit breaker).
+* ``nan_poison``         -- ``count`` deterministic cells per batch get a
+  NaN gamma; the run itself succeeds and the per-cell finite certificates
+  isolate exactly the poisoned tenants.
+* ``slow_batch``         -- the first ``slow_attempts`` attempts of every
+  batch sleep ``delay_s`` seconds before executing, tripping the service's
+  execution deadline (typed ``JobTimeoutError`` + solo-lane requeue).
+* ``chaos``              -- the pinned composite schedule the chaos bench
+  drives: per process-order dispatch index, one deadline overrun, one
+  transient fault, and one NaN-poisoned cell (stateful like ``markov``:
+  build a fresh instance per service run; reproducible from ``seed`` +
+  submission order alone).
+
+Determinism: models never consult wall-clock or global RNG state -- every
+decision is a pure function of ``(seed, key, attempt)`` (plus an explicit
+per-instance dispatch counter for ``chaos``), with key identity reduced via
+``zlib.crc32`` (Python's ``hash()`` is salted per process and would break
+cross-run reproducibility).
+
+Extending: subclass :class:`FaultModel`, decorate with
+:func:`register_fault`, accept parameters as JSON-scalar keyword arguments
+(they round-trip through :meth:`FaultModel.spec`).  The
+``docs/fault-tolerance.md`` guide walks the registry end to end.
+"""
+
+from __future__ import annotations
+
+import time  # analysis: host-ok (slow-batch faults sleep on the host)
+import zlib
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Typed injected faults.
+# ---------------------------------------------------------------------------
+
+
+class InjectedFault(RuntimeError):
+    """Base of every injected failure; ``transient`` drives the service's
+    retry-vs-quarantine classification (:mod:`repro.serve.recovery`)."""
+
+    transient = False
+
+
+class WorkerCrashError(InjectedFault):
+    """A worker process died mid-batch; a relaunch can succeed (transient)."""
+
+    transient = True
+
+
+class TransientExecutorError(InjectedFault):
+    """A one-off executor failure (OOM blip, preempted device); retryable."""
+
+    transient = True
+
+
+class CompileFailureError(InjectedFault):
+    """Compilation of the batch's computation fails deterministically;
+    retrying the same key can never help (persistent)."""
+
+    transient = False
+
+
+# ---------------------------------------------------------------------------
+# Registry.
+# ---------------------------------------------------------------------------
+
+_FAULTS: dict[str, type["FaultModel"]] = {}
+
+
+def register_fault(name: str):
+    """Class decorator: make a FaultModel constructible by registry name."""
+
+    def deco(cls: type["FaultModel"]) -> type["FaultModel"]:
+        cls.fault_name = name
+        _FAULTS[name] = cls
+        return cls
+
+    return deco
+
+
+def available_faults() -> tuple[str, ...]:
+    return tuple(sorted(_FAULTS))
+
+
+def get_fault(name: str) -> type["FaultModel"]:
+    try:
+        return _FAULTS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown fault model {name!r}; available: {available_faults()}"
+        ) from None
+
+
+def fault_from_spec(spec: dict) -> "FaultModel":
+    """Build a model from its :meth:`FaultModel.spec` dict (JSON-safe)."""
+    return get_fault(spec["fault_model"])(**spec.get("fault_params", {}))
+
+
+def key_digest(key) -> int:
+    """A process-stable 32-bit digest of a work identity.
+
+    ``repr`` + crc32, NOT ``hash()``: string hashing is salted per process,
+    and fault schedules must reproduce across service restarts (the
+    checkpoint/resume and pinned-bench contracts)."""
+    return zlib.crc32(repr(key).encode())
+
+
+# ---------------------------------------------------------------------------
+# Base class.
+# ---------------------------------------------------------------------------
+
+
+class FaultModel:
+    """Deterministic injected-failure schedule; see the module docstring.
+
+    ``stateful`` marks models carrying per-instance counters (``chaos``):
+    like the ``markov`` delay model, build a FRESH instance per service run
+    so schedules reproduce from ``(seed, submission order)`` alone.
+    """
+
+    fault_name = "abstract"
+    stateful = False
+
+    def __init__(self, *, seed: int = 0):
+        self.seed = int(seed)
+
+    # -- the two injection hooks ------------------------------------------
+
+    def on_dispatch(self, kind: str, key, attempt: int) -> None:
+        """Called before the service executes ``key`` (lane ``kind``) for
+        the ``attempt``-th time.  Raise an :class:`InjectedFault` to fail
+        the dispatch, sleep to overrun a deadline, or return for no fault."""
+
+    def poison_cells(self, n_cells: int, key) -> tuple[int, ...]:
+        """Cell indices of batch ``key`` whose gamma is replaced by NaN.
+        Attempt-stable by contract (no ``attempt`` argument on purpose)."""
+        return ()
+
+    # -- spec round-trip ---------------------------------------------------
+
+    def params(self) -> dict:
+        """JSON-scalar constructor kwargs; subclasses extend."""
+        return {"seed": self.seed}
+
+    def spec(self) -> dict:
+        """The JSON-safe description: ``fault_from_spec(m.spec())`` builds
+        an equivalent model."""
+        return {"fault_model": self.fault_name, "fault_params": self.params()}
+
+    def _rng(self, key) -> np.random.Generator:
+        return np.random.default_rng([self.seed, key_digest(key)])
+
+
+@register_fault("none")
+class NoFault(FaultModel):
+    """The default: never injects anything."""
+
+
+@register_fault("transient_executor")
+class TransientExecutorFault(FaultModel):
+    """First ``failures`` attempts of every batch raise a transient error."""
+
+    def __init__(self, *, seed: int = 0, failures: int = 1):
+        super().__init__(seed=seed)
+        if failures < 0:
+            raise ValueError(f"failures must be >= 0, got {failures}")
+        self.failures = int(failures)
+
+    def on_dispatch(self, kind, key, attempt):
+        if kind == "batch" and attempt < self.failures:
+            raise TransientExecutorError(
+                f"injected transient executor failure "
+                f"(attempt {attempt} < failures={self.failures})")
+
+    def params(self):
+        return {**super().params(), "failures": self.failures}
+
+
+@register_fault("worker_crash")
+class WorkerCrashFault(FaultModel):
+    """A worker dies mid-batch (transient), and/or a checkpointed run is
+    killed at segment boundary ``crash_round`` (resume from checkpoint)."""
+
+    def __init__(self, *, seed: int = 0, crashes: int = 1,
+                 crash_round: int | None = None):
+        super().__init__(seed=seed)
+        if crashes < 0:
+            raise ValueError(f"crashes must be >= 0, got {crashes}")
+        self.crashes = int(crashes)
+        self.crash_round = None if crash_round is None else int(crash_round)
+
+    def on_dispatch(self, kind, key, attempt):
+        if kind == "batch" and attempt < self.crashes:
+            raise WorkerCrashError(
+                f"injected worker crash mid-batch (attempt {attempt})")
+        if (kind == "segment" and self.crash_round is not None
+                and attempt >= self.crash_round):
+            raise WorkerCrashError(
+                f"injected service kill at round {attempt} "
+                f"(crash_round={self.crash_round}); resume from checkpoint")
+
+    def params(self):
+        return {**super().params(), "crashes": self.crashes,
+                "crash_round": self.crash_round}
+
+
+@register_fault("compile_failure")
+class CompileFailureFault(FaultModel):
+    """Every batch attempt fails persistently: the circuit-breaker regime."""
+
+    def on_dispatch(self, kind, key, attempt):
+        if kind == "batch":
+            raise CompileFailureError(
+                "injected deterministic compile failure (persistent; "
+                "retries cannot help)")
+
+
+@register_fault("nan_poison")
+class NanPoisonFault(FaultModel):
+    """``count`` deterministic cells per batch get a NaN gamma operand."""
+
+    def __init__(self, *, seed: int = 0, count: int = 1):
+        super().__init__(seed=seed)
+        if count < 0:
+            raise ValueError(f"count must be >= 0, got {count}")
+        self.count = int(count)
+
+    def poison_cells(self, n_cells, key):
+        k = min(self.count, n_cells)
+        if k == 0:
+            return ()
+        idx = self._rng(key).choice(n_cells, size=k, replace=False)
+        return tuple(sorted(int(i) for i in idx))
+
+    def params(self):
+        return {**super().params(), "count": self.count}
+
+
+@register_fault("slow_batch")
+class SlowBatchFault(FaultModel):
+    """First ``slow_attempts`` attempts of every batch sleep ``delay_s``
+    before executing -- the deadline-overrun regime (watchdog -> typed
+    ``JobTimeoutError`` -> solo-lane requeue)."""
+
+    def __init__(self, *, seed: int = 0, delay_s: float = 0.5,
+                 slow_attempts: int = 1):
+        super().__init__(seed=seed)
+        if delay_s < 0 or slow_attempts < 0:
+            raise ValueError(
+                f"need delay_s >= 0 and slow_attempts >= 0, got "
+                f"{delay_s}, {slow_attempts}")
+        self.delay_s = float(delay_s)
+        self.slow_attempts = int(slow_attempts)
+
+    def on_dispatch(self, kind, key, attempt):
+        if kind == "batch" and attempt < self.slow_attempts:
+            time.sleep(self.delay_s)
+
+    def params(self):
+        return {**super().params(), "delay_s": self.delay_s,
+                "slow_attempts": self.slow_attempts}
+
+
+@register_fault("chaos")
+class ChaosFault(FaultModel):
+    """The pinned composite schedule of the chaos bench: per batch-dispatch
+    process order, dispatch 0 overruns the deadline, dispatch 1 fails
+    transiently, and the first batch asked about poisoning gets ``poison``
+    NaN cells.  Stateful (fresh instance per run, like ``markov``)."""
+
+    stateful = True
+
+    def __init__(self, *, seed: int = 0, delay_s: float = 0.3,
+                 poison: int = 1):
+        super().__init__(seed=seed)
+        if delay_s < 0 or poison < 0:
+            raise ValueError(
+                f"need delay_s >= 0 and poison >= 0, got {delay_s}, {poison}")
+        self.delay_s = float(delay_s)
+        self.poison = int(poison)
+        self._dispatches = 0
+        self._poison_key = None
+
+    def on_dispatch(self, kind, key, attempt):
+        if kind != "batch":
+            return
+        n = self._dispatches
+        self._dispatches += 1
+        if n == 0:
+            time.sleep(self.delay_s)  # deadline overrun
+        elif n == 1:
+            raise TransientExecutorError(
+                "injected chaos transient fault (dispatch 1)")
+
+    def poison_cells(self, n_cells, key):
+        if self._poison_key is None:
+            self._poison_key = key_digest(key)
+        if key_digest(key) != self._poison_key:
+            return ()
+        k = min(self.poison, n_cells)
+        if k == 0:
+            return ()
+        idx = self._rng(key).choice(n_cells, size=k, replace=False)
+        return tuple(sorted(int(i) for i in idx))
+
+    def params(self):
+        return {**super().params(), "delay_s": self.delay_s,
+                "poison": self.poison}

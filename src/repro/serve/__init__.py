@@ -9,12 +9,21 @@ backpressure), keeps the jit compile cache warm across tenants with hit/miss
 accounting, and streams each tenant's typed Round/Sync/Eval/Stop events back
 bit-identical to a solo :class:`~repro.api.Session` run.
 
-Layout: :mod:`~repro.serve.service` (admission + dispatch),
+The serve layer is also **self-healing** (PR 9): injected or real failures
+are retried with backoff when transient, quarantined by cohort bisection
+when persistent, bounded by watchdog deadlines and a per-key circuit
+breaker, and divergent (non-finite) cells are masked out of delivery
+per-cell -- while checkpointed runs survive a service kill and resume
+bit-identically.  Fault schedules come from the :mod:`repro.core.faults`
+registry; the knobs live in :class:`~repro.serve.recovery.RecoveryPolicy`.
+
+Layout: :mod:`~repro.serve.service` (admission + dispatch + recovery),
 :mod:`~repro.serve.coalesce` (batch keys + fairness policy),
 :mod:`~repro.serve.streams` (per-tenant demux/replay),
+:mod:`~repro.serve.recovery` (typed errors, backoff, breaker, watchdog),
 :mod:`~repro.serve.cache` (compile-cache key mirror + counters),
-:mod:`~repro.serve.http` (stdlib HTTP front end).  docs/serving.md is the
-executed guide.
+:mod:`~repro.serve.http` (stdlib HTTP front end).  docs/serving.md and
+docs/fault-tolerance.md are the executed guides.
 """
 
 from repro.serve.cache import CompileCache, sweep_cache_key  # noqa: F401
@@ -24,6 +33,14 @@ from repro.serve.coalesce import (  # noqa: F401
     form_batch,
 )
 from repro.serve.http import event_to_dict, serve_http  # noqa: F401
+from repro.serve.recovery import (  # noqa: F401
+    CellDivergenceError,
+    CircuitBreaker,
+    CircuitOpenError,
+    JobTimeoutError,
+    RecoveryPolicy,
+    ServiceStoppedError,
+)
 from repro.serve.service import (  # noqa: F401
     BackpressureError,
     ExperimentService,
@@ -33,10 +50,16 @@ from repro.serve.streams import JobHandle, replay_events  # noqa: F401
 
 __all__ = [
     "BackpressureError",
+    "CellDivergenceError",
+    "CircuitBreaker",
+    "CircuitOpenError",
     "CoalescePolicy",
     "CompileCache",
     "ExperimentService",
     "JobHandle",
+    "JobTimeoutError",
+    "RecoveryPolicy",
+    "ServiceStoppedError",
     "SpecValidationError",
     "batch_key",
     "event_to_dict",

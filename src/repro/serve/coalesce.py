@@ -24,7 +24,9 @@ the service's admission gate (``executor.coalesce_supported``) delegates to
 (rack-dependent pop counts) decline batching and ride the solo lane -- one
 :class:`repro.api.Session` per request -- while still being admitted.  An
 elastic ``membership`` schedule forces the event loop, which only the solo
-lane runs.
+lane runs.  Checkpointed specs (``checkpoint_every``) are solo for the same
+reason chunked protocols are: their snapshots are per-run state
+(``repro.core.executor.run_lockstep_checkpointed``), not shared sweep cells.
 
 The per-cell column is what makes coalescing pay off: lockstep timing is
 host-side accounting and the lag executor consumes per-cell delay streams as
@@ -125,6 +127,10 @@ def batch_key(spec: ExperimentSpec, entry: MethodEntry, *,
         spec.eval_every,
         policy.batch,
         plan,
+        # Checkpointed specs never reach a batch (the service forces them
+        # solo); keyed anyway so a future relaxation cannot silently mix
+        # checkpointed and plain runs in one cohort.
+        spec.checkpoint_every,
     )
 
 

@@ -9,9 +9,21 @@
   ``429`` on per-tenant backpressure.
 * ``GET /events/<job_id>`` -> blocks until the job finishes, returns
   ``{"events": [{"type": "round"|"sync"|"eval"|"stop", ...}, ...]}`` -- the
-  tenant's full typed stream in order (``500`` carries the job's error).
-* ``GET /stats`` -> the service counters: coalesce factor, compile-cache
-  hits/misses, per-tenant in-flight depth, device inventory.
+  tenant's full typed stream in order.
+* ``GET /stats``  -> the service counters: coalesce factor, compile-cache
+  hits/misses, retry/bisect/breaker accounting, per-tenant in-flight depth,
+  device inventory.
+* ``GET /health`` -> liveness: dispatcher thread state, queue depths,
+  open circuit breakers (``503`` when the service is dead).
+
+**Error contract** (the ``ERROR_STATUS`` table): every failed request gets a
+structured JSON body ``{"error_type": <class name>, "message": str,
+"job_id": str?}`` with a PINNED status code per typed error --
+``SpecValidationError`` 400, ``BackpressureError`` 429,
+``CellDivergenceError`` 422 (the request's own cell diverged),
+``JobTimeoutError`` 504, ``CircuitOpenError``/``ServiceStoppedError`` 503 --
+and only genuinely unclassified failures fall back to a 500.  A legacy
+``error`` key mirrors ``message`` for older clients.
 
 This is a control-plane front end for the in-process service, not a
 load-bearing web server: auth, TLS and horizontal scale-out sit outside the
@@ -25,6 +37,12 @@ import json
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 
 from repro.api.session import EvalEvent, RoundEvent, StopEvent, SyncEvent
+from repro.serve.recovery import (
+    CellDivergenceError,
+    CircuitOpenError,
+    JobTimeoutError,
+    ServiceStoppedError,
+)
 from repro.serve.service import (
     BackpressureError,
     ExperimentService,
@@ -33,6 +51,32 @@ from repro.serve.service import (
 
 _EVENT_TYPES = {RoundEvent: "round", SyncEvent: "sync", EvalEvent: "eval",
                 StopEvent: "stop"}
+
+#: Typed error -> pinned HTTP status.  Most-derived match wins (the list is
+#: scanned in order); anything unlisted is a 500.
+ERROR_STATUS: tuple[tuple[type, int], ...] = (
+    (SpecValidationError, 400),
+    (BackpressureError, 429),
+    (CellDivergenceError, 422),
+    (JobTimeoutError, 504),
+    (CircuitOpenError, 503),
+    (ServiceStoppedError, 503),
+)
+
+
+def error_body(error: BaseException, *, job_id: str | None = None) -> tuple:
+    """(status, payload) for one typed error: the structured contract plus
+    the legacy ``error`` key."""
+    status = 500
+    for cls, code in ERROR_STATUS:
+        if isinstance(error, cls):
+            status = code
+            break
+    payload = {"error_type": type(error).__name__, "message": str(error),
+               "error": str(error)}
+    if job_id is not None:
+        payload["job_id"] = job_id
+    return status, payload
 
 
 def event_to_dict(event) -> dict:
@@ -53,6 +97,11 @@ def make_handler(service: ExperimentService):
             self.end_headers()
             self.wfile.write(body)
 
+        def _reply_error(self, error: BaseException,
+                         job_id: str | None = None) -> None:
+            status, payload = error_body(error, job_id=job_id)
+            self._reply(status, payload)
+
         def do_POST(self):  # noqa: N802 (stdlib handler naming)
             if self.path != "/submit":
                 return self._reply(404, {"error": f"no route {self.path}"})
@@ -64,20 +113,26 @@ def make_handler(service: ExperimentService):
             except (KeyError, ValueError) as e:
                 return self._reply(
                     400, {"error": f"body must be JSON with 'tenant' and "
-                                   f"'spec': {e}"})
+                                   f"'spec': {e}",
+                          "error_type": "BadRequest",
+                          "message": f"body must be JSON with 'tenant' and "
+                                     f"'spec': {e}"})
             try:
                 handle = service.submit_json(tenant, json.dumps(spec_dict),
                                              method=req.get("method"))
-            except SpecValidationError as e:
-                return self._reply(400, {"error": str(e)})
-            except BackpressureError as e:
-                return self._reply(429, {"error": str(e)})
+            except (SpecValidationError, BackpressureError,
+                    ServiceStoppedError) as e:
+                return self._reply_error(e)
             self._reply(200, {"job_id": handle.job_id,
                               "tenant": handle.tenant})
 
         def do_GET(self):  # noqa: N802
             if self.path == "/stats":
                 return self._reply(200, service.stats())
+            if self.path == "/health":
+                health = service.health()
+                return self._reply(
+                    200 if health["status"] == "ok" else 503, health)
             if self.path.startswith("/events/"):
                 job_id = self.path[len("/events/"):]
                 try:
@@ -86,8 +141,8 @@ def make_handler(service: ExperimentService):
                     return self._reply(404, {"error": str(e)})
                 try:
                     events = [event_to_dict(e) for e in handle.events()]
-                except Exception as e:  # noqa: BLE001 -- job failure -> 500
-                    return self._reply(500, {"error": repr(e)})
+                except Exception as e:  # analysis: fail-fast-ok (mapped to the pinned typed-error status table)
+                    return self._reply_error(e, job_id=job_id)
                 return self._reply(200, {"job_id": job_id, "events": events})
             self._reply(404, {"error": f"no route {self.path}"})
 
@@ -107,7 +162,9 @@ def main(argv: list[str] | None = None) -> None:
     """CLI entry point: ``python -m repro serve``."""
     import argparse
 
+    from repro.core.faults import fault_from_spec
     from repro.serve.coalesce import CoalescePolicy
+    from repro.serve.recovery import RecoveryPolicy
 
     ap = argparse.ArgumentParser(
         prog="repro serve",
@@ -123,16 +180,38 @@ def main(argv: list[str] | None = None) -> None:
                          "vmap = faster, float-reassociated")
     ap.add_argument("--shard", default="auto",
                     choices=("auto", "none", "cells", "workers"))
+    ap.add_argument("--batch-deadline", type=float, default=None,
+                    help="seconds one batch dispatch may run before the "
+                         "watchdog requeues it solo (default: no deadline)")
+    ap.add_argument("--solo-deadline", type=float, default=None,
+                    help="seconds one solo run may take before failing with "
+                         "JobTimeoutError (default: no deadline)")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="directory for checkpoint/resume snapshots of "
+                         "specs with checkpoint_every")
+    ap.add_argument("--fault-model", default=None,
+                    help="inject a repro.core.faults registry entry "
+                         "(chaos testing)")
+    ap.add_argument("--fault-params", default="{}",
+                    help="JSON kwargs for --fault-model")
     args = ap.parse_args(argv)
 
-    service = ExperimentService(CoalescePolicy(
-        max_batch=args.max_batch, max_wait_s=args.max_wait,
-        max_tenant_depth=args.max_tenant_depth, batch=args.batch,
-        shard=args.shard)).start()
+    fault = None
+    if args.fault_model is not None:
+        fault = fault_from_spec({"fault_model": args.fault_model,
+                                 "fault_params": json.loads(args.fault_params)})
+    service = ExperimentService(
+        CoalescePolicy(
+            max_batch=args.max_batch, max_wait_s=args.max_wait,
+            max_tenant_depth=args.max_tenant_depth, batch=args.batch,
+            shard=args.shard),
+        recovery=RecoveryPolicy(batch_deadline_s=args.batch_deadline,
+                                solo_deadline_s=args.solo_deadline),
+        fault=fault, checkpoint_dir=args.checkpoint_dir).start()
     server = serve_http(service, args.host, args.port)
     host, port = server.server_address[:2]
     print(f"experiment service listening on http://{host}:{port} "
-          f"(POST /submit, GET /events/<job>, GET /stats)")
+          f"(POST /submit, GET /events/<job>, GET /stats, GET /health)")
     try:
         server.serve_forever()
     except KeyboardInterrupt:

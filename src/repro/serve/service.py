@@ -23,9 +23,35 @@ front end -- ``python -m repro serve``), and the service
    and reports hit/miss counters through :meth:`stats` / ``GET /stats``).
 
 Requests that cannot share a batch -- group-family protocols,
-``target_gap``/``time_budget`` early stop (:func:`repro.core.executor.coalesce_supported`)
--- take the **solo lane**: a per-request ``Session`` streamed through the
-same ``JobHandle``, so admission control and the API are uniform.
+``target_gap``/``time_budget`` early stop (:func:`repro.core.executor.coalesce_supported`),
+and checkpointed runs (``spec.checkpoint_every``: snapshots are per-run
+state) -- take the **solo lane**: a per-request ``Session`` streamed through
+the same ``JobHandle``, so admission control and the API are uniform.
+
+Self-healing (PR 9; knobs in :class:`repro.serve.recovery.RecoveryPolicy`,
+injected failures in :mod:`repro.core.faults`):
+
+* transient batch failures retry with exponential backoff + deterministic
+  jitter; persistent ones **quarantine by bisection** -- the cohort splits
+  and each half retries independently, so only the poison request fails and
+  healthy tenants still get bit-identical results;
+* a **watchdog deadline** per dispatch turns overruns into a typed
+  :class:`~repro.serve.recovery.JobTimeoutError`; overrun *batches* are
+  requeued on the solo lane rather than failed;
+* a per-``batch_key`` **circuit breaker** fast-fails keys that keep failing
+  (:class:`~repro.serve.recovery.CircuitOpenError`), half-open probe after
+  the cooldown;
+* **divergence masking**: after every batch, one jitted per-cell finite
+  certificate (:func:`repro.core.executor.finite_certificates`) masks
+  non-finite cells out of delivery and fails exactly those requests with
+  :class:`~repro.serve.recovery.CellDivergenceError`;
+* **teardown poison-pill**: if the dispatcher thread dies (or the service
+  stops without draining), every unfinished stream terminates with
+  :class:`~repro.serve.recovery.ServiceStoppedError` -- never a hang;
+* **checkpoint/resume**: specs with ``checkpoint_every`` run as resumable
+  scan segments under ``checkpoint_dir``
+  (:func:`repro.core.executor.run_lockstep_checkpointed`); a killed service
+  resumes them bit-identically from the last snapshot on resubmission.
 
 Threading model: ``submit`` is safe from any thread; one dispatcher thread
 (started by :meth:`start`, or driven synchronously by :meth:`drain` for
@@ -35,20 +61,36 @@ built once per distinct ``ProblemSpec`` and memoized.
 
 from __future__ import annotations
 
+import dataclasses
 import itertools
 import json
+import math
 import threading
 import time  # analysis: host-ok
 from typing import Mapping
+
+import numpy as np
 
 from repro.api import run_sweep_cells
 from repro.api.session import Session
 from repro.api.sweep import resolve_shard
 from repro.api.spec import ExperimentSpec
 from repro.core import executor as executor_lib
+from repro.core.faults import FaultModel, NoFault
 from repro.launch import mesh as mesh_lib
 from repro.serve.cache import CompileCache, sweep_cache_key
 from repro.serve.coalesce import CoalescePolicy, Request, batch_key, form_batch
+from repro.serve.recovery import (
+    CellDivergenceError,
+    CircuitBreaker,
+    CircuitOpenError,
+    JobTimeoutError,
+    RecoveryPolicy,
+    ServiceStoppedError,
+    backoff_delay,
+    is_transient,
+    run_with_deadline,
+)
 from repro.serve.streams import JobHandle, deliver
 
 
@@ -65,9 +107,17 @@ class BackpressureError(RuntimeError):
 class ExperimentService:
     """See module docstring.  One instance per process; thread-safe submit."""
 
-    def __init__(self, policy: CoalescePolicy | None = None):
+    def __init__(self, policy: CoalescePolicy | None = None, *,
+                 recovery: RecoveryPolicy | None = None,
+                 fault: FaultModel | None = None,
+                 checkpoint_dir=None):
         self.policy = policy or CoalescePolicy()
+        self.recovery = recovery or RecoveryPolicy()
+        self.fault = fault or NoFault()
+        self.checkpoint_dir = checkpoint_dir
         self.compile_cache = CompileCache()
+        self.breaker = CircuitBreaker(self.recovery.breaker_threshold,
+                                      self.recovery.breaker_cooldown_s)
         self._lock = threading.Condition()
         self._pending: dict[tuple, list[Request]] = {}  # batch_key -> queue
         self._solo: list[Request] = []
@@ -78,10 +128,14 @@ class ExperimentService:
         self._problems: dict[tuple, object] = {}  # memoized datasets
         self._thread: threading.Thread | None = None
         self._stopping = False
+        self._dead: BaseException | None = None  # the teardown poison-pill
         self.counters = {
             "submitted": 0, "rejected_validation": 0,
             "rejected_backpressure": 0, "batches": 0, "batched_requests": 0,
             "solo_requests": 0, "failed": 0,
+            # self-healing accounting (PR 9)
+            "retries": 0, "bisects": 0, "quarantined": 0, "timeouts": 0,
+            "requeued_solo": 0, "masked_cells": 0, "breaker_rejected": 0,
         }
 
     # -- admission ---------------------------------------------------------
@@ -91,6 +145,9 @@ class ExperimentService:
         """Admit one request: ``spec``'s method entry named ``method`` (or
         its only entry).  Validates and applies backpressure synchronously;
         returns the tenant's stream handle."""
+        if self._dead is not None:
+            raise ServiceStoppedError(
+                f"service is dead and cannot accept work: {self._dead}")
         try:
             spec.validate()
         except ValueError as e:
@@ -115,6 +172,14 @@ class ExperimentService:
         ok, why = executor_lib.coalesce_supported(
             entry.config, spec.cluster, target_gap=spec.target_gap,
             time_budget=spec.time_budget)
+        if ok and spec.checkpoint_every is not None:
+            ok, why = False, ("checkpoint/resume snapshots are per-run "
+                              "state; served per-request on the solo lane")
+        if spec.checkpoint_every is not None and self.checkpoint_dir is None:
+            raise SpecValidationError(
+                f"spec {spec.name!r} sets checkpoint_every but this service "
+                f"has no checkpoint_dir; construct "
+                f"ExperimentService(checkpoint_dir=...)")
 
         with self._lock:
             if (self._inflight.get(tenant, 0)
@@ -167,59 +232,160 @@ class ExperimentService:
             self._problems[key] = spec.problem.build()
         return self._problems[key]
 
-    def _run_batch(self, reqs: list[Request]) -> None:
-        """One coalesced dispatch: every request's cell through
-        ``run_sweep_cells``, results demuxed to each handle."""
+    def _count(self, **deltas: int) -> None:
+        with self._lock:
+            for k, v in deltas.items():
+                self.counters[k] += v
+
+    def _fail_requests(self, reqs: list[Request], error: BaseException,
+                       **extra_counts: int) -> None:
+        self._count(failed=len(reqs), **extra_counts)
+        for r in reqs:
+            r.handle._fail(error)
+            self._job_done(r.tenant)
+
+    def _dispatch_cells(self, reqs: list[Request], key: tuple):
+        """ONE cohort through ``run_sweep_cells``, with fault injection, the
+        watchdog deadline, and transient-retry backoff.  Returns the
+        variants; raises the FINAL error (the original exception -- tenants
+        and tests see the real cause, not a wrapper) once retries are
+        exhausted or the failure is persistent."""
         first = reqs[0]
         problem = self._problem_for(first.spec)
         method = first.entry.config
-        cells = [r.cell for r in reqs]
+        poisoned = set(self.fault.poison_cells(len(reqs), key))
+        cells = [dataclasses.replace(r.cell, gamma=math.nan)
+                 if i in poisoned else r.cell for i, r in enumerate(reqs)]
         plan = resolve_shard(self.policy.shard, protocol=method.protocol,
                              num_workers=first.spec.cluster.num_workers)
-        key = sweep_cache_key(
+        ckey = sweep_cache_key(
             problem, method, len(cells), num_outer=first.entry.num_outer,
             eval_every=first.spec.eval_every, batch=self.policy.batch,
             plan=plan)
-        self.compile_cache.note(key)
+        attempt = 0
+        while True:
+            if attempt:
+                time.sleep(backoff_delay(self.recovery, attempt, key))
+                self._count(retries=1)
+
+            def one_attempt(attempt=attempt):
+                # Injection happens INSIDE the watchdog window so slow-batch
+                # faults genuinely overrun the deadline; the cache mirror is
+                # noted once per actual run_sweep_cells invocation.
+                self.fault.on_dispatch("batch", key, attempt)
+                self.compile_cache.note(ckey)
+                return run_sweep_cells(
+                    problem, method, cells,
+                    num_outer=first.entry.num_outer,
+                    eval_every=first.spec.eval_every,
+                    batch=self.policy.batch, shard=self.policy.shard)
+
+            try:
+                return run_with_deadline(
+                    one_attempt, self.recovery.batch_deadline_s,
+                    label=f"batch of {len(reqs)}")
+            except JobTimeoutError:
+                raise
+            except Exception as e:  # analysis: fail-fast-ok (retried if transient, re-raised verbatim otherwise)
+                if is_transient(e) and attempt + 1 < self.recovery.max_attempts:
+                    attempt += 1
+                    continue
+                raise
+
+    def _execute_cohort(self, reqs: list[Request], key: tuple,
+                        depth: int) -> None:
+        """Dispatch a cohort; on persistent failure quarantine-and-bisect so
+        only the poison requests fail; on success mask non-finite cells and
+        deliver the rest bit-identically."""
         try:
-            variants = run_sweep_cells(
-                problem, method, cells, num_outer=first.entry.num_outer,
-                eval_every=first.spec.eval_every, batch=self.policy.batch,
-                shard=self.policy.shard)
-        except Exception as e:  # noqa: BLE001 -- a failed batch must not hang tenants
-            for r in reqs:
-                r.handle._fail(e)
-                self._job_done(r.tenant)
+            variants = self._dispatch_cells(reqs, key)
+        except JobTimeoutError:
+            # Overrun: requeue everyone on the solo lane (per-request runs
+            # under the solo deadline) instead of failing them.
+            self._count(timeouts=1, requeued_solo=len(reqs))
             with self._lock:
-                self.counters["failed"] += len(reqs)
+                for r in reqs:
+                    r.solo_reason = "batch execution deadline overrun"
+                    self._solo.append(r)
+                self._lock.notify_all()
             return
-        with self._lock:
-            self.counters["batches"] += 1
-            self.counters["batched_requests"] += len(reqs)
-        for r, v in zip(reqs, variants):
-            deliver(r, v)
+        except Exception as e:  # analysis: fail-fast-ok (bisected or failed to tenants as the original typed error)
+            if len(reqs) == 1 or depth >= self.recovery.max_bisect_depth:
+                self.breaker.record_failure(key)
+                self._fail_requests(
+                    reqs, e, quarantined=len(reqs) if depth else 0)
+                return
+            self._count(bisects=1)
+            mid = len(reqs) // 2
+            self._execute_cohort(reqs[:mid], key, depth + 1)
+            self._execute_cohort(reqs[mid:], key, depth + 1)
+            return
+
+        self.breaker.record_success(key)
+        finite = executor_lib.finite_certificates(variants)
+        self._count(batches=1, batched_requests=len(reqs))
+        for r, v, ok in zip(reqs, variants, np.asarray(finite)):
+            if ok:
+                deliver(r, v)
+            else:
+                self._count(failed=1, masked_cells=1)
+                r.handle._fail(CellDivergenceError(
+                    f"job {r.handle.job_id}: cell produced non-finite "
+                    f"iterates and was masked out of the coalesced batch "
+                    f"(cohort of {len(reqs)} unaffected)"))
             self._job_done(r.tenant)
+
+    def _run_batch(self, reqs: list[Request]) -> None:
+        """One coalesced dispatch: every request's cell through
+        ``run_sweep_cells`` (with recovery), results demuxed per handle."""
+        first = reqs[0]
+        key = batch_key(first.spec, first.entry, policy=self.policy)
+        if not self.breaker.allow(key):
+            self._fail_requests(
+                reqs,
+                CircuitOpenError(
+                    f"circuit open for this batch template after repeated "
+                    f"failures; retry after the "
+                    f"{self.recovery.breaker_cooldown_s:g}s cooldown"),
+                breaker_rejected=len(reqs))
+            return
+        self._execute_cohort(reqs, key, depth=0)
 
     def _run_solo(self, req: Request) -> None:
         """The solo lane: one Session, streamed live into the handle."""
-        try:
-            spec = req.spec
+        spec = req.spec
+        solo_key = (req.tenant, req.handle.job_id)
+
+        def drive():
+            self.fault.on_dispatch("solo", solo_key, 0)
+            hook = None
+            ckpt_dir = ckpt_every = None
+            if spec.checkpoint_every is not None:
+                ckpt_dir = self.checkpoint_dir
+                ckpt_every = spec.checkpoint_every
+                hook = (lambda start:
+                        self.fault.on_dispatch("segment", solo_key, start))
             session = Session(
                 self._problem_for(spec), req.entry.config, spec.cluster,
                 num_outer=req.entry.num_outer, seed=spec.seed,
                 eval_every=spec.eval_every,
                 target_gap=spec.target_gap, time_budget=spec.time_budget,
-                executor=spec.executor)
+                executor=spec.executor, checkpoint_dir=ckpt_dir,
+                checkpoint_every=ckpt_every, _segment_hook=hook)
             for event in session.events():
                 req.handle._push(event)
-            req.handle._finish(session.result())
-        except Exception as e:  # noqa: BLE001
+            return session.result()
+
+        try:
+            result = run_with_deadline(drive, self.recovery.solo_deadline_s,
+                                       label=f"solo {req.handle.job_id}")
+            req.handle._finish(result)
+        except Exception as e:  # analysis: fail-fast-ok (delivered to the tenant as the job's typed terminal error)
             req.handle._fail(e)
-            with self._lock:
-                self.counters["failed"] += 1
+            self._count(failed=1,
+                        timeouts=1 if isinstance(e, JobTimeoutError) else 0)
         else:
-            with self._lock:
-                self.counters["solo_requests"] += 1
+            self._count(solo_requests=1)
         self._job_done(req.tenant)
 
     def _job_done(self, tenant: str) -> None:
@@ -304,24 +470,66 @@ class ExperimentService:
             self._thread = None
         if drain:
             self.drain()
+        else:
+            # Teardown poison-pill: whatever never ran terminates with a
+            # typed error at every waiting consumer -- never a hang.
+            self._poison_all(ServiceStoppedError(
+                "service stopped before this job ran (stop(drain=False))"))
 
     def _loop(self) -> None:
-        while True:
-            did = self._dispatch_once(flush=False)
-            with self._lock:
-                if self._stopping:
-                    return
-                if not did:
-                    # sleep until new work or the oldest group ages out
-                    timeout = self.policy.max_wait_s
-                    if self._group_opened:
-                        oldest = min(self._group_opened.values())
-                        timeout = max(0.0, oldest + self.policy.max_wait_s
-                                      - time.monotonic())
-                    self._lock.wait(timeout=min(timeout,
-                                                self.policy.max_wait_s))
+        try:
+            while True:
+                did = self._dispatch_once(flush=False)
+                with self._lock:
+                    if self._stopping:
+                        return
+                    if not did:
+                        # sleep until new work or the oldest group ages out
+                        timeout = self.policy.max_wait_s
+                        if self._group_opened:
+                            oldest = min(self._group_opened.values())
+                            timeout = max(0.0,
+                                          oldest + self.policy.max_wait_s
+                                          - time.monotonic())
+                        self._lock.wait(timeout=min(timeout,
+                                                    self.policy.max_wait_s))
+        except BaseException as e:  # analysis: fail-fast-ok (the dispatcher's last act is poisoning every stream with a typed error)
+            self._poison_all(ServiceStoppedError(
+                f"service dispatcher thread died: {e!r}"))
+
+    def _poison_all(self, error: BaseException) -> None:
+        """Terminate every unfinished stream with ``error`` and mark the
+        service dead.  Idempotent handle termination makes racing deliveries
+        safe; subsequent ``submit`` calls raise ``ServiceStoppedError``."""
+        with self._lock:
+            self._dead = error
+            self._pending.clear()
+            self._group_opened.clear()
+            self._solo.clear()
+            self._inflight.clear()
+            handles = list(self._jobs.values())
+            self._lock.notify_all()
+        for h in handles:
+            if not h.done():
+                h._fail(error)
 
     # -- observability -----------------------------------------------------
+
+    def health(self) -> dict:
+        """Liveness summary for ``GET /health``."""
+        with self._lock:
+            pending = sum(len(v) for v in self._pending.values())
+            solo = len(self._solo)
+            dead = self._dead
+        alive = self._thread is not None and self._thread.is_alive()
+        return {
+            "status": "dead" if dead is not None else "ok",
+            "dispatcher_alive": alive,
+            "dead_reason": repr(dead) if dead is not None else None,
+            "pending_batched": pending,
+            "pending_solo": solo,
+            "breaker": self.breaker.snapshot(),
+        }
 
     def stats(self) -> dict:
         with self._lock:
@@ -337,6 +545,8 @@ class ExperimentService:
             "pending_batched": pending,
             "pending_solo": solo,
             "inflight_by_tenant": inflight,
+            "fault_model": self.fault.fault_name,
+            "breaker": self.breaker.snapshot(),
             "compile_cache": self.compile_cache.stats(),
             "trace_counters": _trace_counters(),
             "devices": mesh_lib.device_summary(),

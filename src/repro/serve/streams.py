@@ -86,11 +86,18 @@ class JobHandle:
         self._queue.put(event)
 
     def _finish(self, result: RunResult) -> None:
+        # First terminal outcome wins: the teardown poison-pill and a racing
+        # delivery (or an abandoned deadline attempt) must not clobber each
+        # other, so termination is idempotent.
+        if self._done.is_set():
+            return
         self._result = result
         self._done.set()
         self._queue.put(None)  # wake the consumer
 
     def _fail(self, error: BaseException) -> None:
+        if self._done.is_set():
+            return
         self._error = error
         self._done.set()
         self._queue.put(None)

@@ -1,0 +1,56 @@
+"""Seeded violations for the ``typed-errors`` rule.
+
+The path contains ``serve`` on purpose: the rule only patrols the serve
+layer, where a swallowed broad except becomes a hung stream or an untyped
+500 (the PR-9 failure contract).  Linted as source, never imported.
+"""
+
+
+class TypedError(RuntimeError):
+    pass
+
+
+def swallowed_batch(run, reqs):
+    try:
+        return run(reqs)
+    except Exception as e:  # VIOLATION
+        return {"error": repr(e)}
+
+
+def swallowed_base(run):
+    try:
+        return run()
+    except BaseException:  # VIOLATION
+        return None
+
+
+def swallowed_tuple(run):
+    try:
+        return run()
+    except (ValueError, Exception) as e:  # VIOLATION
+        return repr(e)
+
+
+def reraises_typed(run):
+    # Fine: the handler converts to a typed error.
+    try:
+        return run()
+    except Exception as e:
+        raise TypedError(f"dispatch failed: {e}") from e
+
+
+def narrow_is_fine(run):
+    # Fine: narrow excepts are not this rule's business.
+    try:
+        return run()
+    except ValueError:
+        return None
+
+
+def marked_terminal(handle, run):
+    # Fine: explicitly marked -- the error terminates here by design.
+    try:
+        return run()
+    except Exception as e:  # analysis: fail-fast-ok (delivered to the tenant handle)
+        handle.fail(e)
+        return None

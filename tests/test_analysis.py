@@ -49,6 +49,7 @@ def lint_fixture(name: str, rule: str) -> list[Finding]:
     ("bad_donation.py", "jit-donation"),
     ("bad_f64.py", "f64-without-x64"),
     ("bad_registry.py", "registry-hooks"),
+    ("bad_serve_typed_errors.py", "typed-errors"),
 ])
 def test_rule_fires_at_marked_lines(fixture, rule):
     expected = marked_lines(FIXTURES / fixture)
@@ -99,7 +100,7 @@ def test_rule_registry():
     rules = lint.available_rules()
     for name in ("version-floor", "mesh-via-make-mesh", "pallas-scalar-index",
                  "traced-host-sync", "jit-donation", "f64-without-x64",
-                 "registry-hooks"):
+                 "registry-hooks", "typed-errors"):
         assert name in rules
         assert lint.get_rule(name).description
     with pytest.raises(ValueError, match="unknown analysis rule"):

@@ -1,0 +1,561 @@
+"""Self-healing serve layer under injected faults (PR 9).
+
+Pins the fault-tolerance contract end to end, always under a PINNED fault
+schedule (:mod:`repro.core.faults` -- never ad-hoc monkeypatching except to
+target one specific cell):
+
+* NaN-poisoned cells are masked per-cell: only the poisoned tenant fails
+  (typed ``CellDivergenceError``) and every healthy cohort member's stream
+  stays bit-identical to its solo ``Session`` run;
+* transient faults retry with deterministic backoff and EXACT counter
+  accounting; persistent faults quarantine by cohort bisection so only the
+  poison request fails;
+* deadline overruns requeue the whole batch on the solo lane (typed
+  ``JobTimeoutError`` accounting, no tenant fails for being coalesced with
+  a slow batch);
+* the per-key circuit breaker opens after ``breaker_threshold`` consecutive
+  failures, fast-fails while open, and closes through a half-open probe;
+* a dead dispatcher (or ``stop(drain=False)``) poisons every unfinished
+  stream with ``ServiceStoppedError`` -- no hang, ever;
+* a killed checkpointed run resumes bit-identically from its last snapshot;
+* the multi-tenant chaos stress: shuffled submissions under the composite
+  ``chaos`` schedule, zero hung jobs, zero orphans, exact counters.
+"""
+
+import dataclasses
+import json
+import threading
+import urllib.error
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import baselines, executor, faults
+from repro.core.simulate import ClusterModel
+from repro.serve import (
+    CellDivergenceError,
+    CircuitOpenError,
+    CoalescePolicy,
+    ExperimentService,
+    RecoveryPolicy,
+    ServiceStoppedError,
+    SpecValidationError,
+    serve_http,
+)
+
+K, D = 4, 256
+
+
+def _problem_spec(seed=0):
+    return api.ProblemSpec("linear_synthetic",
+                           {"num_workers": K, "n_per_worker": 48, "d": D,
+                            "nnz_per_row": 12, "seed": seed, "lam": 1e-3})
+
+
+def _cluster(sigma=5.0):
+    return ClusterModel(num_workers=K, straggler_sigma=sigma,
+                        delay_model="constant")
+
+
+def _spec(name="t", method=None, seed=0, num_outer=4, eval_every=2, **kw):
+    method = method or baselines.cocoa_plus(K, H=8)
+    return api.ExperimentSpec(
+        name=name, problem=_problem_spec(),
+        cluster=_cluster(),
+        methods=(api.MethodEntry(method, num_outer),),
+        eval_every=eval_every, seed=seed, **kw)
+
+
+def _policy(**kw):
+    kw.setdefault("batch", "map")
+    kw.setdefault("shard", "none")
+    kw.setdefault("max_wait_s", 0.0)
+    kw.setdefault("max_tenant_depth", 8)
+    return CoalescePolicy(**kw)
+
+
+def _recovery(**kw):
+    kw.setdefault("backoff_base_s", 0.001)  # keep test retries fast
+    return RecoveryPolicy(**kw)
+
+
+def _solo_events(spec, executor_mode="scan"):
+    entry = spec.methods[0]
+    sess = api.Session(spec.problem.build(), entry.config, spec.cluster,
+                       num_outer=entry.num_outer, seed=spec.seed,
+                       eval_every=spec.eval_every, executor=executor_mode)
+    events = list(sess.events())
+    return events, sess.result()
+
+
+def _assert_bit_identical(handle, spec):
+    solo_events, solo_result = _solo_events(spec)
+    assert list(handle.events(timeout=60)) == solo_events
+    np.testing.assert_array_equal(handle.result(timeout=60).w, solo_result.w)
+
+
+# ---------------------------------------------------------------------------
+# Divergence masking: one poisoned cell never takes the cohort down.
+# ---------------------------------------------------------------------------
+
+
+class TestDivergenceMasking:
+    def test_nan_poison_fails_only_the_poisoned_tenant(self):
+        svc = ExperimentService(
+            _policy(), recovery=_recovery(),
+            fault=faults.get_fault("nan_poison")(seed=3, count=1))
+        specs = {t: _spec(seed=i) for i, t in enumerate("abcd")}
+        calls = executor.STATS["sweep_calls"]
+        handles = {t: svc.submit(t, s) for t, s in specs.items()}
+        svc.drain()
+
+        # the poisoned batch genuinely EXECUTED (divergence is real, caught
+        # in-graph by the finite certificates, not pre-screened on the host)
+        assert executor.STATS["sweep_calls"] == calls + 1
+        assert svc.counters["batches"] == 1
+        assert svc.counters["batched_requests"] == 4
+        assert svc.counters["masked_cells"] == 1
+        assert svc.counters["failed"] == 1
+
+        failed = []
+        for t, h in handles.items():
+            assert h.done()  # zero hung jobs
+            try:
+                h.result(timeout=1.0)
+            except CellDivergenceError as e:
+                assert "masked out" in str(e)
+                failed.append(t)
+        assert len(failed) == 1
+        # the deterministic schedule: same seed + key -> same poisoned cell
+        expected = faults.get_fault("nan_poison")(seed=3, count=1)
+        svc2_cells = expected.poison_cells(
+            4, key=_poison_key_of(svc, specs[failed[0]]))
+        assert list("abcd")[svc2_cells[0]] == failed[0]
+        # every survivor is bit-identical to its solo fault-free Session
+        for t, h in handles.items():
+            if t not in failed:
+                _assert_bit_identical(h, specs[t])
+
+    def test_poison_stream_terminates_with_typed_error(self):
+        svc = ExperimentService(
+            _policy(), fault=faults.get_fault("nan_poison")(count=1))
+        h = svc.submit("a", _spec())
+        svc.drain()
+        with pytest.raises(CellDivergenceError):
+            list(h.events(timeout=5.0))
+
+
+def _poison_key_of(svc, spec):
+    from repro.serve.coalesce import batch_key
+
+    return batch_key(spec, spec.methods[0], policy=svc.policy)
+
+
+# ---------------------------------------------------------------------------
+# Transient retry + quarantine-and-bisect.
+# ---------------------------------------------------------------------------
+
+
+class TestRetryAndBisect:
+    def test_transient_fault_retries_with_exact_accounting(self):
+        svc = ExperimentService(
+            _policy(), recovery=_recovery(max_attempts=3),
+            fault=faults.get_fault("transient_executor")(failures=2))
+        sa, sb = _spec(seed=0), _spec(seed=1)
+        ha, hb = svc.submit("a", sa), svc.submit("b", sb)
+        svc.drain()
+        # attempts 0 and 1 faulted, attempt 2 succeeded: exactly 2 retries
+        assert svc.counters["retries"] == 2
+        assert svc.counters["batches"] == 1
+        assert svc.counters["failed"] == 0
+        assert svc.counters["bisects"] == 0
+        _assert_bit_identical(ha, sa)
+        _assert_bit_identical(hb, sb)
+
+    def test_exhausted_transient_bisects_then_fails_typed(self):
+        svc = ExperimentService(
+            _policy(), recovery=_recovery(max_attempts=2),
+            fault=faults.get_fault("transient_executor")(failures=99))
+        ha, hb = svc.submit("a", _spec(seed=0)), svc.submit("b", _spec(seed=1))
+        svc.drain()
+        for h in (ha, hb):
+            with pytest.raises(faults.TransientExecutorError):
+                h.result(timeout=1.0)
+        # cohort of 2 (1 retry) bisected into two singletons (1 retry each)
+        assert svc.counters["retries"] == 3
+        assert svc.counters["bisects"] == 1
+        assert svc.counters["quarantined"] == 2
+        assert svc.counters["failed"] == 2
+        assert svc.counters["batches"] == 0
+
+    def test_bisect_isolates_the_poison_request(self, monkeypatch):
+        """A persistent failure tied to ONE cell: bisection quarantines just
+        that request; the other three tenants still get bit-identical
+        results from their (re-dispatched) sub-cohorts."""
+        svc = ExperimentService(_policy(), recovery=_recovery())
+        specs = {t: _spec(seed=i) for i, t in enumerate("abcd")}
+        poison = dataclasses.replace(specs["c"], seed=7)
+        specs["c"] = poison
+
+        import repro.serve.service as service_mod
+        orig = service_mod.run_sweep_cells
+
+        def guarded(problem, method, cells, **kw):
+            if any(c.seed == 7 for c in cells):
+                raise RuntimeError("persistent poison-cell failure")
+            return orig(problem, method, cells, **kw)
+
+        monkeypatch.setattr(service_mod, "run_sweep_cells", guarded)
+        handles = {t: svc.submit(t, s) for t, s in specs.items()}
+        svc.drain()
+
+        with pytest.raises(RuntimeError, match="poison-cell"):
+            handles["c"].result(timeout=1.0)
+        # [abcd] fails -> [ab] ok, [cd] fails -> [c] quarantined, [d] ok
+        assert svc.counters["bisects"] == 2
+        assert svc.counters["quarantined"] == 1
+        assert svc.counters["failed"] == 1
+        assert svc.counters["batches"] == 2
+        assert svc.counters["batched_requests"] == 3
+        for t in "abd":
+            _assert_bit_identical(handles[t], specs[t])
+
+
+# ---------------------------------------------------------------------------
+# Deadlines: overrun batches are requeued solo, never hung or failed.
+# ---------------------------------------------------------------------------
+
+
+class TestDeadlines:
+    def test_slow_batch_requeues_everyone_solo(self):
+        svc = ExperimentService(
+            _policy(),
+            recovery=_recovery(batch_deadline_s=0.15),
+            fault=faults.get_fault("slow_batch")(delay_s=1.0,
+                                                 slow_attempts=1))
+        sa, sb = _spec(seed=0), _spec(seed=1)
+        ha, hb = svc.submit("a", sa), svc.submit("b", sb)
+        svc.drain()
+        assert svc.counters["timeouts"] == 1
+        assert svc.counters["requeued_solo"] == 2
+        assert svc.counters["solo_requests"] == 2
+        assert svc.counters["failed"] == 0
+        assert svc.counters["batches"] == 0
+        # the solo reruns still deliver bit-identical streams
+        _assert_bit_identical(ha, sa)
+        _assert_bit_identical(hb, sb)
+
+    def test_solo_deadline_fails_with_typed_timeout(self):
+        class SlowSolo(faults.FaultModel):
+            fault_name = "test-slow-solo"
+
+            def on_dispatch(self, kind, key, attempt):
+                if kind == "solo":
+                    import time
+
+                    time.sleep(1.0)
+
+        svc = ExperimentService(
+            _policy(), recovery=_recovery(solo_deadline_s=0.1),
+            fault=SlowSolo())
+        # group protocol -> solo lane
+        h = svc.submit("a", _spec(method=baselines.acpd(K, D)))
+        svc.drain()
+        from repro.serve import JobTimeoutError
+
+        with pytest.raises(JobTimeoutError, match="deadline"):
+            h.result(timeout=1.0)
+        assert svc.counters["timeouts"] == 1
+        assert svc.counters["failed"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Circuit breaker.
+# ---------------------------------------------------------------------------
+
+
+class TestCircuitBreaker:
+    def test_opens_after_threshold_and_fast_fails(self):
+        svc = ExperimentService(
+            _policy(),
+            recovery=_recovery(max_attempts=1, max_bisect_depth=0,
+                               breaker_threshold=2, breaker_cooldown_s=1e9),
+            fault=faults.get_fault("compile_failure")())
+        for i in range(2):
+            h = svc.submit("a", _spec(seed=i))
+            svc.drain()
+            with pytest.raises(faults.CompileFailureError):
+                h.result(timeout=1.0)
+        # breaker open: the next submission fast-fails WITHOUT dispatching
+        h = svc.submit("a", _spec(seed=9))
+        svc.drain()
+        with pytest.raises(CircuitOpenError, match="circuit open"):
+            h.result(timeout=1.0)
+        assert svc.counters["breaker_rejected"] == 1
+        assert svc.stats()["breaker"]["open"]  # visible in /stats
+
+    def test_half_open_probe_closes_on_success(self):
+        svc = ExperimentService(
+            _policy(),
+            recovery=_recovery(max_attempts=1, max_bisect_depth=0,
+                               breaker_threshold=1, breaker_cooldown_s=0.0),
+            fault=faults.get_fault("compile_failure")())
+        h = svc.submit("a", _spec())
+        svc.drain()
+        with pytest.raises(faults.CompileFailureError):
+            h.result(timeout=1.0)
+        # cooldown elapsed; the fault clears; the half-open probe succeeds
+        svc.fault = faults.NoFault()
+        spec = _spec(seed=1)
+        h2 = svc.submit("a", spec)
+        svc.drain()
+        _assert_bit_identical(h2, spec)
+        assert svc.stats()["breaker"] == {"open": [], "half_open": []}
+        assert svc.counters["breaker_rejected"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Teardown poison-pill: a dead service never hangs a consumer (satellite 1).
+# ---------------------------------------------------------------------------
+
+
+class TestPoisonPill:
+    def test_dispatcher_death_terminates_every_stream(self):
+        svc = ExperimentService(_policy(max_wait_s=0.005))
+
+        def boom(*, flush):
+            with svc._lock:
+                busy = bool(svc._solo or any(svc._pending.values()))
+            if busy:
+                raise RuntimeError("synthetic dispatcher crash")
+            return False
+
+        svc._dispatch_once = boom
+        svc.start()
+        h = svc.submit("a", _spec())
+        # no hang: the consumer gets a typed error, bounded wait
+        with pytest.raises(ServiceStoppedError, match="dispatcher thread died"):
+            h.result(timeout=30.0)
+        with pytest.raises(ServiceStoppedError):
+            list(h.events(timeout=30.0))
+        assert svc.health()["status"] == "dead"
+        # a dead service refuses new work instead of queueing it forever
+        with pytest.raises(ServiceStoppedError, match="cannot accept work"):
+            svc.submit("a", _spec())
+        svc.stop()
+
+    def test_stop_without_drain_poisons_leftovers(self):
+        svc = ExperimentService(_policy())
+        h = svc.submit("a", _spec())
+        svc.stop(drain=False)
+        with pytest.raises(ServiceStoppedError, match="before this job ran"):
+            h.result(timeout=1.0)
+        assert svc.health()["status"] == "dead"
+        assert svc.stats()["pending_batched"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint/resume through the service.
+# ---------------------------------------------------------------------------
+
+
+class TestCheckpointResume:
+    def test_killed_run_resumes_bit_identically(self, tmp_path):
+        spec = _spec(num_outer=6, checkpoint_every=2)
+        # run 1: the injected kill hits at the start of the round-4 segment,
+        # AFTER the round-2 and round-4 snapshots were written
+        svc1 = ExperimentService(
+            _policy(), checkpoint_dir=str(tmp_path),
+            fault=faults.get_fault("worker_crash")(crashes=0, crash_round=4))
+        h1 = svc1.submit("a", spec)
+        svc1.drain()
+        with pytest.raises(faults.WorkerCrashError, match="resume"):
+            h1.result(timeout=1.0)
+        saved = sorted(p.name for p in tmp_path.rglob("ckpt_*.npz"))
+        assert saved == ["ckpt_00000002.npz", "ckpt_00000004.npz"]
+
+        # run 2: a FRESH service (the old one is gone) resumes the run from
+        # the last snapshot -- only the final segment executes
+        segs = executor.STATS["lockstep_segment_calls"]
+        svc2 = ExperimentService(_policy(), checkpoint_dir=str(tmp_path))
+        h2 = svc2.submit("a", spec)
+        svc2.drain()
+        assert executor.STATS["lockstep_segment_calls"] == segs + 1
+        result = h2.result(timeout=30.0)
+
+        # bit-identical to a never-interrupted, never-checkpointed session
+        plain = dataclasses.replace(spec, checkpoint_every=None)
+        solo_events, solo_result = _solo_events(plain)
+        np.testing.assert_array_equal(result.w, solo_result.w)
+        assert ([r.gap for r in result.records]
+                == [r.gap for r in solo_result.records])
+        assert list(h2.events(timeout=5.0)) == solo_events
+
+    def test_checkpoint_spec_needs_service_checkpoint_dir(self):
+        svc = ExperimentService(_policy())  # no checkpoint_dir
+        with pytest.raises(SpecValidationError, match="checkpoint_dir"):
+            svc.submit("a", _spec(checkpoint_every=2))
+
+    def test_checkpoint_specs_ride_the_solo_lane(self, tmp_path):
+        svc = ExperimentService(_policy(), checkpoint_dir=str(tmp_path))
+        svc.submit("a", _spec(checkpoint_every=2))
+        svc.submit("b", _spec(seed=1))  # coalescable plain spec
+        assert svc.stats()["pending_solo"] == 1
+        assert svc.stats()["pending_batched"] == 1
+        svc.drain()
+        assert svc.counters["solo_requests"] == 1
+
+
+# ---------------------------------------------------------------------------
+# HTTP error contract (satellite 2) + /health.
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture
+def http_service():
+    def make(**svc_kw):
+        svc = ExperimentService(_policy(), **svc_kw).start()
+        server = serve_http(svc, "127.0.0.1", 0)
+        threading.Thread(target=server.serve_forever, daemon=True).start()
+        return svc, server, f"http://127.0.0.1:{server.server_address[1]}"
+
+    made = []
+
+    def tracked(**svc_kw):
+        out = make(**svc_kw)
+        made.append(out)
+        return out
+
+    yield tracked
+    for svc, server, _ in made:
+        server.shutdown()
+        svc.stop()
+
+
+class TestHttpErrors:
+    def _submit(self, base, spec, tenant="a"):
+        body = json.dumps({"tenant": tenant, "spec": spec.to_dict()}).encode()
+        req = urllib.request.Request(f"{base}/submit", data=body,
+                                     method="POST")
+        with urllib.request.urlopen(req, timeout=30) as r:
+            return json.loads(r.read())
+
+    def test_validation_error_is_structured_400(self, http_service):
+        _, _, base = http_service()
+        spec = _spec().to_dict()
+        spec["problem"]["kind"] = "nope"
+        body = json.dumps({"tenant": "a", "spec": spec}).encode()
+        req = urllib.request.Request(f"{base}/submit", data=body,
+                                     method="POST")
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            urllib.request.urlopen(req, timeout=30)
+        assert ei.value.code == 400
+        payload = json.loads(ei.value.read())
+        assert payload["error_type"] == "SpecValidationError"
+        assert "linear_synthetic" in payload["message"]
+        assert payload["error"] == payload["message"]  # legacy mirror
+
+    def test_divergence_maps_to_422_with_job_id(self, http_service):
+        svc, _, base = http_service(
+            fault=faults.get_fault("nan_poison")(count=1))
+        job = self._submit(base, _spec())
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            urllib.request.urlopen(f"{base}/events/{job['job_id']}",
+                                   timeout=60)
+        assert ei.value.code == 422
+        payload = json.loads(ei.value.read())
+        assert payload["error_type"] == "CellDivergenceError"
+        assert payload["job_id"] == job["job_id"]
+
+    def test_unclassified_error_is_structured_500(self, http_service):
+        svc, _, base = http_service(
+            recovery=_recovery(max_attempts=1, max_bisect_depth=0),
+            fault=faults.get_fault("compile_failure")())
+        job = self._submit(base, _spec())
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            urllib.request.urlopen(f"{base}/events/{job['job_id']}",
+                                   timeout=60)
+        assert ei.value.code == 500
+        assert (json.loads(ei.value.read())["error_type"]
+                == "CompileFailureError")
+
+    def test_health_and_fault_counters_in_stats(self, http_service):
+        svc, _, base = http_service(
+            fault=faults.get_fault("nan_poison")(count=1))
+        with urllib.request.urlopen(f"{base}/health", timeout=30) as r:
+            health = json.loads(r.read())
+        assert health["status"] == "ok" and health["dispatcher_alive"]
+        job = self._submit(base, _spec())
+        svc.job(job["job_id"])._done.wait(timeout=60)
+        with urllib.request.urlopen(f"{base}/stats", timeout=30) as r:
+            stats = json.loads(r.read())
+        assert stats["fault_model"] == "nan_poison"
+        assert stats["masked_cells"] == 1
+        for k in ("retries", "bisects", "timeouts", "breaker_rejected",
+                  "requeued_solo", "quarantined"):
+            assert k in stats
+        assert stats["breaker"] == {"open": [], "half_open": []}
+
+
+# ---------------------------------------------------------------------------
+# The multi-tenant chaos stress (satellite 3).
+# ---------------------------------------------------------------------------
+
+
+class TestChaosStress:
+    def test_shuffled_tenants_under_composite_chaos_schedule(self):
+        """8 jobs from 4 tenants, submission order shuffled by a pinned rng,
+        under the composite ``chaos`` schedule (one deadline overrun, one
+        transient fault, one NaN cell): zero hung jobs, zero orphans, only
+        the poisoned tenant fails, survivors bit-identical, exact counters.
+        """
+        svc = ExperimentService(
+            _policy(max_batch=4),
+            recovery=_recovery(max_attempts=3, batch_deadline_s=0.15),
+            fault=faults.get_fault("chaos")(seed=5, delay_s=1.0, poison=1))
+        jobs = [(f"tenant{i % 4}", _spec(seed=i)) for i in range(8)]
+        rng = np.random.default_rng(123)  # pinned interleaving
+        order = rng.permutation(len(jobs))
+        handles = {}
+        for i in order:
+            tenant, spec = jobs[i]
+            handles[i] = (svc.submit(tenant, spec), spec)
+        svc.drain()
+
+        # zero hung jobs: every handle reaches a terminal state, bounded
+        failed = {}
+        for i, (h, spec) in handles.items():
+            assert h.done()
+            try:
+                h.result(timeout=60.0)
+            except Exception as e:  # analysis: fail-fast-ok (collected and asserted typed below)
+                failed[i] = e
+        # exactly the one poisoned cell fails, with the typed error
+        assert len(failed) == 1
+        assert isinstance(next(iter(failed.values())), CellDivergenceError)
+        # survivors are bit-identical to their solo fault-free Sessions
+        for i, (h, spec) in handles.items():
+            if i not in failed:
+                _assert_bit_identical(h, spec)
+
+        # exact schedule accounting: batch 1 of 4 overran the deadline and
+        # was requeued solo; batch 2 of 4 faulted transiently once, retried,
+        # then delivered 3 of its 4 cells (1 masked)
+        c = svc.counters
+        assert c["submitted"] == 8
+        assert c["timeouts"] == 1 and c["requeued_solo"] == 4
+        assert c["retries"] == 1
+        assert c["batches"] == 1 and c["batched_requests"] == 4
+        assert c["solo_requests"] == 4
+        assert c["failed"] == 1 and c["masked_cells"] == 1
+        assert c["bisects"] == 0 and c["quarantined"] == 0
+        assert c["breaker_rejected"] == 0
+        # zero orphans: all depth released, nothing pending anywhere
+        stats = svc.stats()
+        assert stats["inflight_by_tenant"] == {}
+        assert stats["pending_batched"] == 0 and stats["pending_solo"] == 0
+        # the schedule replays: a fresh instance produces the same decisions
+        assert (faults.get_fault("chaos")(seed=5, delay_s=1.0, poison=1)
+                .spec() == svc.fault.spec())

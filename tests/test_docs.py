@@ -28,6 +28,7 @@ def _python_blocks(path: pathlib.Path) -> list[str]:
                                 "docs/extending-compressors.md",
                                 "docs/performance.md",
                                 "docs/serving.md",
+                                "docs/fault-tolerance.md",
                                 "docs/static-analysis.md"])
 def test_markdown_links_resolve(md):
     path = ROOT / md
@@ -40,6 +41,7 @@ def test_markdown_links_resolve(md):
                                    "docs/extending-compressors.md",
                                    "docs/performance.md",
                                    "docs/serving.md",
+                                   "docs/fault-tolerance.md",
                                    "docs/static-analysis.md"])
 def test_extension_guide_examples_run_as_is(guide):
     """The acceptance bar for the guides: their code is real. All python
@@ -71,13 +73,15 @@ def test_serve_example_runs_quick():
 
 def test_readme_documents_every_registry_entry():
     """The capability matrix must not rot: every registered protocol,
-    compressor, delay model, and analysis rule appears in README.md."""
+    compressor, delay model, fault model, and analysis rule appears in
+    README.md."""
     from repro.analysis import lint
-    from repro.core import compress, delays, engine
+    from repro.core import compress, delays, engine, faults
 
     readme = (ROOT / "README.md").read_text()
     for name in (engine.available_protocols() + compress.available_compressors()
-                 + delays.available_delays() + lint.available_rules()):
+                 + delays.available_delays() + faults.available_faults()
+                 + lint.available_rules()):
         if name.endswith(("_example", "-example")):
             continue  # registered by executing the guides' worked examples
         assert f"`{name}`" in readme, f"README does not mention `{name}`"

