@@ -5,7 +5,7 @@
 PY ?= python
 
 .PHONY: check test docs-check analyze bench-quick bench-engine-quick \
-	bench-sweep-quick serve-smoke chaos-smoke bench
+	bench-sweep-quick serve-smoke chaos-smoke cluster-smoke bench
 
 check: test docs-check analyze bench-quick
 
@@ -61,6 +61,15 @@ chaos-smoke:
 		$(PY) -m pytest -x -q tests/test_chaos.py tests/test_faults.py
 	XLA_FLAGS=--xla_force_host_platform_device_count=4 PYTHONPATH=src \
 		$(PY) -m benchmarks.run --quick --only chaos
+
+# Replicated-serving smoke (docs/fault-tolerance.md, "Replicated serving"):
+# the cluster test suite (lease mutual exclusion, bit-identical checkpoint
+# takeover, exactly-once under duplication, partition no-hang, one REAL
+# subprocess SIGKILL) plus a 3-replica run under the seeded cluster_chaos
+# composite asserting goodput > 0 and zero hung jobs.
+cluster-smoke:
+	PYTHONPATH=src $(PY) -m pytest -x -q tests/test_cluster.py
+	PYTHONPATH=src $(PY) scripts/cluster_smoke.py
 
 bench:
 	PYTHONPATH=src $(PY) -m benchmarks.run

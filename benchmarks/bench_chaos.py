@@ -23,6 +23,13 @@ then resubmitted to a FRESH service over the same checkpoint directory; the
 resumed completion is timed against a from-scratch run and verified
 bit-identical.
 
+The third scenario drives the **replicated serve cluster**
+(:mod:`repro.serve.cluster`) under the seeded ``cluster_chaos`` composite
+(one replica killed mid-checkpoint-segment + message drops): goodput across
+the surviving replicas, zero hung jobs, and the takeover recovery latency
+in deterministic scheduler ticks from the kill to the stolen job's result
+becoming visible.
+
 Output: CSV rows plus ``experiments/bench/chaos.json``; the driver folds the
 headline numbers into BENCH_SWEEP.json (quick runs included -- like serving
 latency, recovery behavior is policy-dominated, not problem-size-dominated).
@@ -248,10 +255,100 @@ def _recovery_scenario(quick: bool) -> dict:
     }
 
 
+def _cluster_scenario(quick: bool) -> dict:
+    """Scenario 3: the replicated cluster under ``cluster_chaos`` -- one
+    replica dies mid-segment for real, peers take over from its checkpoint,
+    messages drop along the way.  The whole schedule is deterministic (one
+    shared ManualClock, fixed round-robin), so the reported counters replay
+    exactly for one (seed, fault model, submission order) triple."""
+    from repro.core import faults
+    from repro.serve import (ClusterClient, ClusterReplica, CoalescePolicy,
+                             ManualClock)
+
+    cluster_dir = OUT_DIR / "chaos_cluster"
+    shutil.rmtree(cluster_dir, ignore_errors=True)
+    clock = ManualClock()
+    chaos = faults.get_fault("cluster_chaos")(
+        seed=11, kill_replica="r0", at_segment=2, drop_rate=0.15)
+    policy = CoalescePolicy(batch="map", shard="none", max_wait_s=0.0)
+    replicas = [ClusterReplica(cluster_dir, rid, clock=clock,
+                               fault=(chaos if rid == "r0" else None),
+                               lease_ttl_s=2.5,
+                               service_kwargs=dict(policy=policy))
+                for rid in ("r0", "r1", "r2")]
+    client = ClusterClient(cluster_dir, clock=clock)
+
+    n_jobs = 3 if quick else 6
+    t0 = time.perf_counter()
+    keys = [client.submit("bench", dataclasses.replace(
+                _spec(i, quick=quick, checkpoint_every=2),
+                name=f"cluster-{i}"))
+            for i in range(n_jobs)]
+
+    # run_cluster's schedule, instrumented: record the kill tick and the
+    # tick each job's result record became visible.
+    dead: dict[str, str] = {}
+    done_at: dict[str, int] = {}
+    death_tick = None
+    ticks = 0
+    for _ in range(200):
+        if not client.unfinished():
+            break
+        ticks += 1
+        clock.advance(1.0)  # ages heartbeats: lease_ttl_s=2.5 -> 3-tick FD
+        client.pump()
+        for replica in replicas:
+            if replica.replica_id in dead:
+                continue
+            try:
+                replica.step()
+            except faults.ReplicaKilled as e:
+                dead[replica.replica_id] = str(e)
+                death_tick = ticks
+        for key in keys:
+            if key not in done_at and client.transport.has_result(key):
+                done_at[key] = ticks
+    wall = time.perf_counter() - t0
+
+    # The taken-over job is the one whose result record carries epoch > 0.
+    takeover_ticks = None
+    for key in keys:
+        record = client.transport.read_result(key)
+        if record is not None and record.get("epoch", 0) > 0:
+            takeover_ticks = done_at[key] - (death_tick or 0)
+    completed = sum(r.counters["completed"] for r in replicas)
+    hung = len(client.unfinished())  # BEFORE the teardown removes results
+    shutil.rmtree(cluster_dir, ignore_errors=True)
+    return {
+        "n_jobs": n_jobs,
+        "n_replicas": len(replicas),
+        "fault": chaos.spec(),
+        "lease_ttl_s": 2.5,
+        "ticks": ticks,
+        "wall_s": wall,
+        "goodput_jobs_per_s": len(done_at) / wall if wall else 0.0,
+        "hung_jobs": hung,  # the contract: 0
+        "dead_replicas": dict(dead),
+        "kill_tick": death_tick,
+        "takeovers": sum(r.counters["takeovers"] for r in replicas),
+        "takeover_recovery_ticks": takeover_ticks,
+        "completed": completed,
+        "fenced_results": sum(r.counters["fenced_results"]
+                              for r in replicas),
+        "dropped_messages": (client.transport.counters["dropped"]
+                             + sum(r.transport.counters["dropped"]
+                                   for r in replicas)),
+        "deduped_results": sum(r.transport.counters["deduped_results"]
+                               for r in replicas),
+        "client": dict(client.counters),
+    }
+
+
 def main(quick: bool = False) -> None:
     window = _chaos_window(quick)
     recovery = _recovery_scenario(quick)
-    data = {"window": window, "recovery": recovery}
+    cluster = _cluster_scenario(quick)
+    data = {"window": window, "recovery": recovery, "cluster": cluster}
 
     emit("chaos/goodput",
          window["window_wall_s"] * 1e6 / max(window["succeeded"], 1),
@@ -265,6 +362,10 @@ def main(quick: bool = False) -> None:
     emit("chaos/recovery", recovery["resume_wall_s"] * 1e6,
          f"x{recovery['recovery_speedup_vs_fresh']:.2f}_vs_fresh "
          f"bit_identical={recovery['resume_bit_identical']}")
+    emit("chaos/cluster", cluster["wall_s"] * 1e6 / max(cluster["n_jobs"], 1),
+         f"{cluster['goodput_jobs_per_s']:.1f}jobs/s "
+         f"hung={cluster['hung_jobs']} takeovers={cluster['takeovers']} "
+         f"recovery={cluster['takeover_recovery_ticks']}ticks")
     dump("chaos", data, seed=0)
 
 

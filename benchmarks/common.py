@@ -172,6 +172,10 @@ def trajectory_entry(quick: bool, failures: list,
             "recovery_speedup_vs_fresh":
                 recovery.get("recovery_speedup_vs_fresh"),
             "resume_bit_identical": recovery.get("resume_bit_identical"),
+            "cluster": {k: data.get("cluster", {}).get(k) for k in (
+                "goodput_jobs_per_s", "hung_jobs", "n_jobs", "n_replicas",
+                "takeovers", "takeover_recovery_ticks", "fenced_results",
+                "dropped_messages", "deduped_results")},
         }
     return entry
 

@@ -1,0 +1,41 @@
+"""Replicated-serving smoke: 3 replicas, seeded kill + drops, zero hangs.
+
+Drives the deterministic in-process cluster scenario of
+``benchmarks/bench_chaos.py`` (the ``cluster_chaos`` composite: one replica
+SIGKILLed mid-checkpoint-segment, seeded message drops) and asserts the
+hard contracts of docs/fault-tolerance.md "Replicated serving":
+
+* every submitted job completes (``hung_jobs == 0``, ``goodput > 0``);
+* the scheduled replica genuinely died and a peer took its lease over
+  (``takeovers >= 1``) and resumed from the shared checkpoint directory.
+
+``make cluster-smoke`` (CI job ``cluster``) runs this after the cluster
+test suite.
+"""
+
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT))          # the benchmarks package
+sys.path.insert(0, str(ROOT / "src"))
+
+
+def main() -> None:
+    from benchmarks.bench_chaos import _cluster_scenario
+
+    out = _cluster_scenario(quick=True)
+    assert out["hung_jobs"] == 0, out
+    assert out["goodput_jobs_per_s"] > 0, out
+    assert list(out["dead_replicas"]) == ["r0"], out
+    assert out["takeovers"] >= 1, out
+    assert out["completed"] == out["n_jobs"], out
+    print(f"cluster smoke OK: {out['n_jobs']} jobs on "
+          f"{out['n_replicas']} replicas in {out['ticks']} ticks, "
+          f"goodput {out['goodput_jobs_per_s']:.1f} jobs/s, "
+          f"kill at tick {out['kill_tick']}, takeover recovered in "
+          f"{out['takeover_recovery_ticks']} ticks, 0 hung jobs")
+
+
+if __name__ == "__main__":
+    main()

@@ -41,8 +41,15 @@ def save_checkpoint(directory: str | pathlib.Path, step: int, tree: PyTree,
     with tempfile.NamedTemporaryFile(dir=directory, suffix=".tmp", delete=False) as f:
         np.savez(f, **payload)
         tmp = pathlib.Path(f.name)
+    # Manifest first, then payload: a concurrent reader (cluster takeover
+    # scans peers' checkpoint dirs) that can see the .npz must also see a
+    # complete .json.  Both renames are atomic within the directory.
+    with tempfile.NamedTemporaryFile("w", dir=directory, suffix=".tmp",
+                                     delete=False) as f:
+        f.write(json.dumps(manifest))
+        tmp_json = pathlib.Path(f.name)
+    tmp_json.rename(directory / f"ckpt_{step:08d}.json")
     tmp.rename(final)
-    (directory / f"ckpt_{step:08d}.json").write_text(json.dumps(manifest))
     return final
 
 

@@ -68,6 +68,7 @@ and retrace events so tests can assert the one-dispatch-per-run contract.
 from __future__ import annotations
 
 import dataclasses
+import json
 import pathlib
 import zlib
 from functools import partial
@@ -1318,6 +1319,37 @@ def checkpoint_run_id(problem, method: MethodConfig, cluster: ClusterModel,
            tuple(problem.X.shape), str(problem.X.dtype), problem.loss,
            float(problem.lam), int(seed), int(num_outer), int(eval_every))
     return f"run_{zlib.crc32(repr(sig).encode()):08x}"
+
+
+def checkpoint_manifest(checkpoint_dir, run_id: str) -> dict | None:
+    """The latest durable snapshot manifest of run ``run_id``, or ``None``.
+
+    The cluster takeover path (:mod:`repro.serve.cluster`): a surviving
+    replica inspecting a dead peer's progress must learn the resume point
+    WITHOUT deserializing the array payload -- it only needs to know whether
+    re-running :func:`run_lockstep_checkpointed` with the same arguments
+    will resume rather than restart.  Reads only the json sidecar, which
+    :func:`repro.checkpoint.checkpoint.save_checkpoint` makes durable
+    *before* the ``.npz`` becomes visible, so any round this returns is
+    loadable.  Returns ``{"run", "round", "seed", "num_outer",
+    "eval_every", "sim_time", "path"}``; ``None`` when no snapshot exists
+    (takeover then restarts the run from round 0 -- still bit-identical,
+    just slower)."""
+    from repro.checkpoint import checkpoint as ckpt_lib
+
+    cdir = pathlib.Path(checkpoint_dir) / run_id
+    latest = ckpt_lib.latest_step(cdir)
+    if latest is None:
+        return None
+    try:
+        manifest = json.loads((cdir / f"ckpt_{latest:08d}.json").read_text())
+    except (OSError, ValueError):
+        return None
+    extra = dict(manifest.get("extra", {}))
+    extra.setdefault("run", run_id)
+    extra.setdefault("round", int(manifest.get("step", latest)))
+    extra["path"] = str(cdir)
+    return extra
 
 
 def run_lockstep_checkpointed(problem, method: MethodConfig,

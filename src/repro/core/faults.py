@@ -53,11 +53,40 @@ Registry entries:
   build a fresh instance per service run; reproducible from ``seed`` +
   submission order alone).
 
+**The network-fault family** (the cluster-transport seam,
+:mod:`repro.serve.cluster`): replicated serving moves messages -- job
+records, heartbeats, result records -- between processes through a shared
+cluster directory, and these entries decide each message's fate
+(:meth:`FaultModel.message_fate`) and each replica's fate
+(:meth:`FaultModel.replica_fate` / :meth:`FaultModel.segment_fate`)
+deterministically, so every cross-process chaos scenario replays exactly:
+
+* ``net_drop``      -- each selected message is dropped (never written);
+  senders re-send, so progress relies on at-least-once retry + idempotent
+  delivery, which is exactly what the cluster tests pin.
+* ``net_duplicate`` -- each selected message is delivered twice; receivers
+  must dedupe (exactly-once via idempotent job keys).
+* ``net_reorder``   -- each selected message is held for one transport tick,
+  so the NEXT message overtakes it.
+* ``net_delay``     -- each selected message is held for ``ticks`` transport
+  ticks before delivery.
+* ``net_partition`` -- the named replica is unreachable (reads nothing,
+  its writes are dropped) for a tick window.
+* ``replica_kill``  -- the named replica dies abruptly: after ``after_steps``
+  scheduler steps, or mid-run at checkpoint-segment ``at_segment`` (a true
+  SIGKILL in subprocess replicas; an uncatchable control-flow kill
+  in-process).  Leases and heartbeats are left behind un-released -- crash
+  semantics, which is the point.
+* ``cluster_chaos`` -- the pinned composite the cluster bench and
+  ``make cluster-smoke`` drive: one replica killed + seeded message drop.
+
 Determinism: models never consult wall-clock or global RNG state -- every
 decision is a pure function of ``(seed, key, attempt)`` (plus an explicit
 per-instance dispatch counter for ``chaos``), with key identity reduced via
 ``zlib.crc32`` (Python's ``hash()`` is salted per process and would break
-cross-run reproducibility).
+cross-run reproducibility).  Network-fault decisions are keyed on
+``(seed, message kind, message key, send sequence number)`` so a re-sent
+message is a NEW draw -- a dropped result is not dropped forever.
 
 Extending: subclass :class:`FaultModel`, decorate with
 :func:`register_fault`, accept parameters as JSON-scalar keyword arguments
@@ -101,6 +130,16 @@ class CompileFailureError(InjectedFault):
     retrying the same key can never help (persistent)."""
 
     transient = False
+
+
+class ReplicaKilled(BaseException):
+    """The in-process analogue of SIGKILL for a cluster replica.
+
+    Deliberately a ``BaseException``: nothing in the serve stack's typed
+    recovery machinery may catch, retry, or convert it -- a killed replica
+    writes no result, releases no lease, and says no goodbye, exactly like
+    a process that took a real SIGKILL.  Subprocess replicas take the real
+    signal instead (:mod:`repro.serve.cluster`)."""
 
 
 # ---------------------------------------------------------------------------
@@ -178,6 +217,33 @@ class FaultModel:
         """Cell indices of batch ``key`` whose gamma is replaced by NaN.
         Attempt-stable by contract (no ``attempt`` argument on purpose)."""
         return ()
+
+    # -- the cluster-transport hooks (replicated serving) ------------------
+
+    def message_fate(self, kind: str, key, seq: int) -> tuple[int, int]:
+        """``(copies, delay_ticks)`` for one cluster-transport send.
+
+        ``kind`` is the message class (``"job"``/``"result"``/
+        ``"heartbeat"``), ``key`` the message identity (job key or replica
+        id), ``seq`` the sender's per-transport send counter -- so a RE-sent
+        message is a fresh draw.  ``copies=0`` drops the message, ``2``
+        duplicates it; ``delay_ticks > 0`` holds delivery for that many
+        subsequent transport ticks (``1`` lets the next message overtake:
+        reordering).  Default: deliver one copy now."""
+        return (1, 0)
+
+    def replica_fate(self, replica: str, tick: int) -> str:
+        """``"ok"`` | ``"partitioned"`` | ``"killed"`` for one replica at
+        one scheduler tick.  Partitioned replicas read nothing and their
+        sends are dropped; killed replicas stop abruptly (no lease release,
+        no final heartbeat)."""
+        return "ok"
+
+    def segment_fate(self, replica: str, start_round: int) -> bool:
+        """True iff ``replica`` must die at the checkpoint segment starting
+        at ``start_round`` -- the mid-run kill hook (the previous segment's
+        snapshot is already durable when this fires)."""
+        return False
 
     # -- spec round-trip ---------------------------------------------------
 
@@ -349,3 +415,205 @@ class ChaosFault(FaultModel):
     def params(self):
         return {**super().params(), "delay_s": self.delay_s,
                 "poison": self.poison}
+
+
+# ---------------------------------------------------------------------------
+# The network-fault family (cluster-transport seam).
+# ---------------------------------------------------------------------------
+
+#: Message kinds the cluster transport routes; the ``kinds`` parameter of
+#: the per-message entries is a comma-joined subset of these.
+MESSAGE_KINDS = ("job", "result", "heartbeat")
+
+
+class _PerMessageFault(FaultModel):
+    """Shared machinery: select messages at ``rate`` over ``kinds``.
+
+    Selection is a pure function of ``(seed, kind, key, seq)`` -- the send
+    SEQUENCE enters the draw, so a retried message is a fresh coin flip and
+    at-least-once senders always make progress eventually."""
+
+    def __init__(self, *, seed: int = 0, rate: float = 0.5,
+                 kinds: str = "job,result,heartbeat"):
+        super().__init__(seed=seed)
+        if not 0.0 <= rate <= 1.0:
+            raise ValueError(f"rate must be in [0, 1], got {rate}")
+        self.rate = float(rate)
+        self.kinds = str(kinds)
+        parsed = tuple(k.strip() for k in self.kinds.split(",") if k.strip())
+        unknown = [k for k in parsed if k not in MESSAGE_KINDS]
+        if unknown:
+            raise ValueError(
+                f"unknown message kinds {unknown}; known: {MESSAGE_KINDS}")
+        self._kinds = frozenset(parsed)
+
+    def _selected(self, kind: str, key, seq: int) -> bool:
+        if kind not in self._kinds or self.rate == 0.0:
+            return False
+        if self.rate >= 1.0:
+            return True
+        rng = np.random.default_rng(
+            [self.seed, key_digest(kind), key_digest(key), int(seq)])
+        return bool(rng.random() < self.rate)
+
+    def params(self):
+        return {**super().params(), "rate": self.rate, "kinds": self.kinds}
+
+
+@register_fault("net_drop")
+class NetDropFault(_PerMessageFault):
+    """Selected messages are dropped: never written to the cluster dir.
+    Progress then depends on at-least-once re-send + idempotent delivery."""
+
+    def message_fate(self, kind, key, seq):
+        return (0, 0) if self._selected(kind, key, seq) else (1, 0)
+
+
+@register_fault("net_duplicate")
+class NetDuplicateFault(_PerMessageFault):
+    """Selected messages are delivered TWICE; receivers must dedupe
+    (exactly-once delivery via idempotent job keys)."""
+
+    def message_fate(self, kind, key, seq):
+        return (2, 0) if self._selected(kind, key, seq) else (1, 0)
+
+
+@register_fault("net_reorder")
+class NetReorderFault(_PerMessageFault):
+    """Selected messages are held one transport tick, so the next message
+    overtakes them -- pairwise reordering."""
+
+    def message_fate(self, kind, key, seq):
+        return (1, 1) if self._selected(kind, key, seq) else (1, 0)
+
+
+@register_fault("net_delay")
+class NetDelayFault(_PerMessageFault):
+    """Selected messages are held for ``ticks`` transport ticks."""
+
+    def __init__(self, *, seed: int = 0, rate: float = 1.0, ticks: int = 2,
+                 kinds: str = "job,result,heartbeat"):
+        super().__init__(seed=seed, rate=rate, kinds=kinds)
+        if ticks < 1:
+            raise ValueError(f"ticks must be >= 1, got {ticks}")
+        self.ticks = int(ticks)
+
+    def message_fate(self, kind, key, seq):
+        return ((1, self.ticks) if self._selected(kind, key, seq)
+                else (1, 0))
+
+    def params(self):
+        return {**super().params(), "ticks": self.ticks}
+
+
+@register_fault("net_partition")
+class NetPartitionFault(FaultModel):
+    """Replica ``replica`` is unreachable for scheduler ticks
+    ``[start_tick, start_tick + duration)``: it reads nothing and its sends
+    are dropped.  ``duration=None`` partitions it forever (the
+    no-hung-handles regime: consumers must still observe bounded, typed
+    outcomes)."""
+
+    def __init__(self, *, seed: int = 0, replica: str = "",
+                 start_tick: int = 0, duration: int | None = None):
+        super().__init__(seed=seed)
+        if not replica:
+            raise ValueError("net_partition needs replica=<replica id>")
+        if start_tick < 0:
+            raise ValueError(f"start_tick must be >= 0, got {start_tick}")
+        if duration is not None and duration < 1:
+            raise ValueError(f"duration must be >= 1 or None, got {duration}")
+        self.replica = str(replica)
+        self.start_tick = int(start_tick)
+        self.duration = None if duration is None else int(duration)
+
+    def replica_fate(self, replica, tick):
+        if replica != self.replica or tick < self.start_tick:
+            return "ok"
+        if self.duration is not None and tick >= self.start_tick + self.duration:
+            return "ok"
+        return "partitioned"
+
+    def params(self):
+        return {**super().params(), "replica": self.replica,
+                "start_tick": self.start_tick, "duration": self.duration}
+
+
+@register_fault("replica_kill")
+class ReplicaKillFault(FaultModel):
+    """Replica ``replica`` dies abruptly -- crash semantics: no lease
+    release, no final heartbeat.  ``after_steps=N`` kills it at its N-th
+    scheduler step; ``at_segment=R`` kills it mid-run, at the checkpoint
+    segment starting at round R (the previous snapshot is already durable).
+    Subprocess replicas take a real SIGKILL; in-process replicas raise the
+    uncatchable :class:`ReplicaKilled`."""
+
+    def __init__(self, *, seed: int = 0, replica: str = "",
+                 after_steps: int | None = None,
+                 at_segment: int | None = None):
+        super().__init__(seed=seed)
+        if not replica:
+            raise ValueError("replica_kill needs replica=<replica id>")
+        if after_steps is None and at_segment is None:
+            raise ValueError(
+                "replica_kill needs after_steps and/or at_segment")
+        if after_steps is not None and after_steps < 0:
+            raise ValueError(f"after_steps must be >= 0, got {after_steps}")
+        if at_segment is not None and at_segment < 1:
+            raise ValueError(
+                f"at_segment must be >= 1 (segment 0's kill would precede "
+                f"any checkpoint), got {at_segment}")
+        self.replica = str(replica)
+        self.after_steps = None if after_steps is None else int(after_steps)
+        self.at_segment = None if at_segment is None else int(at_segment)
+
+    def replica_fate(self, replica, tick):
+        if (replica == self.replica and self.after_steps is not None
+                and tick >= self.after_steps):
+            return "killed"
+        return "ok"
+
+    def segment_fate(self, replica, start_round):
+        return (replica == self.replica and self.at_segment is not None
+                and start_round >= self.at_segment)
+
+    def params(self):
+        return {**super().params(), "replica": self.replica,
+                "after_steps": self.after_steps,
+                "at_segment": self.at_segment}
+
+
+@register_fault("cluster_chaos")
+class ClusterChaosFault(FaultModel):
+    """The pinned composite the cluster bench and ``make cluster-smoke``
+    drive: ``kill_replica`` dies (mid-segment if ``at_segment`` is set,
+    else at step ``after_steps``) while every message is dropped at
+    ``drop_rate``.  Deterministic: delegates to :class:`ReplicaKillFault`
+    and :class:`NetDropFault` built from the same seed."""
+
+    def __init__(self, *, seed: int = 0, kill_replica: str = "",
+                 after_steps: int | None = None,
+                 at_segment: int | None = None, drop_rate: float = 0.2):
+        super().__init__(seed=seed)
+        self._kill = ReplicaKillFault(seed=seed, replica=kill_replica,
+                                      after_steps=after_steps,
+                                      at_segment=at_segment)
+        self._drop = NetDropFault(seed=seed, rate=drop_rate)
+        self.kill_replica = self._kill.replica
+        self.after_steps = self._kill.after_steps
+        self.at_segment = self._kill.at_segment
+        self.drop_rate = self._drop.rate
+
+    def message_fate(self, kind, key, seq):
+        return self._drop.message_fate(kind, key, seq)
+
+    def replica_fate(self, replica, tick):
+        return self._kill.replica_fate(replica, tick)
+
+    def segment_fate(self, replica, start_round):
+        return self._kill.segment_fate(replica, start_round)
+
+    def params(self):
+        return {**super().params(), "kill_replica": self.kill_replica,
+                "after_steps": self.after_steps,
+                "at_segment": self.at_segment, "drop_rate": self.drop_rate}

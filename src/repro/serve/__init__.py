@@ -17,22 +17,54 @@ per-cell -- while checkpointed runs survive a service kill and resume
 bit-identically.  Fault schedules come from the :mod:`repro.core.faults`
 registry; the knobs live in :class:`~repro.serve.recovery.RecoveryPolicy`.
 
+The serve layer also scales PAST one process (PR 10): N replicas coordinate
+through a shared **cluster directory** -- mutually-exclusive lease files own
+jobs, heartbeats detect dead replicas, and survivors take over a dead
+owner's lease and resume its checkpointed run bit-identically
+(:mod:`repro.serve.cluster` + :mod:`repro.serve.leases`; spawn replicas with
+``python -m repro serve --replica-of <cluster-dir>``).  Cross-process chaos
+replays exactly through the seeded network-fault family in
+:mod:`repro.core.faults` (drop/duplicate/reorder/delay/partition/kill).
+
 Layout: :mod:`~repro.serve.service` (admission + dispatch + recovery),
 :mod:`~repro.serve.coalesce` (batch keys + fairness policy),
 :mod:`~repro.serve.streams` (per-tenant demux/replay),
 :mod:`~repro.serve.recovery` (typed errors, backoff, breaker, watchdog),
-:mod:`~repro.serve.cache` (compile-cache key mirror + counters),
-:mod:`~repro.serve.http` (stdlib HTTP front end).  docs/serving.md and
-docs/fault-tolerance.md are the executed guides.
+:mod:`~repro.serve.cache` (compile-cache mirror + TTL/LRU result cache),
+:mod:`~repro.serve.clock` (the injectable clock every timing decision
+reads), :mod:`~repro.serve.leases` (filesystem leases + heartbeats),
+:mod:`~repro.serve.cluster` (replicas, transport, client, takeover),
+:mod:`~repro.serve.http` (stdlib HTTP front end + replica CLI).
+docs/serving.md and docs/fault-tolerance.md are the executed guides.
 """
 
-from repro.serve.cache import CompileCache, sweep_cache_key  # noqa: F401
+from repro.serve.cache import (  # noqa: F401
+    CompileCache,
+    TTLCache,
+    result_cache_key,
+    sweep_cache_key,
+)
+from repro.serve.clock import SYSTEM_CLOCK, Clock, ManualClock  # noqa: F401
+from repro.serve.cluster import (  # noqa: F401
+    ClusterClient,
+    ClusterJobError,
+    ClusterReplica,
+    ClusterTransport,
+    ClusterUnavailableError,
+    job_key,
+    run_cluster,
+)
+from repro.serve.leases import LeaseManager  # noqa: F401
 from repro.serve.coalesce import (  # noqa: F401
     CoalescePolicy,
     batch_key,
     form_batch,
 )
-from repro.serve.http import event_to_dict, serve_http  # noqa: F401
+from repro.serve.http import (  # noqa: F401
+    event_from_dict,
+    event_to_dict,
+    serve_http,
+)
 from repro.serve.recovery import (  # noqa: F401
     CellDivergenceError,
     CircuitBreaker,
@@ -53,18 +85,32 @@ __all__ = [
     "CellDivergenceError",
     "CircuitBreaker",
     "CircuitOpenError",
+    "Clock",
+    "ClusterClient",
+    "ClusterJobError",
+    "ClusterReplica",
+    "ClusterTransport",
+    "ClusterUnavailableError",
     "CoalescePolicy",
     "CompileCache",
     "ExperimentService",
     "JobHandle",
     "JobTimeoutError",
+    "LeaseManager",
+    "ManualClock",
     "RecoveryPolicy",
+    "SYSTEM_CLOCK",
     "ServiceStoppedError",
     "SpecValidationError",
+    "TTLCache",
     "batch_key",
+    "event_from_dict",
     "event_to_dict",
     "form_batch",
+    "job_key",
     "replay_events",
+    "result_cache_key",
+    "run_cluster",
     "serve_http",
     "sweep_cache_key",
 ]

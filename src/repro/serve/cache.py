@@ -1,28 +1,43 @@
-"""Warm compiled-sweep cache accounting, keyed like ``jax.jit``'s own cache.
+"""Service-side caches: compile-key mirror, result cache, dataset cache.
 
-The actual compiled executables live in ``jax.jit``'s process-level cache on
-:func:`repro.api.sweep._sweep_scan` / ``_lag_sweep_scan`` -- a long-lived
-service keeps them warm for free.  What jit does NOT give a service is
-*observability*: whether an incoming batch will hit a warm executable or pay
-a fresh trace+compile, and therefore what the fleet's compile amortization
-actually is.  :class:`CompileCache` mirrors jit's cache key -- ``(static
-arguments, operand aval (shape, dtype) tuples)``, the exact construction the
-PR-6 trace-time contract ``check_sweep_bucket_sharing`` pins
-(:mod:`repro.analysis.contracts`) -- and counts hits/misses per key.
-
-The mirror is honest because ``run_sweep_cells`` routes every batch through
-the same pow2 padding helpers the key derivation uses: two batches map to
-the same :func:`sweep_cache_key` if and only if jit reuses one executable
+**Compile mirror.** The actual compiled executables live in ``jax.jit``'s
+process-level cache on :func:`repro.api.sweep._sweep_scan` /
+``_lag_sweep_scan`` -- a long-lived service keeps them warm for free.  What
+jit does NOT give a service is *observability*: whether an incoming batch
+will hit a warm executable or pay a fresh trace+compile, and therefore what
+the fleet's compile amortization actually is.  :class:`CompileCache` mirrors
+jit's cache key -- ``(static arguments, operand aval (shape, dtype)
+tuples)``, the exact construction the PR-6 trace-time contract
+``check_sweep_bucket_sharing`` pins (:mod:`repro.analysis.contracts`) -- and
+counts hits/misses per key.  The mirror is honest because
+``run_sweep_cells`` routes every batch through the same pow2 padding helpers
+the key derivation uses: two batches map to the same
+:func:`sweep_cache_key` if and only if jit reuses one executable
 (cross-checked against ``executor.STATS`` trace counters in
 tests/test_serve.py).
+
+**Result cache.** Every run here is a pure function of its spec: identical
+``(problem, cluster, method entry, seed, stop targets, executor)``
+submissions replay the identical event stream.  :class:`TTLCache` keyed by
+:func:`result_cache_key` therefore serves repeats without dispatching --
+bit-identical by construction, since what is cached IS the delivered
+``(events, result)``.  Entries age out after ``ttl_s`` on the service's
+injectable clock and the least-recently-USED entry is evicted past
+``max_entries`` (an LRU, not FIFO: a hot template stays warm under churn).
+The same class bounds the memoized problem datasets (the build is
+deterministic, so eviction only costs a rebuild).  Hit/evict counters
+surface through ``ExperimentService.stats()``.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import threading
+from collections import OrderedDict
 
 from repro.core import compress as compress_lib
 from repro.core import engine, executor
+from repro.serve.clock import SYSTEM_CLOCK, Clock
 
 
 def _bucket(n: int) -> int:
@@ -119,3 +134,107 @@ def warm_trace_counters() -> dict:
     return {k: executor.STATS[k] for k in
             ("sweep_calls", "sweep_traces", "sweep_lag_calls",
              "sweep_lag_traces")}
+
+
+# ---------------------------------------------------------------------------
+# TTL + LRU value cache (results, memoized datasets).
+# ---------------------------------------------------------------------------
+
+
+def result_cache_key(spec, entry) -> tuple:
+    """The full run identity a delivered ``(events, result)`` depends on.
+
+    Two submissions with equal keys replay bit-identical streams (runs are
+    pure functions of the spec; the batch-vs-solo parity pin in
+    tests/test_serve.py is what makes lane-independence true), so the
+    result cache may serve one from the other -- across tenants, which do
+    NOT enter the key on purpose."""
+    return (
+        spec.problem.kind,
+        repr(sorted(spec.problem.params.items())),
+        repr(dataclasses.asdict(spec.cluster)),
+        repr(dataclasses.asdict(entry.config)),
+        int(entry.num_outer), int(spec.seed), int(spec.eval_every),
+        spec.target_gap, spec.time_budget, spec.executor,
+        spec.checkpoint_every,
+    )
+
+
+class TTLCache:
+    """Thread-safe bounded cache: TTL expiry + least-recently-USED eviction.
+
+    ``max_entries=0`` disables the cache entirely (every ``get`` misses,
+    ``put`` is a no-op) -- the service's default for RESULTS, because a
+    silent result cache would invalidate dispatch-counter pins in existing
+    tests and benches; callers opt in.  ``ttl_s=None`` means entries never
+    expire by age.  Time comes from the injected :class:`Clock`, so expiry
+    is testable with a ``ManualClock``.
+    """
+
+    def __init__(self, *, max_entries: int, ttl_s: float | None = None,
+                 clock: Clock | None = None):
+        if max_entries < 0:
+            raise ValueError(f"max_entries must be >= 0, got {max_entries}")
+        if ttl_s is not None and ttl_s <= 0:
+            raise ValueError(f"ttl_s must be positive or None, got {ttl_s}")
+        self.max_entries = int(max_entries)
+        self.ttl_s = None if ttl_s is None else float(ttl_s)
+        self.clock = clock or SYSTEM_CLOCK
+        self._lock = threading.Lock()
+        self._entries: OrderedDict = OrderedDict()  # key -> (value, stored_at)
+        self.hits = 0
+        self.misses = 0
+        self.evicted_ttl = 0
+        self.evicted_lru = 0
+
+    def _expired(self, stored_at: float, now: float) -> bool:
+        return self.ttl_s is not None and now - stored_at >= self.ttl_s
+
+    def get(self, key) -> tuple[bool, object]:
+        """``(hit, value)``; a hit refreshes the key's LRU position."""
+        with self._lock:
+            entry = self._entries.get(key)
+            if entry is not None and not self._expired(entry[1],
+                                                       self.clock.monotonic()):
+                self._entries.move_to_end(key)
+                self.hits += 1
+                return True, entry[0]
+            if entry is not None:  # present but stale
+                del self._entries[key]
+                self.evicted_ttl += 1
+            self.misses += 1
+            return False, None
+
+    def put(self, key, value) -> None:
+        if self.max_entries == 0:
+            return
+        with self._lock:
+            now = self.clock.monotonic()
+            self._entries[key] = (value, now)
+            self._entries.move_to_end(key)
+            stale = [k for k, (_, at) in self._entries.items()
+                     if self._expired(at, now)]
+            for k in stale:
+                del self._entries[k]
+                self.evicted_ttl += 1
+            while len(self._entries) > self.max_entries:
+                self._entries.popitem(last=False)  # least recently used
+                self.evicted_lru += 1
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+    def stats(self) -> dict:
+        with self._lock:
+            total = self.hits + self.misses
+            return {
+                "entries": len(self._entries),
+                "max_entries": self.max_entries,
+                "ttl_s": self.ttl_s,
+                "hits": self.hits,
+                "misses": self.misses,
+                "hit_rate": self.hits / total if total else 0.0,
+                "evicted_ttl": self.evicted_ttl,
+                "evicted_lru": self.evicted_lru,
+            }

@@ -13,8 +13,15 @@
 * ``GET /stats``  -> the service counters: coalesce factor, compile-cache
   hits/misses, retry/bisect/breaker accounting, per-tenant in-flight depth,
   device inventory.
-* ``GET /health`` -> liveness: dispatcher thread state, queue depths,
-  open circuit breakers (``503`` when the service is dead).
+* ``GET /health`` -> liveness: dispatcher thread state, queue depths, the
+  full per-batch-key circuit-breaker state table, and -- on a cluster
+  replica -- membership, lease table, and heartbeat ages (``503`` when the
+  service is dead).  docs/serving.md documents the JSON shape.
+
+``python -m repro serve --replica-of <cluster-dir>`` runs a **cluster
+replica** instead of binding HTTP: the process joins the shared-directory
+serve cluster of :mod:`repro.serve.cluster` and executes jobs from its
+``jobs/`` queue under lease ownership (docs/fault-tolerance.md).
 
 **Error contract** (the ``ERROR_STATUS`` table): every failed request gets a
 structured JSON body ``{"error_type": <class name>, "message": str,
@@ -82,6 +89,19 @@ def error_body(error: BaseException, *, job_id: str | None = None) -> tuple:
 def event_to_dict(event) -> dict:
     """One typed event as a JSON-able dict (``type`` tag + its fields)."""
     return {"type": _EVENT_TYPES[type(event)], **dataclasses.asdict(event)}
+
+
+_EVENT_CLASSES = {name: cls for cls, name in _EVENT_TYPES.items()}
+
+
+def event_from_dict(d: dict):
+    """Inverse of :func:`event_to_dict` -- EXACT, not approximate: every
+    event field is a JSON scalar and Python float repr round-trips, so
+    ``event_from_dict(json.loads(json.dumps(event_to_dict(e)))) == e``.
+    The cluster transport leans on this for bit-identical cross-process
+    result delivery."""
+    d = dict(d)
+    return _EVENT_CLASSES[d.pop("type")](**d)
 
 
 def make_handler(service: ExperimentService):
@@ -194,12 +214,57 @@ def main(argv: list[str] | None = None) -> None:
                          "(chaos testing)")
     ap.add_argument("--fault-params", default="{}",
                     help="JSON kwargs for --fault-model")
+    ap.add_argument("--replica-of", default=None, metavar="CLUSTER_DIR",
+                    help="run as one replica of the shared-directory serve "
+                         "cluster at CLUSTER_DIR instead of binding HTTP "
+                         "(see docs/fault-tolerance.md, 'Replicated "
+                         "serving')")
+    ap.add_argument("--replica-id", default=None,
+                    help="this replica's id in the cluster (default: "
+                         "replica-<pid>)")
+    ap.add_argument("--step-interval", type=float, default=0.2,
+                    help="seconds between replica scheduler ticks "
+                         "(--replica-of mode)")
+    ap.add_argument("--lease-ttl", type=float, default=10.0,
+                    help="seconds without a heartbeat before a replica is "
+                         "presumed dead and its leases become stealable")
     args = ap.parse_args(argv)
 
     fault = None
     if args.fault_model is not None:
         fault = fault_from_spec({"fault_model": args.fault_model,
                                  "fault_params": json.loads(args.fault_params)})
+
+    if args.replica_of is not None:
+        # Replica mode: join the filesystem cluster and serve jobs from its
+        # shared directory.  Faults apply at the cluster seam, and a
+        # replica_kill schedule takes a REAL self-SIGKILL here -- the
+        # subprocess analogue of the in-process ReplicaKilled.
+        import os as _os
+
+        from repro.serve.cluster import ClusterReplica
+
+        replica_id = args.replica_id or f"replica-{_os.getpid()}"
+        replica = ClusterReplica(
+            args.replica_of, replica_id, fault=fault,
+            lease_ttl_s=args.lease_ttl, subprocess_kill=True,
+            service_kwargs=dict(
+                policy=CoalescePolicy(
+                    max_batch=args.max_batch, max_wait_s=args.max_wait,
+                    max_tenant_depth=args.max_tenant_depth, batch=args.batch,
+                    shard=args.shard),
+                recovery=RecoveryPolicy(
+                    batch_deadline_s=args.batch_deadline,
+                    solo_deadline_s=args.solo_deadline)))
+        print(f"cluster replica {replica_id} serving {args.replica_of} "
+              f"(lease ttl {args.lease_ttl:g}s, "
+              f"tick every {args.step_interval:g}s)", flush=True)
+        try:
+            replica.run_forever(interval_s=args.step_interval)
+        except KeyboardInterrupt:
+            pass
+        return
+
     service = ExperimentService(
         CoalescePolicy(
             max_batch=args.max_batch, max_wait_s=args.max_wait,

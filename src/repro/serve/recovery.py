@@ -21,17 +21,20 @@ self-healing dispatch path:
 Everything here is deterministic given the policy seed and the sequence of
 calls -- jitter comes from ``numpy`` generators keyed on
 ``(seed, key digest, attempt)``, never from global RNG state or wall-clock.
+The one time-dependent component (breaker cooldown) reads an injectable
+:class:`repro.serve.clock.Clock`, so cooldown behavior is testable with a
+``ManualClock`` instead of real sleeps.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import threading
-import time  # analysis: host-ok (backoff sleeps and breaker cooldowns are host-side)
 
 import numpy as np
 
 from ..core.faults import key_digest
+from .clock import SYSTEM_CLOCK, Clock
 
 # ---------------------------------------------------------------------------
 # Typed errors.  HTTP status mapping lives in serve/http.py.
@@ -135,9 +138,11 @@ class CircuitBreaker:
     closed key once it accumulates ``threshold`` consecutive failures.
     """
 
-    def __init__(self, threshold: int, cooldown_s: float):
+    def __init__(self, threshold: int, cooldown_s: float,
+                 clock: Clock | None = None):
         self.threshold = int(threshold)
         self.cooldown_s = float(cooldown_s)
+        self.clock = clock or SYSTEM_CLOCK
         self._lock = threading.Lock()
         # key -> [state, consecutive_failures, opened_at]
         self._keys: dict = {}
@@ -149,7 +154,7 @@ class CircuitBreaker:
                 return True
             if st[0] == "half_open":
                 return False  # a probe is already in flight
-            if time.monotonic() - st[2] >= self.cooldown_s:
+            if self.clock.monotonic() - st[2] >= self.cooldown_s:
                 st[0] = "half_open"
                 return True
             return False
@@ -164,7 +169,7 @@ class CircuitBreaker:
             st[1] += 1
             if st[0] == "half_open" or st[1] >= self.threshold:
                 st[0] = "open"
-                st[2] = time.monotonic()
+                st[2] = self.clock.monotonic()
 
     def state(self, key) -> str:
         with self._lock:
@@ -179,6 +184,23 @@ class CircuitBreaker:
                                if st[0] == "open"),
                 "half_open": sorted(repr(k) for k, st in self._keys.items()
                                     if st[0] == "half_open"),
+            }
+
+    def states(self) -> dict:
+        """JSON-safe FULL per-key state table for ``GET /health``: every
+        tracked batch key with its state, consecutive-failure count, and --
+        for open keys -- how long the circuit has been open on this
+        breaker's clock."""
+        with self._lock:
+            now = self.clock.monotonic()
+            return {
+                repr(k): {
+                    "state": st[0],
+                    "consecutive_failures": st[1],
+                    "open_for_s": (round(now - st[2], 6)
+                                   if st[0] == "open" else None),
+                }
+                for k, st in sorted(self._keys.items(), key=lambda kv: repr(kv[0]))
             }
 
 

@@ -66,7 +66,6 @@ import itertools
 import json
 import math
 import threading
-import time  # analysis: host-ok
 from typing import Mapping
 
 import numpy as np
@@ -78,7 +77,13 @@ from repro.api.spec import ExperimentSpec
 from repro.core import executor as executor_lib
 from repro.core.faults import FaultModel, NoFault
 from repro.launch import mesh as mesh_lib
-from repro.serve.cache import CompileCache, sweep_cache_key
+from repro.serve.cache import (
+    CompileCache,
+    TTLCache,
+    result_cache_key,
+    sweep_cache_key,
+)
+from repro.serve.clock import SYSTEM_CLOCK, Clock
 from repro.serve.coalesce import CoalescePolicy, Request, batch_key, form_batch
 from repro.serve.recovery import (
     CellDivergenceError,
@@ -110,14 +115,28 @@ class ExperimentService:
     def __init__(self, policy: CoalescePolicy | None = None, *,
                  recovery: RecoveryPolicy | None = None,
                  fault: FaultModel | None = None,
-                 checkpoint_dir=None):
+                 checkpoint_dir=None, clock: Clock | None = None,
+                 result_cache_entries: int = 0,
+                 result_cache_ttl_s: float | None = None,
+                 problem_cache_entries: int = 32,
+                 problem_cache_ttl_s: float | None = None):
         self.policy = policy or CoalescePolicy()
         self.recovery = recovery or RecoveryPolicy()
         self.fault = fault or NoFault()
         self.checkpoint_dir = checkpoint_dir
+        self.clock = clock or SYSTEM_CLOCK
         self.compile_cache = CompileCache()
+        # Result cache is OPT-IN (entries=0 disables): serving a repeat from
+        # cache skips the dispatch entirely, which is the point -- but would
+        # silently invalidate dispatch/trace counter pins in callers that
+        # resubmit identical specs to measure warm-compile behavior.
+        self.result_cache = TTLCache(max_entries=result_cache_entries,
+                                     ttl_s=result_cache_ttl_s,
+                                     clock=self.clock)
         self.breaker = CircuitBreaker(self.recovery.breaker_threshold,
-                                      self.recovery.breaker_cooldown_s)
+                                      self.recovery.breaker_cooldown_s,
+                                      clock=self.clock)
+        self.cluster_health = None  # set by repro.serve.cluster.ClusterReplica
         self._lock = threading.Condition()
         self._pending: dict[tuple, list[Request]] = {}  # batch_key -> queue
         self._solo: list[Request] = []
@@ -125,7 +144,9 @@ class ExperimentService:
         self._inflight: dict[str, int] = {}  # tenant -> unfinished jobs
         self._jobs: dict[str, JobHandle] = {}
         self._order = itertools.count()
-        self._problems: dict[tuple, object] = {}  # memoized datasets
+        self._problems = TTLCache(max_entries=problem_cache_entries,
+                                  ttl_s=problem_cache_ttl_s,
+                                  clock=self.clock)  # memoized datasets
         self._thread: threading.Thread | None = None
         self._stopping = False
         self._dead: BaseException | None = None  # the teardown poison-pill
@@ -136,6 +157,8 @@ class ExperimentService:
             # self-healing accounting (PR 9)
             "retries": 0, "bisects": 0, "quarantined": 0, "timeouts": 0,
             "requeued_solo": 0, "masked_cells": 0, "breaker_rejected": 0,
+            # result-cache accounting (PR 10)
+            "result_cache_hits": 0,
         }
 
     # -- admission ---------------------------------------------------------
@@ -181,6 +204,25 @@ class ExperimentService:
                 f"has no checkpoint_dir; construct "
                 f"ExperimentService(checkpoint_dir=...)")
 
+        if self.result_cache.max_entries:
+            hit, cached = self.result_cache.get(result_cache_key(spec, entry))
+            if hit:
+                # Serve the repeat without dispatching: what was cached IS a
+                # previously delivered (events, result) pair, so the replay
+                # is bit-identical by construction.  No inflight accounting
+                # -- the job is already finished when submit returns.
+                with self._lock:
+                    order = next(self._order)
+                    handle = JobHandle(f"job-{order}", tenant)
+                    self._jobs[handle.job_id] = handle
+                    self.counters["submitted"] += 1
+                    self.counters["result_cache_hits"] += 1
+                events, result = cached
+                for event in events:
+                    handle._push(event)
+                handle._finish(result)
+                return handle
+
         with self._lock:
             if (self._inflight.get(tenant, 0)
                     >= self.policy.max_tenant_depth):
@@ -198,7 +240,7 @@ class ExperimentService:
             if ok:
                 key = batch_key(spec, entry, policy=self.policy)
                 self._pending.setdefault(key, []).append(req)
-                self._group_opened.setdefault(key, time.monotonic())
+                self._group_opened.setdefault(key, self.clock.monotonic())
             else:
                 self._solo.append(req)
             self._inflight[tenant] = self._inflight.get(tenant, 0) + 1
@@ -228,9 +270,13 @@ class ExperimentService:
 
     def _problem_for(self, spec: ExperimentSpec):
         key = (spec.problem.kind, tuple(sorted(spec.problem.params.items())))
-        if key not in self._problems:
-            self._problems[key] = spec.problem.build()
-        return self._problems[key]
+        hit, problem = self._problems.get(key)
+        if not hit:
+            # Deterministic build: eviction (TTL or LRU) only costs a
+            # rebuild, never changes what any tenant observes.
+            problem = spec.problem.build()
+            self._problems.put(key, problem)
+        return problem
 
     def _count(self, **deltas: int) -> None:
         with self._lock:
@@ -265,7 +311,7 @@ class ExperimentService:
         attempt = 0
         while True:
             if attempt:
-                time.sleep(backoff_delay(self.recovery, attempt, key))
+                self.clock.sleep(backoff_delay(self.recovery, attempt, key))
                 self._count(retries=1)
 
             def one_attempt(attempt=attempt):
@@ -326,7 +372,10 @@ class ExperimentService:
         self._count(batches=1, batched_requests=len(reqs))
         for r, v, ok in zip(reqs, variants, np.asarray(finite)):
             if ok:
-                deliver(r, v)
+                events, result = deliver(r, v)
+                if self.result_cache.max_entries:
+                    self.result_cache.put(result_cache_key(r.spec, r.entry),
+                                          (events, result))
             else:
                 self._count(failed=1, masked_cells=1)
                 r.handle._fail(CellDivergenceError(
@@ -355,6 +404,7 @@ class ExperimentService:
         """The solo lane: one Session, streamed live into the handle."""
         spec = req.spec
         solo_key = (req.tenant, req.handle.job_id)
+        seen: list = []  # live-streamed events, for the result cache
 
         def drive():
             self.fault.on_dispatch("solo", solo_key, 0)
@@ -373,6 +423,7 @@ class ExperimentService:
                 executor=spec.executor, checkpoint_dir=ckpt_dir,
                 checkpoint_every=ckpt_every, _segment_hook=hook)
             for event in session.events():
+                seen.append(event)
                 req.handle._push(event)
             return session.result()
 
@@ -380,6 +431,9 @@ class ExperimentService:
             result = run_with_deadline(drive, self.recovery.solo_deadline_s,
                                        label=f"solo {req.handle.job_id}")
             req.handle._finish(result)
+            if self.result_cache.max_entries:
+                self.result_cache.put(result_cache_key(spec, req.entry),
+                                      (list(seen), result))
         except Exception as e:  # analysis: fail-fast-ok (delivered to the tenant as the job's typed terminal error)
             req.handle._fail(e)
             self._count(failed=1,
@@ -413,7 +467,7 @@ class ExperimentService:
         remaining = [r for r in reqs if r not in picked]
         if remaining:
             self._pending[key] = remaining
-            self._group_opened[key] = time.monotonic()  # restart the clock
+            self._group_opened[key] = self.clock.monotonic()  # restart the clock
         else:
             del self._pending[key]
             del self._group_opened[key]
@@ -426,7 +480,7 @@ class ExperimentService:
         a batch runs.
         """
         with self._lock:
-            due = self._due_groups(time.monotonic(), flush=flush)
+            due = self._due_groups(self.clock.monotonic(), flush=flush)
             if due:
                 # oldest group first: bounded wait under cross-key load
                 key = min(due, key=lambda k: self._group_opened[k])
@@ -490,7 +544,7 @@ class ExperimentService:
                             oldest = min(self._group_opened.values())
                             timeout = max(0.0,
                                           oldest + self.policy.max_wait_s
-                                          - time.monotonic())
+                                          - self.clock.monotonic())
                         self._lock.wait(timeout=min(timeout,
                                                     self.policy.max_wait_s))
         except BaseException as e:  # analysis: fail-fast-ok (the dispatcher's last act is poisoning every stream with a typed error)
@@ -522,14 +576,20 @@ class ExperimentService:
             solo = len(self._solo)
             dead = self._dead
         alive = self._thread is not None and self._thread.is_alive()
-        return {
+        info = {
             "status": "dead" if dead is not None else "ok",
             "dispatcher_alive": alive,
             "dead_reason": repr(dead) if dead is not None else None,
             "pending_batched": pending,
             "pending_solo": solo,
             "breaker": self.breaker.snapshot(),
+            "breaker_states": self.breaker.states(),
         }
+        if self.cluster_health is not None:
+            # A ClusterReplica wires its membership/lease/heartbeat view in
+            # here so GET /health answers for the replicated deployment too.
+            info["cluster"] = self.cluster_health()
+        return info
 
     def stats(self) -> dict:
         with self._lock:
@@ -548,6 +608,8 @@ class ExperimentService:
             "fault_model": self.fault.fault_name,
             "breaker": self.breaker.snapshot(),
             "compile_cache": self.compile_cache.stats(),
+            "result_cache": self.result_cache.stats(),
+            "problem_cache": self._problems.stats(),
             "trace_counters": _trace_counters(),
             "devices": mesh_lib.device_summary(),
         }

@@ -137,14 +137,18 @@ class JobHandle:
         return self._done.is_set()
 
 
-def deliver(request, variant) -> None:
+def deliver(request, variant):
     """Demux one cell of a finished batch into its request's handle.
 
     Restores the request's OWN method config on the result (the batch ran
     under the shared template; only ``name`` differs -- gamma/sigma_prime
     were per-cell operands) so ``handle.result().method`` round-trips.
+    Returns the delivered ``(events, result)`` pair so the service can feed
+    its result cache with exactly what the tenant observed.
     """
     result = dataclasses.replace(variant.result, method=request.entry.config)
-    for event in replay_events(dataclasses.replace(variant, result=result)):
+    events = replay_events(dataclasses.replace(variant, result=result))
+    for event in events:
         request.handle._push(event)
     request.handle._finish(result)
+    return events, result

@@ -278,11 +278,16 @@ class TestDeadlines:
 
 class TestCircuitBreaker:
     def test_opens_after_threshold_and_fast_fails(self):
+        # Realistic cooldown without wall-clock: the service clock is a
+        # ManualClock that never advances, so the circuit stays open.
+        from repro.serve.clock import ManualClock
+
         svc = ExperimentService(
             _policy(),
             recovery=_recovery(max_attempts=1, max_bisect_depth=0,
-                               breaker_threshold=2, breaker_cooldown_s=1e9),
-            fault=faults.get_fault("compile_failure")())
+                               breaker_threshold=2, breaker_cooldown_s=30.0),
+            fault=faults.get_fault("compile_failure")(),
+            clock=ManualClock())
         for i in range(2):
             h = svc.submit("a", _spec(seed=i))
             svc.drain()
@@ -297,15 +302,22 @@ class TestCircuitBreaker:
         assert svc.stats()["breaker"]["open"]  # visible in /stats
 
     def test_half_open_probe_closes_on_success(self):
+        # The cooldown elapses on an advanced ManualClock, not by passing
+        # 0.0 (pre-PR-10 idiom) or real-sleeping.
+        from repro.serve.clock import ManualClock
+
+        clock = ManualClock()
         svc = ExperimentService(
             _policy(),
             recovery=_recovery(max_attempts=1, max_bisect_depth=0,
-                               breaker_threshold=1, breaker_cooldown_s=0.0),
-            fault=faults.get_fault("compile_failure")())
+                               breaker_threshold=1, breaker_cooldown_s=30.0),
+            fault=faults.get_fault("compile_failure")(), clock=clock)
         h = svc.submit("a", _spec())
         svc.drain()
         with pytest.raises(faults.CompileFailureError):
             h.result(timeout=1.0)
+        assert svc.stats()["breaker"]["open"]  # open until the cooldown
+        clock.advance(30.0)
         # cooldown elapsed; the fault clears; the half-open probe succeeds
         svc.fault = faults.NoFault()
         spec = _spec(seed=1)

@@ -16,7 +16,9 @@ from repro.serve import recovery
 def test_registry_contents_and_errors():
     names = faults.available_faults()
     for expected in ("none", "transient_executor", "worker_crash",
-                     "compile_failure", "nan_poison", "slow_batch", "chaos"):
+                     "compile_failure", "nan_poison", "slow_batch", "chaos",
+                     "net_drop", "net_duplicate", "net_reorder", "net_delay",
+                     "net_partition", "replica_kill", "cluster_chaos"):
         assert expected in names
     assert names == tuple(sorted(names))
     with pytest.raises(ValueError, match="unknown fault model"):
@@ -38,6 +40,20 @@ def test_bad_params_fail_at_construction():
         faults.get_fault("chaos")(poison=-1)
     with pytest.raises(TypeError):
         faults.get_fault("nan_poison")(not_a_param=3)
+    with pytest.raises(ValueError, match="rate"):
+        faults.get_fault("net_drop")(rate=1.5)
+    with pytest.raises(ValueError, match="kinds"):
+        faults.get_fault("net_duplicate")(kinds="job,gossip")
+    with pytest.raises(ValueError, match="ticks"):
+        faults.get_fault("net_delay")(ticks=0)
+    with pytest.raises(ValueError, match="replica"):
+        faults.get_fault("net_partition")()
+    with pytest.raises(ValueError, match="replica"):
+        faults.get_fault("replica_kill")(replica="")
+    with pytest.raises(ValueError, match="after_steps and/or at_segment"):
+        faults.get_fault("replica_kill")(replica="r0")
+    with pytest.raises(ValueError, match="at_segment"):
+        faults.get_fault("replica_kill")(replica="r0", at_segment=0)
 
 
 def test_spec_round_trip_every_entry():
@@ -52,6 +68,17 @@ def test_spec_round_trip_every_entry():
         "slow_batch": faults.get_fault("slow_batch")(
             seed=5, delay_s=0.01, slow_attempts=3),
         "chaos": faults.get_fault("chaos")(seed=6, delay_s=0.02, poison=2),
+        "net_drop": faults.get_fault("net_drop")(seed=7, rate=0.3),
+        "net_duplicate": faults.get_fault("net_duplicate")(
+            seed=8, rate=0.5, kinds="result"),
+        "net_reorder": faults.get_fault("net_reorder")(seed=9, rate=0.2),
+        "net_delay": faults.get_fault("net_delay")(seed=10, rate=1.0, ticks=3),
+        "net_partition": faults.get_fault("net_partition")(
+            replica="r1", start_tick=2, duration=4),
+        "replica_kill": faults.get_fault("replica_kill")(
+            replica="r0", at_segment=2),
+        "cluster_chaos": faults.get_fault("cluster_chaos")(
+            seed=11, kill_replica="r0", after_steps=3, drop_rate=0.25),
     }
     assert set(built) == set(faults.available_faults())
     for name, model in built.items():
@@ -160,6 +187,92 @@ def test_chaos_schedule_is_reproducible_per_instance():
 
 
 # ---------------------------------------------------------------------------
+# The network-fault family (cluster-transport seam).
+# ---------------------------------------------------------------------------
+
+
+def test_default_transport_hooks_are_no_fault():
+    m = faults.NoFault()
+    assert m.message_fate("job", "k", 0) == (1, 0)
+    assert m.replica_fate("r0", 5) == "ok"
+    assert m.segment_fate("r0", 2) is False
+
+
+def test_message_fate_deterministic_and_resend_is_fresh_draw():
+    m = faults.get_fault("net_drop")(seed=3, rate=0.5)
+    fates = [m.message_fate("job", ("alice", 1), s) for s in range(32)]
+    again = faults.get_fault("net_drop")(seed=3, rate=0.5)
+    assert [again.message_fate("job", ("alice", 1), s)
+            for s in range(32)] == fates
+    # the seq enters the draw: a re-send is a fresh coin flip, so
+    # at-least-once senders converge -- some sends survive
+    assert (0, 0) in fates and (1, 0) in fates
+    # different seed -> different schedule
+    other = faults.get_fault("net_drop")(seed=4, rate=0.5)
+    assert [other.message_fate("job", ("alice", 1), s)
+            for s in range(32)] != fates
+
+
+def test_per_message_faults_respect_kinds_and_rates():
+    dup = faults.get_fault("net_duplicate")(rate=1.0, kinds="result")
+    assert dup.message_fate("result", "k", 0) == (2, 0)
+    assert dup.message_fate("job", "k", 0) == (1, 0)  # kind not selected
+    assert dup.message_fate("heartbeat", "k", 0) == (1, 0)
+    reorder = faults.get_fault("net_reorder")(rate=1.0)
+    assert reorder.message_fate("job", "k", 0) == (1, 1)
+    delay = faults.get_fault("net_delay")(rate=1.0, ticks=4)
+    assert delay.message_fate("job", "k", 0) == (1, 4)
+    none_selected = faults.get_fault("net_drop")(rate=0.0)
+    assert none_selected.message_fate("job", "k", 0) == (1, 0)
+
+
+def test_partition_window_and_kill_schedules():
+    p = faults.get_fault("net_partition")(replica="r1", start_tick=2,
+                                          duration=3)
+    assert [p.replica_fate("r1", t) for t in range(7)] == \
+        ["ok", "ok", "partitioned", "partitioned", "partitioned", "ok", "ok"]
+    assert p.replica_fate("r0", 3) == "ok"  # only the named replica
+    forever = faults.get_fault("net_partition")(replica="r1", start_tick=1)
+    assert forever.replica_fate("r1", 10 ** 6) == "partitioned"
+
+    k = faults.get_fault("replica_kill")(replica="r0", after_steps=4)
+    assert [k.replica_fate("r0", t) for t in (3, 4, 5)] == \
+        ["ok", "killed", "killed"]
+    assert k.segment_fate("r0", 99) is False  # at_segment not set
+    seg = faults.get_fault("replica_kill")(replica="r0", at_segment=2)
+    assert seg.segment_fate("r0", 1) is False
+    assert seg.segment_fate("r0", 2) is True
+    assert seg.segment_fate("r1", 2) is False
+    assert seg.replica_fate("r0", 100) == "ok"  # after_steps not set
+
+
+def test_cluster_chaos_composes_kill_and_drop():
+    m = faults.get_fault("cluster_chaos")(seed=5, kill_replica="r2",
+                                          at_segment=3, drop_rate=0.4)
+    assert m.segment_fate("r2", 3) is True
+    assert m.segment_fate("r0", 3) is False
+    # the drop half matches a same-seed net_drop exactly
+    drop = faults.get_fault("net_drop")(seed=5, rate=0.4)
+    assert [m.message_fate("job", "k", s) for s in range(16)] == \
+        [drop.message_fate("job", "k", s) for s in range(16)]
+    assert faults.fault_from_spec(m.spec()).params() == m.params()
+
+
+def test_replica_killed_is_uncatchable_by_recovery_traps():
+    # The in-process SIGKILL analogue: BaseException, so the serve stack's
+    # `except Exception` recovery paths can never convert a replica death
+    # into a typed job failure.
+    assert issubclass(faults.ReplicaKilled, BaseException)
+    assert not issubclass(faults.ReplicaKilled, Exception)
+    try:
+        raise faults.ReplicaKilled("r0")
+    except Exception:  # noqa: BLE001 - the point of the test
+        pytest.fail("ReplicaKilled must not be catchable as Exception")
+    except faults.ReplicaKilled:
+        pass
+
+
+# ---------------------------------------------------------------------------
 # Recovery primitives driven by the faults.
 # ---------------------------------------------------------------------------
 
@@ -185,7 +298,13 @@ def test_recovery_policy_validation():
 
 
 def test_circuit_breaker_lifecycle():
-    br = recovery.CircuitBreaker(threshold=2, cooldown_s=1e9)
+    # Realistic cooldown, no real sleeps: the breaker reads an injected
+    # ManualClock (before PR 10 this test needed degenerate 1e9/0.0
+    # cooldowns to sidestep wall-clock).
+    from repro.serve.clock import ManualClock
+
+    clock = ManualClock()
+    br = recovery.CircuitBreaker(threshold=2, cooldown_s=30.0, clock=clock)
     assert br.allow("k")
     br.record_failure("k")
     assert br.allow("k")  # one failure: still closed
@@ -196,15 +315,37 @@ def test_circuit_breaker_lifecycle():
     snap = br.snapshot()
     assert snap["open"] == [repr("k")]
     assert snap["half_open"] == []
+    states = br.states()
+    assert states[repr("k")]["state"] == "open"
+    assert states[repr("k")]["consecutive_failures"] == 2
+    assert states[repr("k")]["open_for_s"] == 0.0
 
-    fast = recovery.CircuitBreaker(threshold=1, cooldown_s=0.0)
-    fast.record_failure("k")
-    assert fast.allow("k")  # cooldown elapsed: half-open probe admitted
-    assert fast.state("k") == "half_open"
-    assert not fast.allow("k")  # exactly ONE probe
-    fast.record_success("k")
-    assert fast.state("k") == "closed"
-    assert fast.allow("k")
+    clock.advance(29.0)
+    assert not br.allow("k")  # still cooling down
+    clock.advance(1.0)
+    assert br.allow("k")  # cooldown elapsed: half-open probe admitted
+    assert br.state("k") == "half_open"
+    assert not br.allow("k")  # exactly ONE probe
+    br.record_success("k")
+    assert br.state("k") == "closed"
+    assert br.allow("k")
+    assert br.states() == {}  # success clears the key entirely
+
+
+def test_circuit_breaker_reopens_from_half_open_without_sleeping():
+    from repro.serve.clock import ManualClock
+
+    clock = ManualClock()
+    br = recovery.CircuitBreaker(threshold=1, cooldown_s=10.0, clock=clock)
+    br.record_failure("k")
+    clock.advance(10.0)
+    assert br.allow("k")  # the probe
+    br.record_failure("k")  # probe failed: snaps back open immediately
+    assert br.state("k") == "open"
+    assert not br.allow("k")
+    assert br.states()[repr("k")]["open_for_s"] == 0.0
+    clock.advance(5.0)
+    assert br.states()[repr("k")]["open_for_s"] == 5.0
 
 
 def test_run_with_deadline():
